@@ -1,0 +1,113 @@
+"""Beyond-the-figures ablations grounded in the paper's discussion sections.
+
+* estimator ablation (paper §4.1): Zen vs Lwb vs Upb quality at equal k —
+  quantifies how much of Zen's win comes from the zenith geometry;
+* dimension profile (paper §5 quality-profile protocol): Kruskal stress for
+  zen/pca as k sweeps down to 2 — the "2-d beats 80-d" effect;
+* reference-selection (paper §7.2): random refs vs mutually-close refs vs
+  far-apart refs — the paper reports close references improve the small-
+  distance weakness; measured here on kNN recall and Kruskal stress.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    NSimplexTransform,
+    PCATransform,
+    metrics as M,
+    quality as Q,
+)
+from repro.core.zen import estimate_triple
+from repro.data import synthetic as syn
+
+
+def _pairs(D):
+    return D[np.triu_indices(D.shape[0], 1)]
+
+
+def estimator_ablation(n: int = 250, m: int = 200, k: int = 16,
+                       seed: int = 0) -> Dict[str, float]:
+    key = jax.random.PRNGKey(seed)
+    X = syn.manifold_space(key, n + k, m, m // 8)
+    refs, X = X[:k], X[k:]
+    tr = NSimplexTransform(k=k).fit(refs)
+    Xp = tr.transform(X)
+    D = np.asarray(M.euclidean_pdist(X, X))
+    delta = _pairs(D)
+    lwb, zen, upb = (np.asarray(a) for a in estimate_triple(Xp, Xp))
+    return {
+        f"{name}_kruskal": Q.kruskal_stress(delta, _pairs(z))
+        for name, z in (("lwb", lwb), ("zen", zen), ("upb", upb))
+    }
+
+
+def dimension_profile(ks=(2, 4, 8, 16, 32, 64), n: int = 220, m: int = 100,
+                      seed: int = 0) -> Dict[str, float]:
+    """zen stress at each k + pca stress at max(ks) — the headline effect is
+    zen@2 <= pca@64."""
+    key = jax.random.PRNGKey(seed)
+    X = syn.uniform_space(key, n, m)
+    D = np.asarray(M.euclidean_pdist(X, X))
+    delta = _pairs(D)
+    out = {}
+    for k in ks:
+        refs = syn.uniform_space(jax.random.fold_in(key, k), k, m)
+        tr = NSimplexTransform(k=k).fit(refs)
+        Xp = tr.transform(X)
+        _, zen, _ = estimate_triple(Xp, Xp)
+        out[f"zen_k{k}"] = Q.kruskal_stress(delta, _pairs(np.asarray(zen)))
+    pca = PCATransform(k=max(ks)).fit(syn.uniform_space(
+        jax.random.fold_in(key, 999), 1000, m))
+    Xp = pca.transform(X)
+    out[f"pca_k{max(ks)}"] = Q.kruskal_stress(
+        delta, _pairs(np.asarray(M.euclidean_pdist(Xp, Xp))))
+    return out
+
+
+def _fit_with_refs(refs, X):
+    tr = NSimplexTransform(k=refs.shape[0]).fit(refs)
+    Xp = tr.transform(X)
+    _, zen, _ = estimate_triple(Xp, Xp)
+    return np.asarray(zen)
+
+
+def reference_selection(n: int = 200, m: int = 100, k: int = 10,
+                        seed: int = 0) -> Dict[str, float]:
+    """random vs close vs spread reference sets (paper §7.2)."""
+    key = jax.random.PRNGKey(seed)
+    pool = syn.uniform_space(key, 2000, m)
+    X = syn.uniform_space(jax.random.fold_in(key, 1), n, m)
+    D_true = np.asarray(M.euclidean_pdist(X, X))
+    delta = _pairs(D_true)
+    true_nn = np.argsort(D_true + np.eye(n) * 1e9, axis=1)[:, :10]
+
+    rng = np.random.default_rng(seed)
+    variants = {}
+    variants["random"] = pool[rng.choice(2000, k, replace=False)]
+    # mutually close: k nearest neighbours of a random anchor
+    anchor = pool[int(rng.integers(0, 2000))][None]
+    d_anchor = np.asarray(M.euclidean_pdist(jnp.asarray(anchor), pool))[0]
+    variants["close"] = pool[np.argsort(d_anchor)[:k]]
+    # spread: greedy max-min farthest-point sample
+    chosen = [int(rng.integers(0, 2000))]
+    dmat = np.asarray(M.euclidean_pdist(pool, pool))
+    for _ in range(k - 1):
+        dmin = dmat[:, chosen].min(axis=1)
+        chosen.append(int(dmin.argmax()))
+    variants["spread"] = pool[np.array(chosen)]
+
+    out = {}
+    for name, refs in variants.items():
+        zen = _fit_with_refs(jnp.asarray(refs), X)
+        out[f"{name}_kruskal"] = Q.kruskal_stress(delta, _pairs(zen))
+        approx_nn = np.argsort(zen + np.eye(n) * 1e9, axis=1)[:, :10]
+        out[f"{name}_nn_overlap"] = float(np.mean([
+            len(set(true_nn[i]) & set(approx_nn[i])) / 10 for i in range(n)
+        ]))
+    return out

@@ -1,0 +1,176 @@
+"""Paper-experiment replications (Figures 5-20): quality of nSimplex Zen vs
+PCA / RP / MDS / LMDS over every space class in Table 3, at CPU-friendly
+scale (same protocol, smaller n; the paper's qualitative ordering is the
+claim being validated — see EXPERIMENTS.md §Paper-validation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    LMDSTransform,
+    MDSTransform,
+    NSimplexTransform,
+    PCATransform,
+    RandomProjection,
+    metrics as M,
+    quality as Q,
+    select_references,
+    zen_pdist,
+)
+from repro.data import synthetic as syn
+
+
+def _pairs(D: np.ndarray) -> np.ndarray:
+    return D[np.triu_indices(D.shape[0], 1)]
+
+
+def euclidean_comparison(
+    space: str, n_witness: int, n_eval: int, m: int, k: int, seed: int = 0
+) -> Dict[str, Dict[str, float]]:
+    """One (space, k) cell of the paper's Euclidean comparisons.
+
+    space: uniform | gaussian | manifold | relu  (paper §5.3-§5.5).
+    Returns {transform: {kruskal, sammon, spearman, qloss}}.
+    """
+    key = jax.random.PRNGKey(seed)
+    maker = {
+        "uniform": lambda kk, n: syn.uniform_space(kk, n, m),
+        "gaussian": lambda kk, n: syn.gaussian_space(kk, n, m),
+        "manifold": lambda kk, n: syn.manifold_space(kk, n, m, max(m // 8, 4)),
+        "relu": lambda kk, n: syn.relu_feature_space(kk, n, m, max(m // 8, 4)),
+    }[space]
+    witness = maker(key, n_witness)
+    X = maker(jax.random.fold_in(key, 1), n_eval)
+    metric = "cosine" if space == "relu" else "euclidean"
+    if metric == "cosine":
+        witness = M.l2_normalize(witness)
+        X = M.l2_normalize(X)
+
+    D_true = np.asarray(M.pairwise(metric, X, X))
+    delta = _pairs(D_true)
+    out: Dict[str, Dict[str, float]] = {}
+
+    def add(name, zeta):
+        out[name] = {
+            "kruskal": Q.kruskal_stress(delta, zeta),
+            "sammon": Q.sammon_stress(delta, zeta),
+            "spearman": Q.spearman_rho(delta, zeta),
+            "qloss": Q.quadratic_loss(delta, zeta) / delta.size,
+        }
+
+    # nSimplex Zen (k references drawn from the witness set)
+    tr = select_references(witness, k, jax.random.fold_in(key, 2), metric=metric)
+    Xz = tr.transform(X)
+    add("zen", _pairs(np.asarray(zen_pdist(Xz, Xz))))
+
+    pca = PCATransform(k=k).fit(witness)
+    Xp = pca.transform(X)
+    add("pca", _pairs(np.asarray(M.euclidean_pdist(Xp, Xp))))
+
+    rp = RandomProjection(k=k).fit(int(X.shape[1]), key=jax.random.fold_in(key, 3))
+    Xr = rp.transform(X)
+    add("rp", _pairs(np.asarray(M.euclidean_pdist(Xr, Xr))))
+
+    mds = MDSTransform(k=k).fit(witness[: min(400, n_witness)])
+    Xm = mds.transform(X)
+    add("mds", _pairs(np.asarray(M.euclidean_pdist(Xm, Xm))))
+    return out
+
+
+def jsd_comparison(
+    n_eval: int, m: int, k: int, seed: int = 0, real_manifold: bool = False
+) -> Dict[str, Dict[str, float]]:
+    """Coordinate-free JSD space: nSimplex Zen vs LMDS (paper §5.6)."""
+    key = jax.random.PRNGKey(seed)
+    X = syn.probability_space(key, n_eval + k, m,
+                              intrinsic=m // 6 if real_manifold else None)
+    R, X = X[:k], X[k:]
+    D_refs = np.array(M.jsd_pdist(R, R, assume_normalized=True))
+    np.fill_diagonal(D_refs, 0.0)
+    D_xr = M.jsd_pdist(X, R, assume_normalized=True)
+    D_true = np.asarray(M.jsd_pdist(X, X, assume_normalized=True))
+    delta = _pairs(D_true)
+    out: Dict[str, Dict[str, float]] = {}
+
+    tr = NSimplexTransform.from_distances(D_refs)
+    Xz = tr.transform_from_distances(D_xr)
+    zeta = _pairs(np.asarray(zen_pdist(Xz, Xz)))
+    out["zen"] = {
+        "kruskal": Q.kruskal_stress(delta, zeta),
+        "sammon": Q.sammon_stress(delta, zeta),
+        "spearman": Q.spearman_rho(delta, zeta),
+    }
+
+    lmds = LMDSTransform(k=k).fit_from_distances(jnp.asarray(D_refs))
+    Xl = lmds.transform_from_distances(D_xr)
+    zeta = _pairs(np.asarray(M.euclidean_pdist(Xl, Xl)))
+    out["lmds"] = {
+        "kruskal": Q.kruskal_stress(delta, zeta),
+        "sammon": Q.sammon_stress(delta, zeta),
+        "spearman": Q.spearman_rho(delta, zeta),
+    }
+    return out
+
+
+def recall_comparison(
+    n_corpus: int, n_queries: int, m: int, k: int, n_nn: int = 100,
+    seed: int = 0, space: str = "manifold",
+) -> Dict[str, float]:
+    """kNN DCG recall (paper Appendix E.3), zen vs pca vs rp."""
+    key = jax.random.PRNGKey(seed)
+    maker = {
+        "manifold": lambda kk, n: syn.manifold_space(kk, n, m, max(m // 8, 4)),
+        "uniform": lambda kk, n: syn.uniform_space(kk, n, m),
+    }[space]
+    corpus = maker(key, n_corpus)
+    queries = maker(jax.random.fold_in(key, 1), n_queries)
+    D_true = np.asarray(M.euclidean_pdist(queries, corpus))
+    true_ids = np.argsort(D_true, axis=1)[:, :n_nn]
+
+    out = {}
+    tr = select_references(corpus, k, jax.random.fold_in(key, 2))
+    cz = tr.transform(corpus)
+    qz = tr.transform(queries)
+    dz = np.asarray(zen_pdist(qz, cz))
+    out["zen"] = Q.batch_dcg_recall(true_ids, np.argsort(dz, 1)[:, :n_nn])
+
+    pca = PCATransform(k=k).fit(corpus[:1000])
+    dp = np.asarray(M.euclidean_pdist(pca.transform(queries), pca.transform(corpus)))
+    out["pca"] = Q.batch_dcg_recall(true_ids, np.argsort(dp, 1)[:, :n_nn])
+
+    rp = RandomProjection(k=k).fit(m, key=jax.random.fold_in(key, 3))
+    dr = np.asarray(M.euclidean_pdist(rp.transform(queries), rp.transform(corpus)))
+    out["rp"] = Q.batch_dcg_recall(true_ids, np.argsort(dr, 1)[:, :n_nn])
+    return out
+
+
+def bounds_validation(n: int, m: int, k: int, seed: int = 0) -> Dict[str, float]:
+    """Lemma C.2 at benchmark scale: violation counts must be zero."""
+    key = jax.random.PRNGKey(seed)
+    X = syn.gaussian_space(key, n, m)
+    tr = select_references(X, k, jax.random.fold_in(key, 1))
+    Xp = tr.transform(X)
+    from repro.core.zen import estimate_triple
+
+    lwb, zen, upb = (np.asarray(a) for a in estimate_triple(Xp, Xp))
+    D = np.asarray(M.euclidean_pdist(X, X))
+    # the bounds hold mathematically; in f32 the nx+ny-2p cancellation leaves
+    # ~1e-3-of-scale noise at near-zero distances (float64 property tests in
+    # tests/test_core_simplex.py verify the exact inequality)
+    tol = 1e-3 * D.max()
+    mask = ~np.eye(n, dtype=bool)
+    return {
+        "lwb_violations": int((lwb > D + tol).sum()),
+        "upb_violations": int((D > upb + tol).sum()),
+        "order_violations": int(((lwb > zen + tol) | (zen > upb + tol)).sum()),
+        "max_violation_over_scale": float(
+            max((lwb - D).max(), (D - upb).max(), 0.0) / D.max()),
+        "zen_rel_err": float(np.mean(np.abs(zen - D)[mask] / D[mask])),
+        "lwb_rel_err": float(np.mean(np.abs(lwb - D)[mask] / D[mask])),
+    }

@@ -1,0 +1,89 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.report [--write]
+  --write updates the AUTOGEN-marked sections of EXPERIMENTS.md in place.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from benchmarks.roofline import fmt_table, load_artifacts, roofline_row
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def dryrun_table(rows: list[dict], arts: list[dict], mesh: str) -> str:
+    hdr = ("| arch | shape | status | compile_s | HLO GFLOP/dev "
+           "| peak GiB/dev | collective MiB/dev | collective ops |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    by_key = {(a["arch"], a["shape"], a["mesh"]): a for a in arts}
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        a = by_key[(r["arch"], r["shape"], mesh)]
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP (mandated) "
+                         f"| — | — | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {a['compile_s']:.1f} "
+            f"| {r['hlo_flops_dev']/1e9:.1f} | {r['peak_gib']:.2f} "
+            f"| {a['collectives']['total_bytes']/2**20:.1f} "
+            f"| {a['collectives']['total_count']} |")
+    return "\n".join(lines)
+
+
+def collective_mix(arts: list[dict], mesh: str) -> str:
+    lines = ["| arch | shape | all-reduce | all-gather | reduce-scatter "
+             "| all-to-all | collective-permute |", "|" + "---|" * 7]
+    for a in arts:
+        if a.get("mesh") != mesh or a.get("status") != "ok":
+            continue
+        c = a["collectives"]
+        f = lambda k: f"{c[k]['bytes']/2**20:.1f}MiB/{c[k]['count']}"
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {f('all-reduce')} "
+            f"| {f('all-gather')} | {f('reduce-scatter')} | {f('all-to-all')} "
+            f"| {f('collective-permute')} |")
+    return "\n".join(lines)
+
+
+def render() -> dict:
+    arts = load_artifacts()
+    rows = [roofline_row(a) for a in arts]
+    return {
+        "DRYRUN_POD": dryrun_table(rows, arts, "pod"),
+        "DRYRUN_MULTIPOD": dryrun_table(rows, arts, "multipod"),
+        "ROOFLINE_POD": fmt_table(rows, "pod"),
+        "COLLECTIVES_POD": collective_mix(arts, "pod"),
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--write", action="store_true")
+    args = p.parse_args()
+    sections = render()
+    if not args.write:
+        for name, table in sections.items():
+            print(f"\n## {name}\n{table}")
+        return
+    path = os.path.join(REPO, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    for name, table in sections.items():
+        start = f"<!-- AUTOGEN:{name} -->"
+        end = f"<!-- /AUTOGEN:{name} -->"
+        if start in text:
+            pre, rest = text.split(start, 1)
+            _, post = rest.split(end, 1)
+            text = pre + start + "\n" + table + "\n" + end + post
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"updated {path}")
+
+
+if __name__ == "__main__":
+    main()

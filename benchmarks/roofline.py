@@ -1,0 +1,120 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e, per chip):
+  peak bf16 compute : 197 TFLOP/s
+  HBM bandwidth     : 819 GB/s
+  ICI link bandwidth: ~50 GB/s/link (we budget ONE link per collective step —
+                      conservative; a 3D-torus would overlap up to 3)
+
+Terms (per device, per step; cost_analysis is already per-device for the
+SPMD-partitioned module):
+  compute_s    = flops / PEAK_FLOPS
+  memory_s     = bytes_accessed / HBM_BW
+  collective_s = collective_bytes / ICI_BW
+
+The dominant term is the bottleneck; roofline fraction for the step =
+compute_s / max(all terms) (how close the step is to being compute-bound at
+peak). MODEL_FLOPS/HLO_FLOPS flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+_FINAL = os.path.join(os.path.dirname(__file__), "artifacts_final")
+_BASE = os.path.join(os.path.dirname(__file__), "artifacts")
+# prefer the optimized-defaults sweep; fall back to the baseline sweep
+ARTIFACT_DIR = _FINAL if os.path.isdir(_FINAL) and os.listdir(_FINAL) else _BASE
+
+
+def load_artifacts(artifact_dir: str = ARTIFACT_DIR) -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def roofline_row(rec: dict) -> dict:
+    """Derive the three terms for one artifact."""
+    if rec.get("status") != "ok":
+        return {**{k: rec.get(k) for k in ("arch", "shape", "mesh")},
+                "status": rec.get("status"), "skip": rec.get("skip_reason", "")}
+    n_dev = rec["n_devices"]
+    flops_dev = rec["cost"].get("flops", 0.0)
+    bytes_dev = rec["cost"].get("bytes accessed", 0.0)
+    coll_dev = rec["collectives"]["total_bytes"]
+    corr = rec.get("corrected")
+    if corr:  # scan-body trip-count correction (see launch/dryrun.py)
+        flops_dev = corr["flops"]
+        bytes_dev = corr["bytes_accessed"]
+        coll_dev = corr["collective_bytes"]
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    dom = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1],
+    )
+    model_flops = rec.get("model_flops", {}).get("model_flops_global", 0.0)
+    mf_per_dev = model_flops / n_dev if n_dev else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "status": "ok",
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dom[0],
+        "step_s_bound": dom[1],
+        "roofline_fraction": compute_s / dom[1] if dom[1] > 0 else 0.0,
+        "useful_flops_ratio": (mf_per_dev / flops_dev) if flops_dev else 0.0,
+        "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+        "coll_ops": rec["collectives"]["total_count"],
+        "hlo_flops_dev": flops_dev,
+        "model_flops_global": model_flops,
+    }
+
+
+def fmt_table(rows: list[dict], mesh: str = "pod") -> str:
+    hdr = (f"| arch | shape | compute_s | memory_s | collective_s | dominant "
+           f"| roofline | useful_flops | peak GiB |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} "
+            f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+            f"| {r['dominant']} | {r['roofline_fraction']:.2f} "
+            f"| {r['useful_flops_ratio']:.2f} | {r['peak_gib']:.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--artifact-dir", default=ARTIFACT_DIR)
+    p.add_argument("--mesh", default="pod")
+    p.add_argument("--json", action="store_true")
+    args = p.parse_args()
+    rows = [roofline_row(r) for r in load_artifacts(args.artifact_dir)]
+    if args.json:
+        print(json.dumps(rows, indent=1))
+    else:
+        print(fmt_table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Coordinate-free Hilbert spaces: reduce a Jensen-Shannon metric space with
+nSimplex Zen vs Landmark MDS (paper §5.6) — distances only, no coordinates.
+
+The punchline (paper §5.6): the reduction not only shrinks memory, it
+converts an expensive log-heavy JSD computation into a cheap Euclidean-form
+Zen computation.
+
+Run:  PYTHONPATH=src python examples/js_space_reduction.py
+"""
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import LMDSTransform, NSimplexTransform, metrics as M, quality
+from repro.core.zen import zen_pdist
+from repro.data import synthetic as syn
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    n, dim, k = 1500, 100, 20
+    X = syn.probability_space(key, n, dim)  # l1-normalised prob vectors
+
+    # reference / landmark sets (random, per the paper)
+    ridx = np.random.default_rng(0).choice(n, k, replace=False)
+    R = X[ridx]
+
+    # --- nSimplex Zen: fit from the (k, k) JSD distance matrix -------------
+    D_refs = np.array(M.jsd_pdist(R, R, assume_normalized=True))
+    np.fill_diagonal(D_refs, 0.0)
+    tr = NSimplexTransform.from_distances(D_refs)
+    Xp = tr.transform_from_distances(M.jsd_pdist(X, R, assume_normalized=True))
+
+    # --- LMDS on the same landmarks -----------------------------------------
+    lmds = LMDSTransform(k=k).fit_from_distances(D_refs)
+    Xl = lmds.transform_from_distances(M.jsd_pdist(X, R, assume_normalized=True))
+
+    # --- quality over sampled pairs -----------------------------------------
+    sub = X[:400]
+    D_true = np.asarray(M.jsd_pdist(sub, sub, assume_normalized=True))
+    mask = np.triu(np.ones((400, 400), bool), 1)
+    delta = D_true[mask]
+    zen = np.asarray(zen_pdist(Xp[:400], Xp[:400]))[mask]
+    lm = np.asarray(M.euclidean_pdist(Xl[:400], Xl[:400]))[mask]
+
+    print(f"JSD space {dim}d -> {k}d")
+    for name, zeta in [("nSimplex-Zen", zen), ("LMDS", lm)]:
+        print(f"{name:>14}: kruskal={quality.kruskal_stress(delta, zeta):.4f} "
+              f"sammon={quality.sammon_stress(delta, zeta):.4f} "
+              f"rho={quality.spearman_rho(delta, zeta):.4f}")
+
+    # --- distance-computation speedup ----------------------------------------
+    t0 = time.time()
+    _ = np.asarray(M.jsd_pdist(sub, sub, assume_normalized=True))
+    t_jsd = time.time() - t0
+    Xp4 = Xp[:400]
+    t0 = time.time()
+    _ = np.asarray(zen_pdist(Xp4, Xp4))
+    t_zen = time.time() - t0
+    print(f"\npairwise time: jsd({dim}d)={t_jsd*1e3:.1f}ms  "
+          f"zen({k}d)={t_zen*1e3:.1f}ms  -> {t_jsd/max(t_zen,1e-9):.0f}x faster")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Train a reduced LM config with the full production substrate on CPU:
+checkpoint/restart (kill it mid-run and re-invoke with --resume), straggler
+monitoring, deterministic data pipeline — then reduce its token embeddings
+with nSimplex Zen (the DESIGN.md §4 integration point).
+
+Run:  PYTHONPATH=src python examples/train_lm.py
+      PYTHONPATH=src python examples/train_lm.py --resume   # restart path
+"""
+import argparse
+import os
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.checkpoint import CheckpointManager
+from repro.core import quality, select_references, zen_pdist
+from repro.core.metrics import euclidean_pdist
+from repro.data import synthetic as syn
+from repro.data.pipeline import PrefetchPipeline
+from repro.distributed.fault import StepMonitor
+from repro.models import transformer as tfm
+from repro.optim import AdamW
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=40)
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--ckpt-dir", default=os.path.join(tempfile.gettempdir(),
+                                                      "repro_train_lm"))
+    args = p.parse_args()
+
+    cfg = C.get_arch("qwen1.5-0.5b").make_reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamW(learning_rate=1e-3)
+    opt_state = opt.init(params)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+
+    start = 0
+    if args.resume and ckpt.latest_step() is not None:
+        start, (params, opt_state) = ckpt.restore(like=(params, opt_state))
+        print(f"resumed at step {start}")
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: tfm.loss_fn(cfg, p, batch), has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return jax.tree.map(lambda a, b: a + b, params, updates), opt_state, loss
+
+    monitor = StepMonitor()
+    pipe = PrefetchPipeline(
+        lambda s: syn.lm_batch(0, s, 8, 64, cfg.vocab_size), start_step=start)
+    losses = []
+    try:
+        for _ in range(args.steps - start):
+            step, batch = next(pipe)
+            t0 = time.time()
+            params, opt_state, loss = step_fn(params, opt_state, batch)
+            monitor.record(step, time.time() - t0)
+            losses.append(float(loss))
+            if step % 10 == 0:
+                print(f"step {step}: loss={losses[-1]:.3f}")
+            if (step + 1) % 20 == 0:
+                ckpt.save_async(step + 1, (params, opt_state))
+    finally:
+        pipe.close()
+        ckpt.wait()
+    assert losses[-1] < losses[0], "loss must decrease"
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+
+    # --- nSimplex-Zen over the learned embedding space ----------------------
+    emb = params["embed"][:2000].astype(jnp.float32)
+    tr = select_references(emb, 16, jax.random.PRNGKey(7))
+    red = tr.transform(emb)
+    d_true = np.asarray(euclidean_pdist(emb[:300], emb[:300]))
+    d_zen = np.asarray(zen_pdist(red[:300], red[:300]))
+    mask = np.triu(np.ones((300, 300), bool), 1)
+    print(f"embedding space {emb.shape[1]}d -> 16d: "
+          f"kruskal={quality.kruskal_stress(d_true[mask], d_zen[mask]):.4f} "
+          f"rho={quality.spearman_rho(d_true[mask], d_zen[mask]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Core nSimplex Zen library: the paper's contribution as composable JAX modules."""
+from .metrics import (
+    cosine_pdist,
+    euclidean_pdist,
+    get_metric,
+    jsd_pdist,
+    l1_normalize,
+    l2_normalize,
+    pairwise,
+    qform_pdist,
+    self_pairwise,
+    sqeuclidean_pdist,
+    triangular_pdist,
+)
+from .projection import NSimplexTransform, fit_transform, select_references
+from .simplex import (
+    BaseSimplex,
+    apex_project,
+    build_base_simplex,
+    gram_from_distances,
+    simplex_is_degenerate,
+)
+from .zen import estimate_pdist, estimate_triple, knn_search, lwb_pdist, upb_pdist, zen_pdist
+from .baselines import LMDSTransform, MDSTransform, PCATransform, RandomProjection
+from . import quality
+
+__all__ = [
+    "NSimplexTransform",
+    "BaseSimplex",
+    "apex_project",
+    "build_base_simplex",
+    "gram_from_distances",
+    "simplex_is_degenerate",
+    "select_references",
+    "fit_transform",
+    "estimate_pdist",
+    "estimate_triple",
+    "knn_search",
+    "zen_pdist",
+    "lwb_pdist",
+    "upb_pdist",
+    "PCATransform",
+    "RandomProjection",
+    "MDSTransform",
+    "LMDSTransform",
+    "quality",
+    "get_metric",
+    "pairwise",
+    "self_pairwise",
+    "euclidean_pdist",
+    "sqeuclidean_pdist",
+    "cosine_pdist",
+    "jsd_pdist",
+    "triangular_pdist",
+    "qform_pdist",
+    "l1_normalize",
+    "l2_normalize",
+]

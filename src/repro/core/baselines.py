@@ -1,0 +1,172 @@
+"""Baseline DR transforms the paper compares against (Section 3), in JAX.
+
+* PCA  — witness-set SVD, top-k principal components (paper §3.2).
+* RP   — Achlioptas sparse random projection, Eq. (2) (paper §3.1).
+* MDS  — classical (Torgerson) MDS on a witness set with the paper's
+         out-of-sample extension: a least-squares linear map fitted from the
+         witness coordinates to the MDS embedding (§3.3 'Procrustes +
+         pseudo-inverse').
+* LMDS — Landmark MDS (de Silva & Tenenbaum), distance-only triangulation;
+         applies to coordinate-free Hilbert spaces (paper §3.4, §5.6).
+
+Each transform follows the same fit/transform protocol as NSimplexTransform so
+quality harnesses and benchmarks treat them uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PCATransform:
+    k: int
+    mean: Optional[Array] = None
+    components: Optional[Array] = None  # (m, k)
+    explained_variance: Optional[Array] = None  # (min(l, m),) all eigenvalues
+
+    def tree_flatten(self):
+        return (self.mean, self.components, self.explained_variance), (self.k,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], *children)
+
+    def fit(self, witness: Array) -> "PCATransform":
+        W = jnp.asarray(witness, jnp.float32)
+        mean = jnp.mean(W, axis=0)
+        Wc = W - mean
+        # economy SVD: components = right singular vectors
+        _, s, vt = jnp.linalg.svd(Wc, full_matrices=False)
+        var = (s**2) / jnp.maximum(W.shape[0] - 1, 1)
+        return dataclasses.replace(
+            self, mean=mean, components=vt[: self.k].T, explained_variance=var
+        )
+
+    def transform(self, X: Array) -> Array:
+        return (jnp.asarray(X, jnp.float32) - self.mean) @ self.components
+
+    def dims_for_variance(self, frac: float = 0.8) -> int:
+        """Paper Eq. (3): #components explaining ``frac`` of total variance."""
+        ev = self.explained_variance
+        c = jnp.cumsum(ev) / jnp.sum(ev)
+        return int(jnp.searchsorted(c, frac) + 1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RandomProjection:
+    """Achlioptas database-friendly RP (paper Eq. 2), scaled by 1/sqrt(k)."""
+
+    k: int
+    matrix: Optional[Array] = None  # (m, k)
+
+    def tree_flatten(self):
+        return (self.matrix,), (self.k,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], *children)
+
+    def fit(self, m_or_witness, *, key: jax.Array) -> "RandomProjection":
+        m = m_or_witness if isinstance(m_or_witness, int) else m_or_witness.shape[-1]
+        u = jax.random.uniform(key, (m, self.k))
+        vals = jnp.sqrt(3.0) * (
+            jnp.where(u < 1.0 / 6.0, 1.0, 0.0) - jnp.where(u >= 5.0 / 6.0, 1.0, 0.0)
+        )
+        return dataclasses.replace(self, matrix=vals / jnp.sqrt(float(self.k)))
+
+    def transform(self, X: Array) -> Array:
+        return jnp.asarray(X, jnp.float32) @ self.matrix
+
+
+def classical_mds_embed(D: Array, k: int) -> tuple[Array, Array, Array]:
+    """Torgerson MDS: embed an (l, l) distance matrix into R^k.
+
+    Returns (coords (l,k), eigenvalues (k,), mean_sq_dist_columns (l,)).
+    """
+    D = jnp.asarray(D, jnp.float32)
+    l = D.shape[0]
+    D2 = D**2
+    J = jnp.eye(l) - jnp.full((l, l), 1.0 / l)
+    B = -0.5 * J @ D2 @ J
+    evals, evecs = jnp.linalg.eigh(B)  # ascending
+    evals, evecs = evals[::-1][:k], evecs[:, ::-1][:, :k]
+    pos = jnp.maximum(evals, 0.0)
+    coords = evecs * jnp.sqrt(pos)[None, :]
+    return coords, evals, jnp.mean(D2, axis=1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MDSTransform:
+    """Classical MDS + linear out-of-sample map (Euclidean domains, §3.3)."""
+
+    k: int
+    mean: Optional[Array] = None
+    linear: Optional[Array] = None  # (m, k) least-squares map
+    stress_coords: Optional[Array] = None  # witness embedding (diagnostics)
+
+    def tree_flatten(self):
+        return (self.mean, self.linear, self.stress_coords), (self.k,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], *children)
+
+    def fit(self, witness: Array, D: Optional[Array] = None) -> "MDSTransform":
+        W = jnp.asarray(witness, jnp.float32)
+        if D is None:
+            n2 = jnp.sum(W**2, 1)
+            D = jnp.sqrt(jnp.maximum(n2[:, None] + n2[None, :] - 2 * W @ W.T, 0.0))
+        coords, _, _ = classical_mds_embed(D, self.k)
+        mean = jnp.mean(W, axis=0)
+        Wc = W - mean
+        # pseudo-inverse least-squares map R^m -> R^k (paper's Procrustes+pinv)
+        linear = jnp.linalg.pinv(Wc) @ coords
+        return dataclasses.replace(self, mean=mean, linear=linear, stress_coords=coords)
+
+    def transform(self, X: Array) -> Array:
+        return (jnp.asarray(X, jnp.float32) - self.mean) @ self.linear
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LMDSTransform:
+    """Landmark MDS (distance-only; works on coordinate-free spaces).
+
+    fit: classical MDS over the (l, l) landmark distance matrix.
+    transform: for object u with squared distances delta (l,) to landmarks,
+      x(u) = -0.5 * pinv_coords @ (delta - mean_delta)
+    where pinv_coords_j = evec_j / sqrt(eval_j)  (de Silva & Tenenbaum 2004).
+    """
+
+    k: int
+    pinv_coords: Optional[Array] = None  # (k, l)
+    mean_sq: Optional[Array] = None  # (l,)
+    landmarks: Optional[Array] = None  # optional coordinates for convenience
+
+    def tree_flatten(self):
+        return (self.pinv_coords, self.mean_sq, self.landmarks), (self.k,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], *children)
+
+    def fit_from_distances(self, D: Array) -> "LMDSTransform":
+        D = jnp.asarray(D, jnp.float32)
+        coords, evals, mean_sq = classical_mds_embed(D, self.k)
+        safe = jnp.maximum(evals, 1e-12)
+        pinv = (coords / safe[None, :]).T  # (k, l): evec_j / sqrt(eval_j)
+        return dataclasses.replace(self, pinv_coords=pinv, mean_sq=mean_sq)
+
+    def transform_from_distances(self, dists: Array) -> Array:
+        """dists: (N, l) object-to-landmark distances (not squared)."""
+        d2 = jnp.asarray(dists, jnp.float32) ** 2
+        return -0.5 * (d2 - self.mean_sq[None, :]) @ self.pinv_coords.T

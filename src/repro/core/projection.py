@@ -1,0 +1,150 @@
+"""NSimplexTransform — the paper's DR technique as a composable library object.
+
+Usage (coordinate spaces):
+
+    tr = NSimplexTransform(metric="euclidean", k=32)
+    tr = tr.fit(refs)              # refs: (k, m) reference objects
+    Xp = tr.transform(X)           # (N, k) apex coordinates
+    D  = zen.estimate_pdist(Xp, Xp, "zen")
+
+Usage (coordinate-free Hilbert spaces, e.g. Jensen-Shannon — paper §5.6):
+
+    tr = NSimplexTransform.from_distances(D_refs)      # (k, k) ref distances
+    Xp = tr.transform_from_distances(D_x_refs)         # (N, k) dists to refs
+
+The fitted state is a pytree (works under jit / pjit / checkpointing); the
+reference set is tiny (k <= a few hundred), so it is replicated across the mesh
+while the data batch dimension is sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import metrics as metrics_lib
+from . import simplex as simplex_lib
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class NSimplexTransform:
+    """nSimplex projection sigma_R : (U, d) -> R^k (paper §4)."""
+
+    k: int
+    metric: str = "euclidean"
+    jitter: float = 0.0
+    # fitted state
+    refs: Optional[Array] = None          # (k, m) or None in distance-only mode
+    base: Optional[simplex_lib.BaseSimplex] = None
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.refs, self.base), (self.k, self.metric, self.jitter)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        k, metric, jitter = aux
+        refs, base = children
+        return cls(k=k, metric=metric, jitter=jitter, refs=refs, base=base)
+
+    # -- fitting -------------------------------------------------------------
+    def fit(self, refs: Array) -> "NSimplexTransform":
+        """Fit from (k, m) reference objects in a coordinate space."""
+        refs = jnp.asarray(refs)
+        if refs.shape[0] != self.k:
+            raise ValueError(f"expected {self.k} references, got {refs.shape[0]}")
+        m = metrics_lib.get_metric(self.metric)
+        if m.normalize is not None:
+            refs = m.normalize(refs)
+        D = m.pdist(refs, refs)
+        # exact zero diagonal (numeric noise breaks the Gram construction)
+        D = D * (1.0 - jnp.eye(self.k, dtype=D.dtype))
+        base = simplex_lib.build_base_simplex(D, jitter=self.jitter)
+        return dataclasses.replace(self, refs=refs, base=base)
+
+    @classmethod
+    def from_distances(
+        cls, D_refs: Array, *, metric: str = "precomputed", jitter: float = 0.0
+    ) -> "NSimplexTransform":
+        """Fit from a (k, k) reference distance matrix (coordinate-free spaces)."""
+        D_refs = jnp.asarray(D_refs)
+        k = D_refs.shape[0]
+        base = simplex_lib.build_base_simplex(D_refs, jitter=jitter)
+        return cls(k=k, metric=metric, refs=None, base=base)
+
+    @property
+    def is_fitted(self) -> bool:
+        return self.base is not None
+
+    def degenerate(self) -> Array:
+        self._check_fitted()
+        return simplex_lib.simplex_is_degenerate(self.base)
+
+    # -- transform -----------------------------------------------------------
+    def reference_distances(self, X: Array) -> Array:
+        """(N, k) distances from each row of X to every reference object."""
+        self._check_fitted()
+        if self.refs is None:
+            raise ValueError(
+                "transform(X) needs coordinate references; use "
+                "transform_from_distances for distance-only transforms"
+            )
+        m = metrics_lib.get_metric(self.metric)
+        if m.normalize is not None:
+            X = m.normalize(X)
+        return m.pdist(X, self.refs)
+
+    def transform(self, X: Array) -> Array:
+        """Project (N, m) objects to (N, k) apex coordinates."""
+        return simplex_lib.apex_project(self.base, self.reference_distances(X))
+
+    def transform_from_distances(self, dists: Array) -> Array:
+        """Project from precomputed (N, k) object-to-reference distances."""
+        self._check_fitted()
+        return simplex_lib.apex_project(self.base, dists)
+
+    def __call__(self, X: Array) -> Array:
+        return self.transform(X)
+
+    def _check_fitted(self):
+        if self.base is None:
+            raise ValueError("NSimplexTransform is not fitted")
+
+
+def select_references(
+    X: Array,
+    k: int,
+    key: jax.Array,
+    *,
+    metric: str = "euclidean",
+    max_tries: int = 8,
+    jitter: float = 0.0,
+) -> NSimplexTransform:
+    """Randomly select k references from a witness set and fit, re-drawing on a
+    degenerate simplex (paper §7.2: 'easy to check during simplex construction
+    at which point a different choice of reference object can be made')."""
+    last = None
+    for _ in range(max_tries):
+        key, sub = jax.random.split(key)
+        idx = jax.random.choice(sub, X.shape[0], (k,), replace=False)
+        tr = NSimplexTransform(k=k, metric=metric, jitter=jitter).fit(X[idx])
+        last = tr
+        if not bool(tr.degenerate()):
+            return tr
+    return last  # caller may still inspect .degenerate()
+
+
+def fit_transform(
+    X: Array,
+    k: int,
+    key: jax.Array,
+    *,
+    metric: str = "euclidean",
+) -> tuple[NSimplexTransform, Array]:
+    tr = select_references(X, k, key, metric=metric)
+    return tr, tr.transform(X)

@@ -1,0 +1,184 @@
+"""Quality measures for DR transforms (paper §5.1 and Appendix E).
+
+All measures take flat arrays of original distances ``delta`` and reduced
+distances ``zeta`` over the same sampled object pairs (i < j), except the
+kNN-recall DCG which takes ranked id lists.
+
+``kruskal_stress`` uses an exact pool-adjacent-violators (PAVA) isotonic
+regression; PAVA is inherently sequential so it runs host-side in numpy —
+it is an evaluation-only path, never inside a training step.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _pava(y: np.ndarray, w: np.ndarray | None = None) -> np.ndarray:
+    """Least-squares isotonic (non-decreasing) fit; O(n) pool-adjacent-violators."""
+    y = np.asarray(y, np.float64)
+    n = y.shape[0]
+    w = np.ones(n) if w is None else np.asarray(w, np.float64)
+    means = y.copy()
+    weights = w.copy()
+    # blocks as index ranges
+    starts = np.arange(n)
+    ends = np.arange(n)
+    top = 0  # stack pointer
+    for i in range(1, n):
+        top += 1
+        means[top] = y[i]
+        weights[top] = w[i]
+        starts[top] = i
+        ends[top] = i
+        while top > 0 and means[top - 1] > means[top]:
+            tot = weights[top - 1] + weights[top]
+            means[top - 1] = (
+                weights[top - 1] * means[top - 1] + weights[top] * means[top]
+            ) / tot
+            weights[top - 1] = tot
+            ends[top - 1] = ends[top]
+            top -= 1
+    out = np.empty(n)
+    for b in range(top + 1):
+        out[starts[b] : ends[b] + 1] = means[b]
+    return out
+
+
+def isotonic_fit(zeta: np.ndarray, delta: np.ndarray) -> np.ndarray:
+    """Kruskal disparities d*: the least-squares monotone (isotonic) fit of the
+    reduced distances ``zeta`` with respect to the ordering induced by the true
+    distances ``delta`` (paper Eq. 4 / Eq. 30). Returned in input order.
+
+    This is the standard Kruskal construction: if zeta is any purely monotone
+    function of delta, the fit is exact and the stress is zero — the property
+    the paper states explicitly in Appendix E.1.
+    """
+    zeta = np.asarray(zeta, np.float64)
+    delta = np.asarray(delta, np.float64)
+    order = np.argsort(delta, kind="stable")
+    fit_sorted = _pava(zeta[order])
+    out = np.empty_like(fit_sorted)
+    out[order] = fit_sorted
+    return out
+
+
+def kruskal_stress(delta, zeta) -> float:
+    """Kruskal stress-1 (paper Eq. 4 / Eq. 30)."""
+    delta = np.asarray(delta, np.float64).ravel()
+    zeta = np.asarray(zeta, np.float64).ravel()
+    d_star = isotonic_fit(zeta, delta)
+    denom = np.sum(zeta**2)
+    if denom <= 0:
+        return float("inf")
+    return float(np.sqrt(np.sum((zeta - d_star) ** 2) / denom))
+
+
+def sammon_stress(delta, zeta, eps: float = 1e-12) -> float:
+    """Sammon stress (paper Eq. 31)."""
+    delta = np.asarray(delta, np.float64).ravel()
+    zeta = np.asarray(zeta, np.float64).ravel()
+    safe = np.maximum(delta, eps)
+    return float(np.sum((delta - zeta) ** 2 / safe) / np.maximum(np.sum(delta), eps))
+
+
+def quadratic_loss(delta, zeta) -> float:
+    """Quadratic loss (paper Eq. 32)."""
+    delta = np.asarray(delta, np.float64).ravel()
+    zeta = np.asarray(zeta, np.float64).ravel()
+    return float(np.sum((delta - zeta) ** 2))
+
+
+def spearman_rho(delta, zeta) -> float:
+    """Spearman rank correlation over sampled pairwise distances (Eq. 33)."""
+    delta = np.asarray(delta, np.float64).ravel()
+    zeta = np.asarray(zeta, np.float64).ravel()
+    t = delta.shape[0]
+    rank = lambda a: np.argsort(np.argsort(a, kind="stable"), kind="stable").astype(
+        np.float64
+    )
+    dr, zr = rank(delta), rank(zeta)
+    return float(1.0 - 6.0 * np.sum((dr - zr) ** 2) / (t**3 - t))
+
+
+# -- kNN recall as logistic-relevance DCG (paper Appendix E.3) ---------------
+
+
+def rank_relevance(i: np.ndarray, n: int = 1000) -> np.ndarray:
+    """Paper Eq. (34): inverse-sigmoid relevance of the i-th true neighbour
+    (1-indexed ranks)."""
+    del n
+    return 1.0 - 1.0 / (1.0 + np.exp(-(i - 500.0) / 100.0))
+
+
+def dcg_recall(true_ids: np.ndarray, approx_ids: np.ndarray) -> float:
+    """Paper Eq. (35), normalised to [0, 1] by the perfect-correlation DCG.
+
+    Args:
+      true_ids:   (n,) ids of the true nearest neighbours, best first.
+      approx_ids: (n,) ids returned by the DR-space search, best first.
+    """
+    true_ids = np.asarray(true_ids).ravel()
+    approx_ids = np.asarray(approx_ids).ravel()
+    n = true_ids.shape[0]
+    pos_in_true = {int(t): i + 1 for i, t in enumerate(true_ids)}  # 1-indexed
+    i = np.arange(1, n + 1, dtype=np.float64)
+    discount = np.log2(i + 1.0)
+    # relevance of the object found at approx rank i = R(rank in true list)
+    ranks = np.array(
+        [pos_in_true.get(int(a), n + 1000) for a in approx_ids], np.float64
+    )
+    rel = rank_relevance(ranks)
+    dcg = np.sum((np.power(2.0, rel) - 1.0) / discount)
+    ideal = np.sum((np.power(2.0, rank_relevance(i)) - 1.0) / discount)
+    return float(dcg / ideal)
+
+
+def batch_dcg_recall(true_ids: np.ndarray, approx_ids: np.ndarray) -> float:
+    """Mean DCG recall over a batch of queries: (Q, n) id arrays."""
+    return float(
+        np.mean([dcg_recall(t, a) for t, a in zip(true_ids, approx_ids)])
+    )
+
+
+# -- normalised quality profiles (paper Appendix E.4) ------------------------
+
+
+def quality_profile(delta, zeta, *, qmax: float | None = None) -> Dict[str, float]:
+    """All pairwise-distance measures normalised into [0, 1] (1 = perfect)."""
+    k = kruskal_stress(delta, zeta)
+    s = sammon_stress(delta, zeta)
+    q = quadratic_loss(delta, zeta)
+    rho = spearman_rho(delta, zeta)
+    out = {
+        "kruskal": float(np.clip(1.0 - k, 0.0, 1.0)),
+        "sammon": float(np.clip(1.0 - s, 0.0, 1.0)),
+        "spearman": float(np.clip(rho, 0.0, 1.0)),
+        "quadratic_raw": q,
+    }
+    if qmax is not None and qmax > 0:
+        out["quadratic"] = float(np.clip((qmax - q) / qmax, 0.0, 1.0))
+    return out
+
+
+def pairwise_sample(
+    X: Array, n_objects: int, key: jax.Array
+) -> tuple[Array, Array]:
+    """Sample ``n_objects`` rows and return (subset, upper-triangular index pairs)."""
+    idx = jax.random.choice(key, X.shape[0], (min(n_objects, X.shape[0]),), replace=False)
+    sub = X[idx]
+    n = sub.shape[0]
+    iu = jnp.triu_indices(n, k=1)
+    return sub, iu
+
+
+def flatten_upper(D: Array) -> Array:
+    n = D.shape[0]
+    iu = jnp.triu_indices(n, k=1)
+    return D[iu]

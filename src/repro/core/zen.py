@@ -1,0 +1,126 @@
+"""Zen / Lwb / Upb estimators over nSimplex-projected coordinates (paper §4.1).
+
+For projected points x, y in R^k (last coordinate = altitude):
+
+  base_dist(x,y) = sum_{i<k} (x_i - y_i)^2
+  Lwb(x,y) = sqrt(base_dist + (x_k - y_k)^2)      # = l2, lower bound of d
+  Upb(x,y) = sqrt(base_dist + (x_k + y_k)^2)      # upper bound of d
+  Zen(x,y) = sqrt(base_dist + x_k^2 + y_k^2)      # zenith estimator
+
+All three share one matmul:  with full squared norms nx = ||x||^2 (altitude
+included) and the dot product restricted to the first k-1 coordinates
+p = x[:k-1] . y[:k-1]:
+
+  Zen^2 = nx + ny - 2 p
+  Lwb^2 = Zen^2 - 2 x_k y_k
+  Upb^2 = Zen^2 + 2 x_k y_k
+
+so the pairwise estimator matrix is one (masked-last-column) matmul plus a
+rank-1 correction — the shape the Pallas ``zen`` kernel implements on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+MODES = ("zen", "lwb", "upb")
+
+
+def _acc(x: Array) -> jnp.dtype:
+    return jnp.promote_types(x.dtype, jnp.float32)
+
+
+def estimate_pdist(X: Array, Y: Array, mode: str = "zen") -> Array:
+    """Pairwise estimator matrix (N, M) between projected sets X (N,k), Y (M,k)."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    acc = _acc(X)
+    Xa, Ya = X.astype(acc), Y.astype(acc)
+    nx = jnp.sum(Xa * Xa, axis=-1)
+    ny = jnp.sum(Ya * Ya, axis=-1)
+    p = jnp.matmul(Xa[:, :-1], Ya[:, :-1].T, preferred_element_type=acc)
+    z2 = nx[:, None] + ny[None, :] - 2.0 * p
+    if mode != "zen":
+        cross = jnp.outer(Xa[:, -1], Ya[:, -1])
+        z2 = z2 - 2.0 * cross if mode == "lwb" else z2 + 2.0 * cross
+    return jnp.sqrt(jnp.maximum(z2, 0.0))
+
+
+def zen_pdist(X: Array, Y: Array) -> Array:
+    return estimate_pdist(X, Y, "zen")
+
+
+def lwb_pdist(X: Array, Y: Array) -> Array:
+    return estimate_pdist(X, Y, "lwb")
+
+
+def upb_pdist(X: Array, Y: Array) -> Array:
+    return estimate_pdist(X, Y, "upb")
+
+
+def estimate_triple(X: Array, Y: Array) -> Tuple[Array, Array, Array]:
+    """(lwb, zen, upb) evaluated as a triple sharing one matmul (paper §4.1)."""
+    acc = _acc(X)
+    Xa, Ya = X.astype(acc), Y.astype(acc)
+    nx = jnp.sum(Xa * Xa, axis=-1)
+    ny = jnp.sum(Ya * Ya, axis=-1)
+    p = jnp.matmul(Xa[:, :-1], Ya[:, :-1].T, preferred_element_type=acc)
+    z2 = nx[:, None] + ny[None, :] - 2.0 * p
+    cross = 2.0 * jnp.outer(Xa[:, -1], Ya[:, -1])
+    sq = lambda a: jnp.sqrt(jnp.maximum(a, 0.0))
+    return sq(z2 - cross), sq(z2), sq(z2 + cross)
+
+
+@partial(jax.jit, static_argnames=("n_neighbors", "mode", "chunk"))
+def knn_search(
+    queries: Array,
+    index: Array,
+    n_neighbors: int = 10,
+    mode: str = "zen",
+    chunk: int = 0,
+) -> Tuple[Array, Array]:
+    """Top-k nearest neighbours of ``queries`` in ``index`` under an estimator.
+
+    Args:
+      queries: (Q, k) projected queries.
+      index:   (N, k) projected index.
+      chunk:   if > 0, scan the index in chunks of this many rows (bounded
+               memory: keeps a running top-k instead of the full (Q, N) matrix).
+
+    Returns:
+      (distances, indices), each (Q, n_neighbors), ascending distance.
+    """
+    if chunk and index.shape[0] > chunk:
+        n = index.shape[0]
+        pad = (-n) % chunk
+        idx_pad = jnp.pad(index, ((0, pad), (0, 0)))  # zero rows, masked below
+        n_chunks = idx_pad.shape[0] // chunk
+        blocks = idx_pad.reshape(n_chunks, chunk, index.shape[1])
+
+        def body(carry, blk_and_off):
+            best_d, best_i = carry
+            blk, off = blk_and_off
+            d = estimate_pdist(queries, blk, mode)
+            ids = (off + jnp.arange(chunk, dtype=jnp.int32)).astype(jnp.int32)
+            d = jnp.where(ids[None, :] < n, d, jnp.inf)  # mask padded rows
+            cat_d = jnp.concatenate([best_d, d], axis=1)
+            cat_i = jnp.concatenate([best_i, jnp.broadcast_to(ids, d.shape)], axis=1)
+            neg, pos = jax.lax.top_k(-cat_d, n_neighbors)
+            return (-neg, jnp.take_along_axis(cat_i, pos, axis=1)), None
+
+        init = (
+            jnp.full((queries.shape[0], n_neighbors), jnp.inf, _acc(queries)),
+            jnp.full((queries.shape[0], n_neighbors), -1, jnp.int32),
+        )
+        offs = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+        (best_d, best_i), _ = jax.lax.scan(body, init, (blocks, offs))
+        return best_d, best_i
+
+    d = estimate_pdist(queries, index, mode)
+    neg, ids = jax.lax.top_k(-d, n_neighbors)
+    return -neg, ids

@@ -1,0 +1,3 @@
+from . import graph, pipeline, synthetic
+
+__all__ = ["synthetic", "pipeline", "graph"]

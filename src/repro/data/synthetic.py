@@ -1,0 +1,131 @@
+"""Synthetic data generators.
+
+Two roles:
+1. the paper's experimental spaces (§5.2/Appendix D): uniform/Gaussian
+   Euclidean, low-rank manifold ("GloVe-like"), RELU'd CNN-feature-like
+   (cosine), and l1-normalised probability spaces (Jensen-Shannon);
+2. model-family batches for the assigned architectures (LM token streams,
+   recsys click logs, geometric graphs) — deterministic in (seed, step) so a
+   restarted trainer reproduces the exact batch sequence (fault tolerance).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# -- paper spaces ---------------------------------------------------------------
+
+
+def uniform_space(key: jax.Array, n: int, dim: int) -> Array:
+    return jax.random.uniform(key, (n, dim))
+
+
+def gaussian_space(key: jax.Array, n: int, dim: int) -> Array:
+    return jax.random.normal(key, (n, dim))
+
+
+def manifold_space(
+    key: jax.Array, n: int, dim: int, intrinsic: int, noise: float = 0.01
+) -> Array:
+    """Data on an ``intrinsic``-dimensional nonlinear manifold embedded in
+    R^dim — the GloVe/CNN-feature stand-in (real-world spaces lie on complex
+    manifolds; paper §5.4)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    z = jax.random.normal(k1, (n, intrinsic))
+    w1 = jax.random.normal(k2, (intrinsic, 2 * intrinsic)) / np.sqrt(intrinsic)
+    w2 = jax.random.normal(k3, (2 * intrinsic, dim)) / np.sqrt(2 * intrinsic)
+    x = jnp.tanh(z @ w1) @ w2
+    return x + noise * jax.random.normal(k4, (n, dim))
+
+
+def relu_feature_space(key: jax.Array, n: int, dim: int, intrinsic: int) -> Array:
+    """Non-negative CNN-activation-like data (cosine-metric experiments)."""
+    x = manifold_space(key, n, dim, intrinsic)
+    return jax.nn.relu(x)
+
+
+def probability_space(
+    key: jax.Array, n: int, dim: int, intrinsic: Optional[int] = None
+) -> Array:
+    """l1-normalised positive vectors (Jensen-Shannon domain, paper §5.6)."""
+    if intrinsic is None:
+        x = jax.random.uniform(key, (n, dim))
+    else:
+        x = jax.nn.softplus(manifold_space(key, n, dim, intrinsic))
+    s = jnp.sum(x, axis=1, keepdims=True)
+    return x / jnp.maximum(s, 1e-12)
+
+
+# -- model-family batches ---------------------------------------------------------
+
+
+def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int) -> dict:
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return {"tokens": jax.random.randint(key, (batch, seq), 0, vocab, jnp.int32)}
+
+
+def recsys_batch(
+    seed: int, step: int, batch: int, vocab_sizes, n_dense: int = 0
+) -> dict:
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    ks = jax.random.split(key, 3)
+    maxes = jnp.asarray(vocab_sizes, jnp.int32)
+    u = jax.random.uniform(ks[0], (batch, len(vocab_sizes)))
+    # zipf-ish skew: hot rows are hit much more often (realistic table traffic)
+    sparse = jnp.minimum(
+        (u**3 * maxes[None, :]).astype(jnp.int32), maxes[None, :] - 1
+    )
+    out = {
+        "sparse": sparse,
+        "labels": jax.random.bernoulli(ks[1], 0.25, (batch,)).astype(jnp.float32),
+    }
+    if n_dense:
+        out["dense"] = jax.random.normal(ks[2], (batch, n_dense), jnp.float32)
+    return out
+
+
+def geometric_graph_batch(
+    seed: int,
+    n_nodes: int,
+    n_edges: int,
+    d_feat: int,
+    n_graphs: int = 1,
+    node_level: bool = False,
+    box: float = 8.0,
+) -> dict:
+    """Random geometric graph(s) with synthetic 3D positions (DESIGN.md: the
+    assigned citation/product graphs carry no coordinates; positions are
+    synthesised so MACE's geometric model is exercised at published scales)."""
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, box, size=(n_nodes, 3)).astype(np.float32)
+    send = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    # bias edges toward spatial neighbours: jitter around sender positions
+    recv = (send + rng.integers(1, max(n_nodes // 64, 2), n_edges)) % n_nodes
+    recv = recv.astype(np.int32)
+    node_graph = np.sort(rng.integers(0, n_graphs, n_nodes)).astype(np.int32)
+    batch = {
+        "positions": jnp.asarray(pos),
+        "node_feat": jnp.asarray(
+            rng.normal(size=(n_nodes, d_feat)).astype(np.float32)
+        ),
+        "senders": jnp.asarray(send),
+        "receivers": jnp.asarray(recv),
+        "edge_mask": jnp.ones((n_edges,), jnp.float32),
+        "node_mask": jnp.ones((n_nodes,), jnp.float32),
+        "node_graph": jnp.asarray(node_graph),
+    }
+    if node_level:
+        batch["target_nodes"] = jnp.asarray(
+            rng.normal(size=(n_nodes,)).astype(np.float32))
+        batch["loss_node_mask"] = jnp.ones((n_nodes,), jnp.float32)
+    else:
+        batch["target_energy"] = jnp.asarray(
+            rng.normal(size=(n_graphs,)).astype(np.float32))
+    return batch

@@ -1,0 +1,4 @@
+from . import sharding
+from .sharding import data_axes, opt_state_specs, param_specs
+
+__all__ = ["sharding", "param_specs", "opt_state_specs", "data_axes"]

@@ -1,0 +1,114 @@
+"""Fault-tolerance & straggler-mitigation runtime hooks.
+
+This container is single-process CPU, so the cross-host signals are modelled
+as in-process hooks with the same contracts a multi-controller deployment
+uses (jax.distributed + coordination service):
+
+* **StepMonitor** — per-step wall-time EMA; flags a straggler when a step
+  exceeds ``threshold x`` the EMA. On a real pod the per-host step times are
+  all-gathered (a tiny f32 collective piggybacked on the step); the slowest
+  host is reported and, past a patience budget, the policy asks the runner to
+  (a) rebalance input shards away from the slow host, then (b) checkpoint and
+  re-launch without it (elastic restart via CheckpointManager resharding).
+* **HeartbeatRegistry** — liveness bookkeeping with a deadline; a missed
+  heartbeat marks the host failed and triggers the elastic-restart path.
+* **preemption_aware_save** — the SIGTERM hook: checkpoint synchronously at
+  the next step boundary when the platform announces preemption.
+
+The trainer (launch/train.py) wires these in; unit tests drive them with a
+fake clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Dict, Optional
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    step_time: float
+    ema: float
+    ratio: float
+
+
+class StepMonitor:
+    def __init__(self, *, ema_decay: float = 0.9, threshold: float = 2.0,
+                 warmup_steps: int = 5, patience: int = 3):
+        self.ema_decay = ema_decay
+        self.threshold = threshold
+        self.warmup_steps = warmup_steps
+        self.patience = patience
+        self.ema: Optional[float] = None
+        self.n = 0
+        self.consecutive = 0
+        self.events: list[StragglerEvent] = []
+
+    def record(self, step: int, step_time: float) -> Optional[StragglerEvent]:
+        """Feed one step's wall time; returns an event when flagged."""
+        self.n += 1
+        if self.ema is None:
+            self.ema = step_time
+            return None
+        flagged = None
+        if self.n > self.warmup_steps and step_time > self.threshold * self.ema:
+            self.consecutive += 1
+            flagged = StragglerEvent(step, step_time, self.ema,
+                                     step_time / self.ema)
+            self.events.append(flagged)
+        else:
+            self.consecutive = 0
+            # only fold non-straggler steps into the EMA (keep it honest)
+            self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * step_time
+        return flagged
+
+    @property
+    def should_escalate(self) -> bool:
+        """Patience exhausted -> checkpoint + elastic restart."""
+        return self.consecutive >= self.patience
+
+
+class HeartbeatRegistry:
+    def __init__(self, deadline_s: float = 60.0, now: Callable[[], float] = time.monotonic):
+        self.deadline_s = deadline_s
+        self._now = now
+        self._last: Dict[str, float] = {}
+
+    def beat(self, host: str) -> None:
+        self._last[host] = self._now()
+
+    def dead_hosts(self) -> list[str]:
+        t = self._now()
+        return [h for h, last in self._last.items()
+                if t - last > self.deadline_s]
+
+    def alive(self) -> list[str]:
+        t = self._now()
+        return sorted(h for h, last in self._last.items()
+                      if t - last <= self.deadline_s)
+
+
+class PreemptionGuard:
+    """SIGTERM-aware save trigger: ``if guard.should_save(): ckpt.save(...)``."""
+
+    def __init__(self, install_signal: bool = True):
+        self._flag = False
+        if install_signal:
+            try:
+                signal.signal(signal.SIGTERM, self._handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def _handler(self, signum, frame):
+        self._flag = True
+
+    def request(self) -> None:  # manual trigger (tests / platform hook)
+        self._flag = True
+
+    def should_save(self) -> bool:
+        return self._flag
+
+    def clear(self) -> None:
+        self._flag = False

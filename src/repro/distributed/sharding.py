@@ -1,0 +1,195 @@
+"""Sharding rules: parameter and input PartitionSpecs per architecture family.
+
+Conventions (DESIGN.md §6):
+  * ``model`` axis: tensor/expert parallel — attention heads & FFN width for
+    LMs, expert dim for MoE, channel dim for MACE, embedding-table rows and
+    vocab for recsys/LM heads;
+  * data axes (``data`` alone, or ``("pod", "data")`` on the multi-pod mesh):
+    batch / sequence(500k decode) / edges;
+  * optimizer moments inherit the parameter specs (FSDP-compatible).
+
+``param_specs(family, cfg, params_shape)`` maps a pytree of ShapeDtypeStructs
+to a pytree of PartitionSpecs by leaf path, so the same rules drive real
+training (device_put), the dry-run (in_shardings) and checkpoint resharding.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import AdamWState
+
+
+def data_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+# -- LM transformer ------------------------------------------------------------
+
+_LM_RULES = [
+    # (path substring, spec builder given leaf ndim)
+    ("embed", lambda nd: P("model", None)),
+    ("lm_head", lambda nd: P(None, "model")),
+    ("final_norm", lambda nd: P(None)),
+    ("layers/wq", lambda nd: P(None, None, None, "model")),
+    ("layers/wk", lambda nd: P(None, None, None, "model")),
+    ("layers/wv", lambda nd: P(None, None, None, "model")),
+    ("layers/wo", lambda nd: P(None, None, "model", None)),
+    ("layers/bq", lambda nd: P(None, None, "model")),
+    ("layers/bk", lambda nd: P(None, None, "model")),
+    ("layers/bv", lambda nd: P(None, None, "model")),
+    ("layers/w_gate", lambda nd: P(None, None, None, "model")),
+    ("layers/w_up", lambda nd: P(None, None, None, "model")),
+    ("layers/w_down", lambda nd: P(None, None, "model", None)),
+    ("layers/router", lambda nd: P(None, None, None, "model")),
+    ("layers/we_gate", lambda nd: P(None, None, "model", None, None)),
+    ("layers/we_up", lambda nd: P(None, None, "model", None, None)),
+    ("layers/we_down", lambda nd: P(None, None, "model", None, None)),
+    ("layers/ws_gate_logit", lambda nd: P()),
+    ("layers/ws_gate", lambda nd: P(None, None, None, "model")),
+    ("layers/ws_up", lambda nd: P(None, None, None, "model")),
+    ("layers/ws_down", lambda nd: P(None, None, "model", None)),
+    ("layers/ln", lambda nd: P()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def lm_param_specs(params_shape: Any) -> Any:
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        for frag, builder in _LM_RULES:
+            if frag in s:
+                sp = builder(leaf.ndim)
+                # guard: rule rank must not exceed leaf rank
+                if len(sp) <= leaf.ndim or sp == P():
+                    return sp
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+# -- MACE ------------------------------------------------------------------
+
+
+def gnn_param_specs(params_shape: Any) -> Any:
+    """Channel-mixing linears shard their *output* channels over model; the
+    radial MLP output (C * n_paths) also shards over model."""
+
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        if "embed" in s:
+            return P(None, "model")
+        if "rad_w2" in s:
+            # (hidden, P, C): C aligned with the model axis -> per-edge
+            # weighting is collective-free
+            return P(None, None, "model")
+        if "msg" in s:
+            # (P, C_in, C_out): contract over the sharded C_in
+            return P(None, "model", None)
+        if "self" in s:
+            return P("model", None)
+        if "w_corr" in s:
+            return P("model")
+        if "ro_w1" in s:
+            return P("model", None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+# -- RecSys ------------------------------------------------------------------
+
+
+def recsys_param_specs(params_shape: Any) -> Any:
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        if s in ("table",) or s.endswith("/table") or "wide" in s or "linear" in s:
+            return P("model", None)  # row-sharded embedding tables
+        if "deep/0/w" in s or "dnn/0/w" in s:
+            return P(None, "model")
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def param_specs(family: str, params_shape: Any) -> Any:
+    return {
+        "lm": lm_param_specs,
+        "gnn": gnn_param_specs,
+        "recsys": recsys_param_specs,
+    }[family](params_shape)
+
+
+def opt_state_specs(param_spec: Any) -> AdamWState:
+    """AdamW moments inherit parameter sharding; step is replicated."""
+    return AdamWState(step=P(), mu=param_spec, nu=param_spec)
+
+
+# -- input shardings per cell ---------------------------------------------------
+
+
+def lm_input_shardings(cell_kind: str, shape: str, multi_pod: bool, cfg) -> dict:
+    dp = data_axes(multi_pod)
+    if cell_kind == "train":
+        return {"batch": {"tokens": P(dp, None)}}
+    if cell_kind == "prefill":
+        return {"tokens": P(dp, None)}
+    if cell_kind == "decode":
+        if shape == "long_500k":
+            # batch=1: sequence-parallel cache over the entire mesh
+            seq_axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+            cache_spec = P(None, None, seq_axes, None, None)
+            token_spec = P(None, None)
+        else:
+            cache_spec = P(None, dp, "model", None, None)
+            token_spec = P(dp, None)
+        return {
+            "cache": cache_spec,  # broadcast to every cache leaf by caller
+            "token": token_spec,
+            "cache_len": P(),
+        }
+    raise ValueError(cell_kind)
+
+
+def gnn_input_shardings(multi_pod: bool) -> dict:
+    dp = data_axes(multi_pod)
+    return {
+        "batch": {
+            "positions": P(),
+            "node_feat": P(),
+            "senders": P(dp),
+            "receivers": P(dp),
+            "edge_mask": P(dp),
+            "node_mask": P(),
+            "node_graph": P(),
+            "target_energy": P(),
+            "target_nodes": P(),
+            "loss_node_mask": P(),
+        }
+    }
+
+
+def recsys_input_shardings(cell_kind: str, multi_pod: bool) -> dict:
+    dp = data_axes(multi_pod)
+    out = {"batch": {"sparse": P(dp, None), "dense": P(dp, None),
+                     "labels": P(dp)}}
+    if cell_kind == "retrieval":
+        # candidates row-sharded over the full mesh
+        rows = ("pod", "data", "model") if multi_pod else ("data", "model")
+        out["candidates"] = P(rows, None)
+        out["batch"] = {"sparse": P(None, None), "dense": P(None, None),
+                        "labels": P(None)}
+    return out

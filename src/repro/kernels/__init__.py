@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the nSimplex hot loops, validated in interpret mode.
+
+Layout (per repo convention):
+  pdist.py / zen.py / jsd.py — pl.pallas_call kernels with explicit BlockSpecs
+  ops.py                     — jit'd public wrappers with backend dispatch
+  ref.py                     — pure-jnp oracles, the correctness source of truth
+"""
+from . import ops, ref
+from .ops import jsd_pdist, pdist_sq, zen_estimate
+
+__all__ = ["ops", "ref", "pdist_sq", "zen_estimate", "jsd_pdist"]

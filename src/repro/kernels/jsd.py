@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: blocked Jensen-Shannon distance matrix (paper App. A.3).
+
+  D(v, w) = sqrt(1 - 0.5 * sum_l [h(v_l) + h(w_l) - h(v_l + w_l)]),
+  h(t) = -t log2(t), 0 log 0 := 0.
+
+The paper motivates nSimplex for JSD spaces by JSD being ~2 orders of
+magnitude more expensive than cosine; the cross term sum_l h(v_l + w_l) has no
+matmul form (elementwise transcendental), so the kernel tiles (N, M) on the
+grid, streams the feature dimension through VMEM in bm-chunks, and runs an
+inner fori_loop of rank-1 "h-outer-product" updates on the VPU. Per-row
+entropies h(v), h(w) accumulate in the same pass, avoiding a separate sweep.
+
+Zero-padding the feature dimension is exact: h(0 + 0) = 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+_INNER = 16  # feature columns folded per fori_loop step
+
+
+def _h(t: Array) -> Array:
+    safe = jnp.where(t > 0, t, 1.0)
+    return jnp.where(t > 0, -t * jnp.log2(safe), 0.0)
+
+
+def _jsd_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_m_blocks: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, bm)
+    y = y_ref[...].astype(jnp.float32)  # (bk, bm)
+    bm = x.shape[1]
+
+    # self-entropy partials fold into the accumulator as rank-1 row/col bias:
+    # acc -= 0.5*(h(v) + h(w));  acc += 0.5*h(v+w)  chunk by chunk.
+    hx = jnp.sum(_h(x), axis=1, keepdims=True)  # (bn, 1)
+    hy = jnp.sum(_h(y), axis=1, keepdims=True)  # (bk, 1)
+
+    def body(i, acc):
+        xs = jax.lax.dynamic_slice_in_dim(x, i * _INNER, _INNER, axis=1)
+        ys = jax.lax.dynamic_slice_in_dim(y, i * _INNER, _INNER, axis=1)
+        cross = jnp.sum(_h(xs[:, None, :] + ys[None, :, :]), axis=-1)
+        return acc + cross
+
+    steps = bm // _INNER
+    cross = jax.lax.fori_loop(
+        0, steps, body, jnp.zeros(acc_ref.shape, jnp.float32)
+    )
+    acc_ref[...] += 0.5 * (cross - hx - hy.T)
+
+    @pl.when(pl.program_id(2) == n_m_blocks - 1)
+    def _done():
+        o_ref[...] = jnp.sqrt(
+            jnp.clip(1.0 + acc_ref[...], 0.0, 1.0)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_k", "block_m", "interpret")
+)
+def jsd_pdist(
+    X: Array,
+    Y: Array,
+    *,
+    block_n: int = 128,
+    block_k: int = 128,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """(N, m) x (K, m) l1-normalised rows -> (N, K) Jensen-Shannon distances."""
+    n, m = X.shape
+    k, m2 = Y.shape
+    assert m == m2, (X.shape, Y.shape)
+    bn, bk = min(block_n, _rup(n, 8)), min(block_k, _rup(k, 128))
+    bm = min(block_m, _rup(m, _INNER))
+    bm = _rup(bm, _INNER)
+    Np, Kp, Mp = _rup(n, bn), _rup(k, bk), _rup(m, bm)
+    Xp = jnp.pad(X, ((0, Np - n), (0, Mp - m)))
+    Yp = jnp.pad(Y, ((0, Kp - k), (0, Mp - m)))
+    n_m_blocks = Mp // bm
+
+    out = pl.pallas_call(
+        functools.partial(_jsd_kernel, n_m_blocks=n_m_blocks),
+        grid=(Np // bn, Kp // bk, n_m_blocks),
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bm), lambda i, j, l: (j, l)),
+        ],
+        out_specs=pl.BlockSpec((bn, bk), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Np, Kp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bk), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+        name="nsimplex_jsd",
+    )(Xp, Yp)
+    return out[:n, :k]
+
+
+def _rup(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

@@ -1,0 +1,58 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: compiled Pallas on TPU backends; on CPU (this container) the
+wrappers run the *same kernel body* under ``interpret=True`` when
+``force_kernel=True`` (tests / small shapes), and otherwise fall back to the
+pure-jnp reference, which XLA:CPU fuses well. The numerics of all three paths
+agree to f32 tolerance (asserted in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import jsd as _jsd
+from . import pdist as _pdist
+from . import ref as _ref
+from . import zen as _zen
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pdist_sq(X: Array, Y: Array, *, force_kernel: bool = False, **block_kw) -> Array:
+    """Pairwise squared Euclidean distances (N, K); kernel-accelerated."""
+    if _on_tpu():
+        return _pdist.pdist_sq(X, Y, **block_kw)
+    if force_kernel:
+        return _pdist.pdist_sq(X, Y, interpret=True, **block_kw)
+    return _ref.pdist_sq_ref(X, Y)
+
+
+def pdist(X: Array, Y: Array, **kw) -> Array:
+    return jnp.sqrt(pdist_sq(X, Y, **kw))
+
+
+def zen_estimate(
+    X: Array, Y: Array, mode: str = "zen", *, force_kernel: bool = False, **block_kw
+) -> Array:
+    """Zen/Lwb/Upb estimator matrix (N, M); kernel-accelerated."""
+    if _on_tpu():
+        return _zen.zen_estimate(X, Y, mode, **block_kw)
+    if force_kernel:
+        return _zen.zen_estimate(X, Y, mode, interpret=True, **block_kw)
+    return _ref.zen_estimate_ref(X, Y, mode)
+
+
+def jsd_pdist(
+    X: Array, Y: Array, *, force_kernel: bool = False, **block_kw
+) -> Array:
+    """Jensen-Shannon distance matrix (N, K); kernel-accelerated."""
+    if _on_tpu():
+        return _jsd.jsd_pdist(X, Y, **block_kw)
+    if force_kernel:
+        return _jsd.jsd_pdist(X, Y, interpret=True, **block_kw)
+    return _ref.jsd_pdist_ref(X, Y)

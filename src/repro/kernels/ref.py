@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the single source of truth the kernels are tested against
+(interpret=True on CPU; compiled on TPU). They deliberately reuse nothing from
+the kernel implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pdist_sq_ref(X: Array, Y: Array) -> Array:
+    X = X.astype(jnp.float32)
+    Y = Y.astype(jnp.float32)
+    d2 = (
+        jnp.sum(X * X, 1)[:, None]
+        + jnp.sum(Y * Y, 1)[None, :]
+        - 2.0 * (X @ Y.T)
+    )
+    return jnp.maximum(d2, 0.0)
+
+
+def zen_estimate_ref(X: Array, Y: Array, mode: str = "zen") -> Array:
+    X = X.astype(jnp.float32)
+    Y = Y.astype(jnp.float32)
+    base = jnp.sum(
+        (X[:, None, :-1] - Y[None, :, :-1]) ** 2, axis=-1
+    )
+    xa, ya = X[:, -1], Y[:, -1]
+    if mode == "zen":
+        z2 = base + (xa**2)[:, None] + (ya**2)[None, :]
+    elif mode == "lwb":
+        z2 = base + (xa[:, None] - ya[None, :]) ** 2
+    elif mode == "upb":
+        z2 = base + (xa[:, None] + ya[None, :]) ** 2
+    else:
+        raise ValueError(mode)
+    return jnp.sqrt(jnp.maximum(z2, 0.0))
+
+
+def _h(t: Array) -> Array:
+    safe = jnp.where(t > 0, t, 1.0)
+    return jnp.where(t > 0, -t * jnp.log2(safe), 0.0)
+
+
+def jsd_pdist_ref(X: Array, Y: Array) -> Array:
+    X = X.astype(jnp.float32)
+    Y = Y.astype(jnp.float32)
+    hx = jnp.sum(_h(X), axis=1)
+    hy = jnp.sum(_h(Y), axis=1)
+    cross = jnp.sum(_h(X[:, None, :] + Y[None, :, :]), axis=-1)
+    K = 1.0 - 0.5 * (hx[:, None] + hy[None, :] - cross)
+    return jnp.sqrt(jnp.clip(K, 0.0, 1.0))

@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and extract the roofline terms.
+
+The two lines above MUST stay the first statements in this module — jax locks
+the device count at first init, and the 16x16 / 2x16x16 meshes need 512
+placeholder host devices. This flag is set ONLY here (smoke tests and benches
+see 1 device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+Artifacts: benchmarks/artifacts/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, the per-collective byte breakdown parsed from
+the partitioned HLO, and wall times. EXPERIMENTS.md §Dry-run and §Roofline are
+generated from these artifacts.
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of every typed shape literal in an HLO result spec."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-collective byte totals from the partitioned (per-device) HLO.
+
+    Bytes are the RESULT shapes of each collective op — the standard proxy for
+    data moved per device per op (cost_analysis does not expose this).
+    """
+    out: dict = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        result_spec, opname = m.groups()
+        base = opname
+        if base.endswith("-start") or base.endswith("-done"):
+            base = base.rsplit("-", 1)[0]
+        if base in out:
+            if opname.endswith("-done"):
+                continue  # counted at -start
+            out[base]["count"] += 1
+            out[base]["bytes"] += _shape_bytes(result_spec)
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _parse_variant(variant: str) -> dict:
+    """'unroll_layers=True,n_microbatches=4' -> typed dict."""
+    out = {}
+    if not variant:
+        return out
+    for item in variant.split(","):
+        k, v = item.split("=")
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, artifact_dir: str,
+             variant: str = "") -> dict:
+    import jax  # after XLA_FLAGS
+
+    from repro import configs as configs_lib
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_plan
+
+    multi_pod = mesh_kind == "multipod"
+    record: dict = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "n_devices": 512 if multi_pod else 256,
+    }
+    if variant:
+        record["variant"] = variant
+        record["arch"] = f"{arch}@{variant}"
+    plan = build_plan(arch, shape, multi_pod=multi_pod,
+                      overrides=_parse_variant(variant))
+    record["kind"] = plan.kind
+    if plan.skip:
+        record["status"] = "skipped"
+        record["skip_reason"] = plan.skip
+        _write(record, artifact_dir)
+        print(f"SKIP {arch}/{shape}/{mesh_kind}: {plan.skip}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered = plan.lower(mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    if os.environ.get("DRYRUN_DUMP_HLO"):
+        dump = os.path.join(artifact_dir,
+                            f"{record['arch']}__{shape}__{mesh_kind}.hlo")
+        with open(dump, "w") as f:
+            f.write(hlo)
+
+    corrected = _scan_corrected_cost(plan, arch, shape, multi_pod, mesh)
+
+    record.update({
+        "status": "ok",
+        "corrected": corrected,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+        # cost_analysis is PER-DEVICE for the SPMD-partitioned module
+        "cost": {k: v for k, v in ca.items()
+                 if isinstance(v, (int, float)) and not k.startswith("util")},
+        "collectives": coll,
+        "model_flops": _model_flops(plan),
+    })
+    # peak per-device bytes: args are persistent (params+opt), temps transient
+    record["memory"]["peak_bytes"] = (
+        ma.argument_size_in_bytes + ma.temp_size_in_bytes
+    )
+    _write(record, artifact_dir)
+    print(
+        f"OK {arch}/{shape}/{mesh_kind}: compile={t_compile:.1f}s "
+        f"flops/dev={record['cost'].get('flops', 0):.3e} "
+        f"peak/dev={record['memory']['peak_bytes']/2**30:.2f}GiB "
+        f"coll/dev={coll['total_bytes']/2**20:.1f}MiB ({coll['total_count']} ops)"
+    )
+    return record
+
+
+def _scan_corrected_cost(plan, arch, shape, multi_pod, mesh):
+    """XLA costs a while-loop body ONCE regardless of trip count, so scanned
+    LM layers are undercounted. Correct by compiling unrolled 1-group and
+    2-group depth variants (seconds each): body = cost(2g) - cost(1g);
+    total = cost(1g) + (n_groups - 1) * body. Applies to flops and
+    collective bytes; memory_analysis of the production (scan) lowering is
+    kept as-is."""
+    cfg = plan.cfg
+    if not hasattr(cfg, "n_groups") or getattr(cfg, "unroll_layers", False):
+        return None
+    G = cfg.n_groups
+    if G <= 2:
+        return None
+    from repro.launch.steps import build_plan
+
+    def cost_of(n_groups):
+        # neutralise every while-loop in the probe: unrolled layers, a single
+        # microbatch (flops/collectives are token-count invariant) and direct
+        # (unchunked) attention, so cost_analysis sees the whole step
+        p = build_plan(
+            arch, shape, multi_pod=multi_pod,
+            overrides={"n_layers": n_groups * cfg.pattern_len,
+                       "unroll_layers": True,
+                       "n_microbatches": 1,
+                       "query_chunk": 1 << 30},
+        )
+        c = p.lower(mesh).compile()
+        ca = c.cost_analysis() or {}
+        coll = parse_collectives(c.as_text())
+        return ca.get("flops", 0.0), ca.get("bytes accessed", 0.0), \
+            coll["total_bytes"]
+
+    f1, b1, c1 = cost_of(1)
+    f2, b2, c2 = cost_of(2)
+    body_f, body_b, body_c = f2 - f1, b2 - b1, c2 - c1
+    return {
+        "flops": f1 + (G - 1) * body_f,
+        "bytes_accessed": b1 + (G - 1) * body_b,
+        "collective_bytes": c1 + (G - 1) * body_c,
+        "per_group_flops": body_f,
+        "method": "unrolled 1g/2g extrapolation",
+    }
+
+
+def _model_flops(plan) -> dict:
+    """Analytic 'useful' FLOPs for the MODEL_FLOPS/HLO_FLOPs ratio (global)."""
+    from repro.launch import model_flops
+    return model_flops.estimate(plan)
+
+
+def _write(record: dict, artifact_dir: str) -> None:
+    os.makedirs(artifact_dir, exist_ok=True)
+    fname = f"{record['arch']}__{record['shape']}__{record['mesh']}.json"
+    with open(os.path.join(artifact_dir, fname), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch")
+    p.add_argument("--shape")
+    p.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--skip-existing", action="store_true")
+    p.add_argument("--artifact-dir", default=None)
+    p.add_argument("--variant", default="",
+                   help="config overrides, e.g. unroll_layers=True,"
+                        "n_microbatches=4 (artifact tagged arch@variant)")
+    args = p.parse_args()
+    artifact_dir = args.artifact_dir or os.path.normpath(ARTIFACT_DIR)
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        # subprocess per cell: bounds compile-cache memory, survives one
+        # cell's failure, and parallel-safe to re-run with --skip-existing
+        from repro import configs as configs_lib
+
+        failures = []
+        for arch, shape in configs_lib.all_cells():
+            for mesh_kind in meshes:
+                fname = os.path.join(
+                    artifact_dir, f"{arch}__{shape}__{mesh_kind}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    print(f"CACHED {arch}/{shape}/{mesh_kind}")
+                    continue
+                cmd = [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                    "--artifact-dir", artifact_dir,
+                ]
+                r = subprocess.run(cmd)
+                if r.returncode != 0:
+                    failures.append((arch, shape, mesh_kind))
+        if failures:
+            print("FAILURES:", failures)
+            sys.exit(1)
+        print("all cells green")
+        return
+
+    try:
+        run_cell(args.arch, args.shape, meshes[0], artifact_dir,
+                 variant=args.variant)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

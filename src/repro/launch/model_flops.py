@@ -1,0 +1,155 @@
+"""Analytic MODEL_FLOPS per cell — the 'useful compute' numerator of the
+MODEL_FLOPS / HLO_FLOPs ratio in §Roofline (catches remat/redundancy waste).
+
+Conventions:
+* LM train:   6 * N_active * tokens  (fwd 2x + bwd 4x) + causal attention
+              12 * L * B * S^2/2 * H * dh (score+out, fwd+bwd)
+* LM prefill: 2 * N_active * tokens + attention fwd term
+* LM decode:  2 * N_active * B  + 4 * L * B * S_cache * KV_eff * dh
+* GNN train:  6 * (edge-path flops + node-mix flops)
+* RecSys:     6x (train) or 2x (serve) the dense MLP/interaction flops;
+              embedding GATHERS are bytes, not flops, and are excluded.
+
+All values are GLOBAL (whole job); divide by n_devices when comparing with
+per-device cost_analysis flops.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+
+def estimate(plan) -> dict:
+    fam = _family(plan)
+    fn = {"lm": _lm, "gnn": _gnn, "recsys": _recsys}[fam]
+    flops, n_params, n_active = fn(plan)
+    return {
+        "model_flops_global": float(flops),
+        "param_count": int(n_params),
+        "active_param_count": int(n_active),
+    }
+
+
+def _family(plan) -> str:
+    mod = type(plan.cfg).__module__
+    if "transformer" in mod:
+        return "lm"
+    if "mace" in mod:
+        return "gnn"
+    return "recsys"
+
+
+def _lm(plan):
+    cfg = plan.cfg
+    from repro import configs as C
+
+    cell = C.get_arch(plan.arch_id).cell(plan.shape)
+    B, S = cell.dims["global_batch"], cell.dims["seq_len"]
+    N = cfg.param_count()
+    Na = cfg.active_param_count()
+    L, H, dh, KV = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.n_kv_heads
+
+    # attention fwd: QK^T + PV = 2 matmuls x 2 flops/MAC over S^2/2 causal
+    # positions, per layer per batch row
+    attn_fwd = 4 * L * B * (S * S / 2) * H * dh
+
+    if plan.kind == "train":
+        tokens = B * S
+        dense = 6 * Na * tokens
+        return dense + 3 * attn_fwd, N, Na       # bwd = 2x fwd
+    if plan.kind == "prefill":
+        tokens = B * S
+        dense = 2 * Na * tokens
+        return dense + attn_fwd, N, Na
+    if plan.kind == "decode":
+        dense = 2 * Na * B
+        # one query against S cached positions, per layer; GQA contracts over
+        # H query heads (kv replicated logically)
+        eff_S = 0
+        for w in cfg.layer_pattern:
+            eff_S += min(w, S) if w else S
+        eff_S /= len(cfg.layer_pattern)
+        attn = 2 * 2 * L * B * eff_S * H * dh
+        return dense + attn, N, Na
+    raise ValueError(plan.kind)
+
+
+def _gnn(plan):
+    cfg = plan.cfg
+    from repro import configs as C
+    from repro.models.mace import _N_A_PATHS, _N_MSG0, _N_MSG1, _N_MSG2
+
+    cell = C.get_arch(plan.arch_id).cell(plan.shape)
+    E, Nn = cell.dims["n_edges"], cell.dims["n_nodes"]
+    Ch = cfg.channels
+    irrep = 1 + 3 + 9
+    # per edge: radial MLP + path products + weighting
+    rad = 2 * (cfg.n_rbf * cfg.radial_hidden + cfg.radial_hidden * Ch * _N_A_PATHS)
+    paths = 40 * Ch            # ~#mul-adds across the 12 Cartesian paths
+    per_edge = rad + paths
+    # per node: B-basis products + channel mixing linears + self linears
+    mix = 2 * Ch * Ch * (_N_MSG0 + 3 * _N_MSG1 + 9 * _N_MSG2 + irrep)
+    corr = 120 * Ch
+    per_node = mix + corr
+    fwd = cfg.n_layers * (E * per_edge + Nn * per_node) + \
+        2 * Nn * cfg.d_feat * Ch
+    n_params = _count_params(cfg, "gnn")
+    return 3 * fwd, n_params, n_params  # train: fwd + 2x bwd
+
+
+def _recsys(plan):
+    cfg = plan.cfg
+    from repro import configs as C
+
+    cell = C.get_arch(plan.arch_id).cell(plan.shape)
+    B = cell.dims["batch"]
+    F, d = cfg.n_sparse, cfg.embed_dim
+
+    def mlp_flops(dims):
+        return sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+
+    per_ex = 0
+    if cfg.model == "dlrm":
+        per_ex += mlp_flops((cfg.n_dense,) + cfg.bot_mlp)
+        nf = F + 1
+        per_ex += 2 * nf * nf * d  # dot interaction
+        per_ex += mlp_flops((nf * (nf - 1) // 2 + cfg.bot_mlp[-1],) + cfg.top_mlp)
+    elif cfg.model == "autoint":
+        di = d
+        for _ in range(cfg.n_attn_layers):
+            do = cfg.n_heads * cfg.d_attn
+            per_ex += 4 * 2 * F * di * do + 2 * 2 * F * F * do
+            di = do
+        per_ex += 2 * F * di
+    elif cfg.model == "wide_deep":
+        per_ex += mlp_flops((F * d,) + cfg.mlp + (1,))
+    elif cfg.model == "xdeepfm":
+        hk = F
+        for h in cfg.cin_layers:
+            per_ex += 2 * hk * F * d + 2 * hk * F * h * d
+            hk = h
+        per_ex += mlp_flops((F * d,) + cfg.mlp + (1,))
+    # per_ex already counts 2 flops/MAC; train = fwd + 2x bwd = 3x fwd
+    mult = 3 if plan.kind == "train" else 1
+    flops = mult * per_ex * B
+    if plan.kind == "retrieval":
+        flops = 2 * B * cell.dims["n_candidates"] * d
+    n_params = cfg.total_rows * d
+    return flops, n_params, n_params
+
+
+def _count_params(cfg, family: str) -> int:
+    import jax
+
+    if family == "gnn":
+        from repro.models.mace import init_params
+        shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+        return sum(int(_prod(s.shape)) for s in jax.tree.leaves(shapes))
+    raise ValueError(family)
+
+
+def _prod(t):
+    n = 1
+    for x in t:
+        n *= x
+    return n

@@ -1,0 +1,161 @@
+"""nSimplex-Zen retrieval serving — the paper's technique as a production
+feature (DESIGN.md §3).
+
+Offline:  ``build_index`` fits the transform on a witness sample, projects the
+          corpus to (N, k) apex coordinates (one pdist + one triangular solve,
+          both kernel paths), and shards the reduced index over the mesh.
+Online:   ``ZenServer.query`` projects a query batch (k reference distances),
+          scores it against the sharded index with the fused Zen kernel,
+          merges per-shard top-k, and optionally re-ranks the candidate pool
+          with true distances (paper [50]'s deployment pattern).
+
+CLI (CPU demo):  PYTHONPATH=src python -m repro.launch.serve --n 20000 --dim \
+                 256 --k 16 --queries 64
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import metrics as metrics_lib
+from repro.core import zen as zen_lib
+from repro.core.projection import NSimplexTransform, select_references
+from repro.kernels import ops as kernel_ops
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ZenIndex:
+    transform: NSimplexTransform
+    coords: Array            # (N, k) apex coordinates (possibly sharded)
+    corpus: Optional[Array]  # original vectors for re-ranking (optional)
+
+    @property
+    def size(self) -> int:
+        return self.coords.shape[0]
+
+
+def build_index(
+    corpus: Array,
+    k: int,
+    *,
+    metric: str = "euclidean",
+    key: Optional[jax.Array] = None,
+    mesh=None,
+    keep_corpus: bool = True,
+) -> ZenIndex:
+    """Fit on the corpus (witness = corpus sample) and project every row."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tr = select_references(corpus, k, key, metric=metric)
+    coords = tr.transform(corpus)
+    if mesh is not None:
+        rows = P(tuple(mesh.axis_names))  # shard rows over the whole mesh
+        coords = jax.device_put(coords, NamedSharding(mesh, P(rows, None)))
+    return ZenIndex(transform=tr, coords=coords,
+                    corpus=corpus if keep_corpus else None)
+
+
+class ZenServer:
+    """Batched k-NN serving over a reduced index."""
+
+    def __init__(self, index: ZenIndex, *, mode: str = "zen",
+                 rerank_factor: int = 0, chunk: int = 8192):
+        self.index = index
+        self.mode = mode
+        self.rerank_factor = rerank_factor
+        self.chunk = chunk
+        self._stats = {"queries": 0, "batches": 0, "latency_s": []}
+
+    def query(self, queries: Array, n_neighbors: int = 10
+              ) -> Tuple[Array, Array]:
+        """(Q, m) raw queries -> (distances, ids), each (Q, n_neighbors)."""
+        t0 = time.time()
+        qp = self.index.transform.transform(queries)
+        n_fetch = n_neighbors * max(self.rerank_factor, 1)
+        d, ids = zen_lib.knn_search(
+            qp, self.index.coords, n_neighbors=min(n_fetch, self.index.size),
+            mode=self.mode,
+            chunk=self.chunk if self.index.size > self.chunk else 0,
+        )
+        if self.rerank_factor and self.index.corpus is not None:
+            d, ids = self._rerank(queries, ids, n_neighbors)
+        else:
+            d, ids = d[:, :n_neighbors], ids[:, :n_neighbors]
+        self._stats["queries"] += int(queries.shape[0])
+        self._stats["batches"] += 1
+        self._stats["latency_s"].append(time.time() - t0)
+        return d, ids
+
+    def _rerank(self, queries: Array, cand_ids: Array, n_neighbors: int
+                ) -> Tuple[Array, Array]:
+        """Exact re-rank of the Zen candidate pool with true distances."""
+        cands = self.index.corpus[cand_ids]          # (Q, C, m)
+        m = metrics_lib.get_metric(self.index.transform.metric)
+        qn = m.normalize(queries) if m.normalize is not None else queries
+        cn = m.normalize(cands) if m.normalize is not None else cands
+        d = jnp.linalg.norm(
+            qn[:, None, :].astype(jnp.float32) - cn.astype(jnp.float32), axis=-1
+        )
+        dd, pos = jax.lax.top_k(-d, n_neighbors)
+        return -dd, jnp.take_along_axis(cand_ids, pos, axis=1)
+
+    def stats(self) -> dict:
+        lat = np.asarray(self._stats["latency_s"] or [0.0])
+        return {
+            "queries": self._stats["queries"],
+            "batches": self._stats["batches"],
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--n", type=int, default=20000)
+    p.add_argument("--dim", type=int, default=256)
+    p.add_argument("--k", type=int, default=16)
+    p.add_argument("--queries", type=int, default=64)
+    p.add_argument("--batches", type=int, default=4)
+    p.add_argument("--neighbors", type=int, default=10)
+    p.add_argument("--metric", default="euclidean")
+    p.add_argument("--rerank", type=int, default=4)
+    args = p.parse_args()
+
+    from repro.core import quality
+    from repro.data import synthetic as syn
+
+    key = jax.random.PRNGKey(0)
+    corpus = syn.manifold_space(key, args.n, args.dim, args.dim // 8)
+    index = build_index(corpus, args.k, metric=args.metric)
+    server = ZenServer(index, rerank_factor=args.rerank)
+    print(f"index: {index.size} x {args.k} (from dim {args.dim})")
+
+    qkey = jax.random.fold_in(key, 1)
+    recalls = []
+    for b in range(args.batches):
+        q = syn.manifold_space(jax.random.fold_in(qkey, b), args.queries,
+                               args.dim, args.dim // 8)
+        d, ids = server.query(q, args.neighbors)
+        true_d = metrics_lib.pairwise(args.metric, q, corpus)
+        _, true_ids = jax.lax.top_k(-true_d, args.neighbors)
+        hit = np.mean([
+            len(set(np.asarray(ids)[i]) & set(np.asarray(true_ids)[i]))
+            / args.neighbors
+            for i in range(args.queries)
+        ])
+        recalls.append(hit)
+    print(f"recall@{args.neighbors}: {np.mean(recalls):.3f}")
+    print("latency:", server.stats())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,355 @@
+"""Step builders: assemble (function, abstract args, shardings) per
+(architecture x shape cell) — shared by the dry-run, the trainer and serving.
+
+``build_plan(arch_id, shape, multi_pod=...)`` returns a LoweringPlan whose
+``lower(mesh)`` produces the jit-lowered computation with every input bound to
+a ShapeDtypeStruct (no device allocation) and production shardings attached.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as configs_lib
+from repro.distributed import sharding as shard_lib
+from repro.models import mace as mace_lib
+from repro.models import recsys as recsys_lib
+from repro.models import transformer as tfm
+from repro.optim import AdamW
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class LoweringPlan:
+    arch_id: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: Tuple[Any, ...]           # pytrees of ShapeDtypeStruct
+    in_specs: Tuple[Any, ...]       # matching pytrees of PartitionSpec
+    out_specs: Any                  # pytree of PartitionSpec or None (auto)
+    cfg: Any = None
+    skip: Optional[str] = None
+
+    def lower(self, mesh):
+        to_sharding = lambda spec: NamedSharding(mesh, spec)
+        in_sh = jax.tree.map(
+            to_sharding, self.in_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        out_sh = None
+        if self.out_specs is not None:
+            out_sh = jax.tree.map(
+                to_sharding, self.out_specs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        # ambient mesh context: with_sharding_constraint inside the model code
+        # takes bare PartitionSpecs and resolves them against this mesh.
+        with mesh:
+            jitted = jax.jit(self.fn, in_shardings=in_sh, out_shardings=out_sh)
+            return jitted.lower(*self.args)
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)
+
+
+def _broadcast_spec(tree, spec):
+    return jax.tree.map(lambda _: spec, tree)
+
+
+def make_optimizer() -> AdamW:
+    return AdamW(learning_rate=3e-4, weight_decay=0.01, clip_norm=1.0)
+
+
+# -- LM -------------------------------------------------------------------------
+
+
+def _lm_plan(spec, cfg, cell, multi_pod: bool) -> LoweringPlan:
+    dp = shard_lib.data_axes(multi_pod)
+    pspecs = None
+    params_shape = jax.eval_shape(partial(tfm.init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = shard_lib.lm_param_specs(params_shape)
+    ins = configs_lib.input_specs(spec, cfg, cell)
+    in_shard = shard_lib.lm_input_shardings(cell.kind, cell.shape, multi_pod, cfg)
+
+    act = tfm.ActShard(
+        tokens=P(dp, None),
+        hidden=P(dp, None, None),
+        logits=P(dp, None, "model") if cell.kind == "train" else P(dp, "model"),
+    )
+    if cell.shape == "long_500k":
+        act = tfm.ActShard(tokens=None, hidden=None, logits=P(None, "model"))
+
+    if cell.kind == "train":
+        opt = make_optimizer()
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        ospecs = shard_lib.opt_state_specs(pspecs)
+        nm = cfg.n_microbatches
+
+        def train_step(params, opt_state, batch):
+            if nm == 1:
+                (loss, aux), grads = jax.value_and_grad(
+                    lambda p: tfm.loss_fn(cfg, p, batch, shard=act),
+                    has_aux=True,
+                )(params)
+            else:
+                # gradient accumulation: activation memory / nm
+                tokens = batch["tokens"]
+                B = tokens.shape[0]
+                mb = tokens.reshape(nm, B // nm, tokens.shape[1])
+                mb = jax.lax.with_sharding_constraint(mb, P(None, dp, None))
+
+                def acc_body(carry, mb_tokens):
+                    gsum, lsum = carry
+                    (loss, _), grads = jax.value_and_grad(
+                        lambda p: tfm.loss_fn(
+                            cfg, p, {"tokens": mb_tokens}, shard=act),
+                        has_aux=True,
+                    )(params)
+                    gsum = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                    return (gsum, lsum + loss), None
+
+                gzero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), _ = jax.lax.scan(
+                    acc_body, (gzero, jnp.float32(0.0)), mb)
+                grads = jax.tree.map(
+                    lambda g, p: (g / nm).astype(p.dtype), gsum, params)
+                loss = lsum / nm
+                aux = {"loss": loss}
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = jax.tree.map(lambda p, u: p + u, params, updates)
+            return params, opt_state, aux
+
+        return LoweringPlan(
+            spec.arch_id, cell.shape, cell.kind, train_step,
+            args=(params_shape, opt_shape, ins["batch"]),
+            in_specs=(pspecs, ospecs, in_shard["batch"]),
+            out_specs=(pspecs, ospecs, P()),
+            cfg=cfg, skip=cell.skip,
+        )
+
+    if cell.kind == "prefill":
+        def prefill_step(params, tokens):
+            return tfm.prefill(cfg, params, tokens, shard=act)
+
+        cache_shape = jax.eval_shape(
+            lambda: tfm.init_kv_cache(cfg, cell.dims["global_batch"],
+                                      cell.dims["seq_len"]))
+        cache_spec = _broadcast_spec(cache_shape, P(None, dp, "model", None, None))
+        return LoweringPlan(
+            spec.arch_id, cell.shape, cell.kind, prefill_step,
+            args=(params_shape, ins["tokens"]),
+            in_specs=(pspecs, in_shard["tokens"]),
+            out_specs=((P(dp, "model")), cache_spec),
+            cfg=cfg, skip=cell.skip,
+        )
+
+    if cell.kind == "decode":
+        def decode_step(params, cache, token, cache_len):
+            return tfm.decode_step(cfg, params, cache, token, cache_len, shard=act)
+
+        cache_spec = _broadcast_spec(ins["cache"], in_shard["cache"])
+        logits_spec = act.logits
+        return LoweringPlan(
+            spec.arch_id, cell.shape, cell.kind, decode_step,
+            args=(params_shape, ins["cache"], ins["token"], ins["cache_len"]),
+            in_specs=(pspecs, cache_spec, in_shard["token"], in_shard["cache_len"]),
+            out_specs=(logits_spec, cache_spec),
+            cfg=cfg, skip=cell.skip,
+        )
+
+    raise ValueError(cell.kind)
+
+
+# -- GNN -------------------------------------------------------------------------
+
+
+def _gnn_plan(spec, cfg, cell, multi_pod: bool) -> LoweringPlan:
+    import dataclasses as dc
+
+    from repro.configs import mace as mace_cfg_mod
+
+    dp = shard_lib.data_axes(multi_pod)
+    # bind the per-shape raw feature width (both full and reduced configs)
+    cfg = mace_cfg_mod.for_shape(cfg, cell.dims["d_feat"])
+    if (cell.dims["n_edges"] > 8_000_000 and cfg.edge_chunks == 1
+            and not multi_pod):
+        # full-batch giant graphs: edge-chunked A-basis accumulation (§Perf).
+        # Disabled on the 3-axis mesh: XLA SPMD mis-partitions the channel-
+        # sharded gather inside the chunk scan there ("Slice dim size 128
+        # greater than dynamic slice dimension: 8" hlo-verifier failure);
+        # the unchunked lowering compiles on both meshes.
+        cfg = dataclasses.replace(cfg, edge_chunks=16)
+    params_shape = jax.eval_shape(
+        partial(mace_lib.init_params, cfg), jax.random.PRNGKey(0)
+    )
+    pspecs = shard_lib.gnn_param_specs(params_shape)
+    ins = configs_lib.input_specs(spec, cfg, cell)
+    static = ins["static"]
+    in_shard_all = shard_lib.gnn_input_shardings(multi_pod)["batch"]
+    in_shard = {k: in_shard_all[k] for k in ins["batch"]}
+
+    opt = make_optimizer()
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    ospecs = shard_lib.opt_state_specs(pspecs)
+
+    def train_step(params, opt_state, batch):
+        full_batch = dict(batch, **static)
+
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: mace_lib.loss_fn(
+                cfg, p, full_batch, edge_axes=dp, channel_axes="model"
+            ),
+            has_aux=True,
+        )(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return params, opt_state, aux
+
+    return LoweringPlan(
+        spec.arch_id, cell.shape, cell.kind, train_step,
+        args=(params_shape, opt_shape, ins["batch"]),
+        in_specs=(pspecs, ospecs, in_shard),
+        out_specs=(pspecs, ospecs, P()),
+        cfg=cfg, skip=cell.skip,
+    )
+
+
+# -- RecSys -----------------------------------------------------------------------
+
+
+def _recsys_plan(spec, cfg, cell, multi_pod: bool) -> LoweringPlan:
+    dp = shard_lib.data_axes(multi_pod)
+    params_shape = jax.eval_shape(
+        partial(recsys_lib.init_params, cfg), jax.random.PRNGKey(0)
+    )
+    pspecs = shard_lib.recsys_param_specs(params_shape)
+    ins = configs_lib.input_specs(spec, cfg, cell)
+    in_shard_all = shard_lib.recsys_input_shardings(cell.kind, multi_pod)
+    in_shard = {k: in_shard_all["batch"][k] for k in ins["batch"]}
+    emb_shard = P(dp, None, None) if cell.kind != "retrieval" else None
+    act_shard = P(dp, "model", None) if cell.kind != "retrieval" else None
+
+    if cell.kind == "train":
+        opt = make_optimizer()
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        ospecs = shard_lib.opt_state_specs(pspecs)
+
+        def train_step(params, opt_state, batch):
+            (loss, aux), grads = jax.value_and_grad(
+                lambda p: recsys_lib.loss_fn(
+                    cfg, p, batch, emb_shard=emb_shard, act_shard=act_shard
+                ),
+                has_aux=True,
+            )(params)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = jax.tree.map(lambda p, u: p + u, params, updates)
+            return params, opt_state, aux
+
+        return LoweringPlan(
+            spec.arch_id, cell.shape, cell.kind, train_step,
+            args=(params_shape, opt_shape, ins["batch"]),
+            in_specs=(pspecs, ospecs, in_shard),
+            out_specs=(pspecs, ospecs, P()),
+            cfg=cfg, skip=cell.skip,
+        )
+
+    if cell.kind == "serve":
+        def serve_step(params, batch):
+            return recsys_lib.forward(
+                cfg, params, batch, emb_shard=emb_shard, act_shard=act_shard
+            )
+
+        return LoweringPlan(
+            spec.arch_id, cell.shape, cell.kind, serve_step,
+            args=(params_shape, ins["batch"]),
+            in_specs=(pspecs, in_shard),
+            out_specs=P(dp),
+            cfg=cfg, skip=cell.skip,
+        )
+
+    if cell.kind == "retrieval":
+        # candidates shard over the data axes (10^6 rows divide by 16/32 but
+        # not by the full 256/512-way mesh product)
+        cand_rows = dp
+
+        if getattr(cfg, "retrieval_mode", "dense") == "zen":
+            # the paper's technique at the serving layer: score against the
+            # nSimplex-reduced index (zen_k floats/candidate instead of
+            # embed_dim) — memory-roofline term drops by embed_dim/zen_k
+            from repro.core.simplex import BaseSimplex, apex_project
+            from repro.core.zen import estimate_pdist
+
+            def retrieval_step(params, batch, index):
+                q = recsys_lib.user_repr(cfg, params, batch)  # (B, d)
+                base = BaseSimplex(chol=index["chol"],
+                                   diag_g=index["diag_g"], d0=index["d0"])
+                # B x zen_k reference distances -> apex coordinates
+                from repro.core.metrics import euclidean_pdist
+                qp = apex_project(base, euclidean_pdist(q, index["refs"]))
+                d = estimate_pdist(qp, index["coords"], "zen")
+                scores, ids = jax.lax.top_k(-d, 100)
+                return {"scores": -scores, "ids": ids}
+
+            cand_specs = {
+                "coords": P(cand_rows, None),
+                "refs": P(), "chol": P(), "diag_g": P(), "d0": P(),
+            }
+            return LoweringPlan(
+                spec.arch_id, cell.shape, cell.kind, retrieval_step,
+                args=(params_shape, ins["batch"], ins["candidates"]),
+                in_specs=(pspecs, in_shard, cand_specs),
+                out_specs={"scores": P(), "ids": P()},
+                cfg=cfg, skip=cell.skip,
+            )
+
+        def retrieval_step(params, batch, candidates):
+            q = recsys_lib.user_repr(cfg, params, batch)
+            scores, ids = recsys_lib.retrieval_topk(q, candidates, k=100)
+            return {"scores": scores, "ids": ids}
+
+        return LoweringPlan(
+            spec.arch_id, cell.shape, cell.kind, retrieval_step,
+            args=(params_shape, ins["batch"], ins["candidates"]),
+            in_specs=(pspecs, in_shard, P(cand_rows, None)),
+            out_specs={"scores": P(), "ids": P()},
+            cfg=cfg, skip=cell.skip,
+        )
+
+    raise ValueError(cell.kind)
+
+
+# -- public ------------------------------------------------------------------------
+
+
+def build_plan(
+    arch_id: str,
+    shape: str,
+    *,
+    reduced: bool = False,
+    multi_pod: bool = False,
+    overrides: Optional[dict] = None,
+) -> LoweringPlan:
+    """overrides: config-field replacements (hillclimb variants), e.g.
+    {"unroll_layers": True, "n_microbatches": 4, "remat_policy": "dots"}."""
+    spec = configs_lib.get_arch(arch_id)
+    cell = spec.cell(shape)
+    cfg = spec.make_reduced() if reduced else spec.make_config()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if spec.family == "lm":
+        return _lm_plan(spec, cfg, cell, multi_pod)
+    if spec.family == "gnn":
+        return _gnn_plan(spec, cfg, cell, multi_pod)
+    if spec.family == "recsys":
+        return _recsys_plan(spec, cfg, cell, multi_pod)
+    raise ValueError(spec.family)

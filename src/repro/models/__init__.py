@@ -1,0 +1,4 @@
+"""Model zoo: LM transformers (dense + MoE), MACE equivariant GNN, RecSys."""
+from . import layers, mace, moe, recsys, transformer
+
+__all__ = ["layers", "mace", "moe", "recsys", "transformer"]

@@ -1,0 +1,182 @@
+"""Shared neural-net layers: norms, RoPE, attention (query-chunked), MLPs.
+
+Pure JAX (no flax): params are plain pytrees, layers are functions. Attention
+is written to behave well under GSPMD auto-sharding:
+
+* query-chunked softmax attention (``lax.map`` over query blocks) bounds the
+  score tensor at (B, H, qc, Skv) per step — enough for 32k prefill with remat;
+* the decode path (Sq == 1) is a direct einsum so a KV cache whose *sequence*
+  axis is sharded across the mesh reduces via GSPMD-inserted collectives
+  (sequence-parallel decode for the 500k-context shape);
+* GQA is expressed by reshaping query heads into (kv_head, group) so the
+  kv tensors are never materially repeated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6, *, plus_one: bool = False) -> Array:
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    xf = x.astype(acc)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(acc)
+    if plus_one:  # gemma-style (1 + w) parameterisation
+        w = 1.0 + w
+    return (y * w).astype(x.dtype)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: Array, positions: Array, *, theta: float = 10000.0) -> Array:
+    """Rotary embedding. x: (B, S, H, dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attn_block(
+    q: Array,  # (B, qc, KV, G, dh) f32-ready
+    k: Array,  # (B, Skv, KV, dh)
+    v: Array,
+    q_pos: Array,  # (B, qc)
+    kv_pos: Array,  # (B, Skv)
+    *,
+    causal: bool,
+    window: int,
+    attn_softcap: float,
+    scale: float,
+) -> Array:
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if attn_softcap:
+        scores = softcap(scores, attn_softcap)
+    mask = jnp.ones(
+        (q_pos.shape[0], 1, 1, q_pos.shape[1], kv_pos.shape[1]), bool
+    )
+    if causal:
+        mask &= (kv_pos[:, None, None, None, :] <= q_pos[:, None, None, :, None])
+    if window:
+        mask &= (
+            kv_pos[:, None, None, None, :]
+            > q_pos[:, None, None, :, None] - window
+        )
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out
+
+
+def attention(
+    q: Array,  # (B, Sq, H, dh)
+    k: Array,  # (B, Skv, KV, dh)
+    v: Array,  # (B, Skv, KV, dh)
+    *,
+    q_positions: Array,  # (B, Sq)
+    kv_positions: Array,  # (B, Skv)
+    causal: bool = True,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    query_chunk: int = 1024,
+    scale: Optional[float] = None,
+) -> Array:
+    """Softmax attention with GQA, causal/sliding-window masks and softcap.
+
+    Returns (B, Sq, H, dh). Query-chunked when Sq > query_chunk.
+    """
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else dh**-0.5
+    qg = q.reshape(B, Sq, KV, G, dh)
+
+    if Sq <= query_chunk:
+        out = _attn_block(
+            qg, k, v, q_positions, kv_positions,
+            causal=causal, window=window, attn_softcap=attn_softcap, scale=scale,
+        )
+        return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+    orig_sq = Sq
+    if Sq % query_chunk:  # pad ragged query lengths with masked dummies
+        pad = query_chunk - Sq % query_chunk
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)), constant_values=0)
+        Sq += pad
+    n_chunks = Sq // query_chunk
+    qg_c = qg.reshape(B, n_chunks, query_chunk, KV, G, dh)
+    qp_c = q_positions.reshape(B, n_chunks, query_chunk)
+
+    def one_chunk(args):
+        qc, qp = args
+        return _attn_block(
+            qc, k, v, qp, kv_positions,
+            causal=causal, window=window, attn_softcap=attn_softcap, scale=scale,
+        )
+
+    # lax.map over query chunks: score tensor bounded at (B, H, qc, Skv)
+    out = jax.lax.map(
+        one_chunk,
+        (jnp.moveaxis(qg_c, 1, 0), jnp.moveaxis(qp_c, 1, 0)),
+    )  # (n_chunks, B, qc, KV, G, dh)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, dh)
+    return out[:, :orig_sq].astype(q.dtype)
+
+
+# -- parameter helpers --------------------------------------------------------
+
+
+def dense_init(key: jax.Array, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in**-0.5
+    return (
+        jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale
+    ).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ActFn:
+    name: str
+
+    def __call__(self, x: Array) -> Array:
+        if self.name == "silu":
+            return jax.nn.silu(x)
+        if self.name == "gelu":
+            return jax.nn.gelu(x, approximate=True)
+        if self.name == "relu":
+            return jax.nn.relu(x)
+        raise ValueError(self.name)
+
+
+def mlp_glu(x: Array, wg: Array, wu: Array, wd: Array, act: ActFn) -> Array:
+    """Gated-linear-unit FFN (SwiGLU / GeGLU): down(act(x wg) * (x wu))."""
+    acc = jnp.float32
+    g = act(jnp.einsum("...d,df->...f", x, wg, preferred_element_type=acc))
+    u = jnp.einsum("...d,df->...f", x, wu, preferred_element_type=acc)
+    return jnp.einsum(
+        "...f,fd->...d", (g * u).astype(x.dtype), wd, preferred_element_type=acc
+    ).astype(x.dtype)

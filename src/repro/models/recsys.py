@@ -1,0 +1,317 @@
+"""RecSys / ranking models: AutoInt, Wide&Deep, DLRM (RM2), xDeepFM.
+
+Shared substrate:
+* **EmbeddingBag in JAX** (taxonomy §RecSys: no native torch-style
+  EmbeddingBag) — all per-field vocabularies are concatenated into one
+  (total_rows, dim) table with static per-field offsets; a lookup is one
+  gather (`jnp.take`), multi-hot bags reduce with ``jax.ops.segment_sum``.
+  At scale the table rows shard over the ``model`` axis — GSPMD turns the
+  gather into per-shard partial gathers + an all-reduce, which is exactly the
+  embedding-exchange collective the roofline section tracks.
+* feature-interaction op per model (self-attention / concat / dot / CIN);
+* small dense MLP head with sigmoid-BCE loss;
+* a **retrieval head** scoring one query against a candidate embedding matrix
+  (``retrieval_cand`` shape): dense dot-product baseline plus the
+  nSimplex-Zen-reduced variant (the paper's technique as a serving feature).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+Array = jax.Array
+
+# Criteo Kaggle categorical cardinalities (public, arXiv:1906.00091 scale)
+CRITEO_26 = [
+    1460, 583, 10_131_227, 2_202_608, 305, 24, 12_517, 633, 3, 93_145, 5_683,
+    8_351_593, 3_194, 27, 14_992, 5_461_306, 10, 5_652, 2_173, 4, 7_046_547,
+    18, 15, 286_181, 105, 142_572,
+]
+
+
+def criteo_vocab(n_fields: int) -> list[int]:
+    """n_fields vocab sizes: the 26 Criteo categorical tables, extended with
+    128-bucket quantised dense features (the 39-field convention of the
+    AutoInt / xDeepFM papers), then hashed cross-features of 10^4."""
+    sizes = list(CRITEO_26)
+    sizes += [128] * 13  # bucketised dense features -> 39
+    while len(sizes) < n_fields:
+        sizes.append(10_000)
+    return sizes[:n_fields]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    model: str                      # autoint | wide_deep | dlrm | xdeepfm
+    n_sparse: int
+    embed_dim: int
+    vocab_sizes: Tuple[int, ...]
+    n_dense: int = 0
+    # dlrm
+    bot_mlp: Tuple[int, ...] = ()
+    top_mlp: Tuple[int, ...] = ()
+    # autoint
+    n_attn_layers: int = 0
+    n_heads: int = 0
+    d_attn: int = 0
+    # wide&deep / xdeepfm MLPs
+    mlp: Tuple[int, ...] = ()
+    cin_layers: Tuple[int, ...] = ()
+    dtype: Any = jnp.float32
+    table_dtype: Any = jnp.float32
+    # retrieval_cand scoring: "dense" dot-product over (N_cand, embed_dim), or
+    # "zen" over an nSimplex-reduced (N_cand, zen_k) index — the paper's
+    # technique as a first-class serving feature (bytes scanned / embed_dim*4
+    # per candidate drop to zen_k*4)
+    retrieval_mode: str = "dense"
+    zen_k: int = 16
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    @property
+    def padded_rows(self) -> int:
+        """Table rows padded to a mesh-shardable multiple (row sharding over
+        the model axis requires divisibility); padding rows are unreachable
+        because per-field offsets never address them."""
+        return (self.total_rows + 511) // 512 * 512
+
+    @property
+    def offsets(self) -> Tuple[int, ...]:
+        out, acc = [], 0
+        for v in self.vocab_sizes:
+            out.append(acc)
+            acc += v
+        return tuple(out)
+
+    def param_count(self) -> int:
+        # dominated by the embedding table
+        n = self.total_rows * self.embed_dim
+        return n  # MLPs counted at init in benchmarks
+
+
+def _mlp_params(key, dims: Sequence[int], dtype) -> list:
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {"w": dense_init(ks[i], (dims[i], dims[i + 1]), dtype=dtype),
+         "b": jnp.zeros((dims[i + 1],), dtype)}
+        for i in range(len(dims) - 1)
+    ]
+
+
+def _mlp_apply(layers: list, x: Array, *, final_act: bool = False) -> Array:
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i + 1 < len(layers) or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_params(cfg: RecsysConfig, key: jax.Array) -> dict:
+    keys = iter(jax.random.split(key, 32))
+    F, d = cfg.n_sparse, cfg.embed_dim
+    params: dict = {
+        # one concatenated table; per-field row offsets are static config
+        "table": (
+            jax.random.normal(next(keys), (cfg.padded_rows, d), jnp.float32)
+            * (d**-0.5)
+        ).astype(cfg.table_dtype),
+    }
+    if cfg.model == "dlrm":
+        params["bot"] = _mlp_params(next(keys), (cfg.n_dense,) + cfg.bot_mlp, cfg.dtype)
+        n_f = F + 1  # embeddings + bottom-MLP output
+        n_int = n_f * (n_f - 1) // 2
+        params["top"] = _mlp_params(
+            next(keys), (n_int + cfg.bot_mlp[-1],) + cfg.top_mlp, cfg.dtype
+        )
+    elif cfg.model == "autoint":
+        lays = []
+        d_in = d
+        for _ in range(cfg.n_attn_layers):
+            lays.append({
+                "wq": dense_init(next(keys), (d_in, cfg.n_heads * cfg.d_attn), dtype=cfg.dtype),
+                "wk": dense_init(next(keys), (d_in, cfg.n_heads * cfg.d_attn), dtype=cfg.dtype),
+                "wv": dense_init(next(keys), (d_in, cfg.n_heads * cfg.d_attn), dtype=cfg.dtype),
+                "wres": dense_init(next(keys), (d_in, cfg.n_heads * cfg.d_attn), dtype=cfg.dtype),
+            })
+            d_in = cfg.n_heads * cfg.d_attn
+        params["attn"] = lays
+        params["out"] = _mlp_params(next(keys), (F * d_in, 1), cfg.dtype)
+    elif cfg.model == "wide_deep":
+        params["wide"] = (
+            jax.random.normal(next(keys), (cfg.padded_rows, 1), jnp.float32) * 0.01
+        ).astype(cfg.table_dtype)
+        params["deep"] = _mlp_params(next(keys), (F * d,) + cfg.mlp + (1,), cfg.dtype)
+    elif cfg.model == "xdeepfm":
+        cins, h_prev = [], F
+        for h in cfg.cin_layers:
+            cins.append(
+                {"w": dense_init(next(keys), (h_prev * F, h), dtype=cfg.dtype)}
+            )
+            h_prev = h
+        params["cin"] = cins
+        params["cin_out"] = _mlp_params(
+            next(keys), (int(sum(cfg.cin_layers)), 1), cfg.dtype
+        )
+        params["dnn"] = _mlp_params(next(keys), (F * d,) + cfg.mlp + (1,), cfg.dtype)
+        params["linear"] = (
+            jax.random.normal(next(keys), (cfg.padded_rows, 1), jnp.float32) * 0.01
+        ).astype(cfg.table_dtype)
+    else:
+        raise ValueError(cfg.model)
+    return params
+
+
+# -- embedding bag -------------------------------------------------------------
+
+
+def embedding_bag(
+    table: Array,
+    indices: Array,          # (B, F) one-hot-per-field or (B, F, L) multi-hot
+    offsets: Tuple[int, ...],
+    *,
+    weights: Optional[Array] = None,
+    shard_spec: Any = None,
+) -> Array:
+    """Gather per-field embeddings; multi-hot bags sum-reduce over L.
+
+    Returns (B, F, d). With the table row-sharded over the model axis, GSPMD
+    lowers the take() into per-shard gathers + all-reduce.
+    """
+    off = jnp.asarray(offsets, jnp.int32)
+    if indices.ndim == 2:
+        flat = indices + off[None, :]
+        emb = jnp.take(table, flat, axis=0)  # (B, F, d)
+    else:
+        B, F, L = indices.shape
+        flat = indices + off[None, :, None]
+        emb = jnp.take(table, flat, axis=0)  # (B, F, L, d)
+        if weights is not None:
+            emb = emb * weights[..., None]
+        emb = jnp.sum(emb, axis=2)
+    if shard_spec is not None:
+        emb = jax.lax.with_sharding_constraint(emb, shard_spec)
+    return emb.astype(jnp.float32)
+
+
+# -- model forwards ------------------------------------------------------------
+
+
+def forward(
+    cfg: RecsysConfig,
+    params: dict,
+    batch: dict,
+    *,
+    emb_shard: Any = None,
+    act_shard: Any = None,
+) -> Array:
+    """Logits (B,). batch: sparse (B,F[,L]) int32 [+ dense (B,n_dense) f32]."""
+    emb = embedding_bag(
+        params["table"], batch["sparse"], cfg.offsets, shard_spec=emb_shard
+    )  # (B, F, d)
+    B = emb.shape[0]
+
+    def constrain(x):
+        return (
+            jax.lax.with_sharding_constraint(x, act_shard)
+            if act_shard is not None else x
+        )
+
+    if cfg.model == "dlrm":
+        bot = _mlp_apply(params["bot"], batch["dense"].astype(jnp.float32),
+                         final_act=True)  # (B, d)
+        z = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, F+1, d)
+        inter = jnp.einsum("bfd,bgd->bfg", z, z,
+                           preferred_element_type=jnp.float32)
+        iu = jnp.triu_indices(z.shape[1], k=1)
+        flat = inter[:, iu[0], iu[1]]  # (B, n_int)
+        x = jnp.concatenate([bot, flat], axis=-1)
+        return _mlp_apply(params["top"], x)[:, 0]
+
+    if cfg.model == "autoint":
+        x = emb  # (B, F, d)
+        for l in params["attn"]:
+            H, da = cfg.n_heads, cfg.d_attn
+            q = (x @ l["wq"]).reshape(B, -1, H, da)
+            k = (x @ l["wk"]).reshape(B, -1, H, da)
+            v = (x @ l["wv"]).reshape(B, -1, H, da)
+            scores = jnp.einsum("bfhd,bghd->bhfg", q, k,
+                                preferred_element_type=jnp.float32)
+            probs = jax.nn.softmax(scores, axis=-1)
+            o = jnp.einsum("bhfg,bghd->bfhd", probs, v,
+                           preferred_element_type=jnp.float32)
+            o = o.reshape(B, x.shape[1], H * da)
+            x = jax.nn.relu(o + x @ l["wres"])
+            x = constrain(x)
+        return _mlp_apply(params["out"], x.reshape(B, -1))[:, 0]
+
+    if cfg.model == "wide_deep":
+        deep = _mlp_apply(params["deep"], emb.reshape(B, -1))[:, 0]
+        wide = embedding_bag(params["wide"], batch["sparse"], cfg.offsets)
+        return deep + jnp.sum(wide, axis=(1, 2))
+
+    if cfg.model == "xdeepfm":
+        x0 = emb  # (B, F, d)
+        xk = x0
+        pooled = []
+        for l in params["cin"]:
+            z = jnp.einsum("bhd,bmd->bhmd", xk, x0,
+                           preferred_element_type=jnp.float32)  # (B,Hk,F,d)
+            z = constrain(z.reshape(B, -1, z.shape[-1]))  # (B, Hk*F, d)
+            xk = jnp.einsum("bpd,ph->bhd", z, l["w"],
+                            preferred_element_type=jnp.float32)
+            pooled.append(jnp.sum(xk, axis=-1))  # (B, Hk+1)
+        cin_logit = _mlp_apply(params["cin_out"],
+                               jnp.concatenate(pooled, axis=-1))[:, 0]
+        dnn_logit = _mlp_apply(params["dnn"], emb.reshape(B, -1))[:, 0]
+        lin = embedding_bag(params["linear"], batch["sparse"], cfg.offsets)
+        return cin_logit + dnn_logit + jnp.sum(lin, axis=(1, 2))
+
+    raise ValueError(cfg.model)
+
+
+def loss_fn(cfg: RecsysConfig, params: dict, batch: dict, **kw) -> Tuple[Array, dict]:
+    """Sigmoid binary cross-entropy vs batch['labels'] (B,) in {0, 1}."""
+    logits = forward(cfg, params, batch, **kw)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return loss, {"loss": loss}
+
+
+# -- retrieval head (paper integration point) ----------------------------------
+
+
+def user_repr(cfg: RecsysConfig, params: dict, batch: dict) -> Array:
+    """Query-side representation (B, embed_dim): mean of field embeddings —
+    the Euclidean space handed to NSimplexTransform for reduced-candidate
+    scoring."""
+    emb = embedding_bag(params["table"], batch["sparse"], cfg.offsets)
+    return jnp.mean(emb, axis=1)
+
+
+def retrieval_scores(query_repr: Array, candidates: Array) -> Array:
+    """Dense dot-product scoring: (B, d) x (N_cand, d) -> (B, N_cand).
+
+    One batched matmul — never a loop (taxonomy §RecSys). The nSimplex-Zen
+    variant scores ``zen_estimate(project(q), project(c))`` instead; see
+    launch/serve.py.
+    """
+    return jnp.einsum(
+        "bd,nd->bn", query_repr, candidates, preferred_element_type=jnp.float32
+    )
+
+
+def retrieval_topk(
+    query_repr: Array, candidates: Array, k: int = 100
+) -> Tuple[Array, Array]:
+    scores = retrieval_scores(query_repr, candidates)
+    return jax.lax.top_k(scores, k)

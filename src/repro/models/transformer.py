@@ -1,0 +1,537 @@
+"""Decoder-only transformer family: dense + MoE, GQA, QKV-bias, RoPE,
+sliding-window/global alternating layers, logit soft-capping.
+
+Covers the assigned LM architectures:
+  qwen2-moe-a2.7b, granite-moe-3b-a800m (MoE), qwen1.5-0.5b, gemma2-2b,
+  granite-8b (dense).
+
+Implementation notes:
+* **scan-over-layers**: layer params are stacked along a leading axis and the
+  stack is consumed by ``lax.scan`` — compile time and HLO size stay flat in
+  depth (MaxText-style). Architectures with a repeating layer *pattern*
+  (gemma-2 local/global alternation) scan over groups of ``len(pattern)``
+  layers so each position keeps a static window size.
+* **remat**: the scan body is wrapped in ``jax.checkpoint`` with a selectable
+  policy (cfg.remat_policy), the standard memory/compute knob at scale.
+* **activation sharding**: strategic ``with_sharding_constraint`` points are
+  parameterised by an ``ActShard`` record so the same code runs single-device
+  (all None) and under the production mesh.
+* decode keeps a **ring buffer** KV cache for sliding-window layers (length
+  = window) and a full-length cache for global layers, so the 500k-context
+  shape only materialises 500k KV for the global half of the stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from . import moe as moe_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ActShard:
+    """Activation sharding constraints (None = leave to GSPMD)."""
+
+    tokens: Any = None      # (batch, seq)
+    hidden: Any = None      # (batch, seq, d_model)
+    logits: Any = None      # (batch, seq, vocab)
+    kv_cache: Any = None    # (groups, batch, seq, kv_heads, d_head)
+
+    @staticmethod
+    def none() -> "ActShard":
+        return ActShard()
+
+
+def _constrain(x: Array, spec) -> Array:
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: Optional[int] = None          # default d_model // n_heads
+    # MoE (n_experts == 0 -> dense)
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 4096
+    # attention / misc
+    qkv_bias: bool = False
+    logit_softcap: float = 0.0
+    attn_softcap: float = 0.0
+    layer_pattern: Tuple[int, ...] = (0,)  # window per position; 0 = global
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    act: str = "silu"
+    post_norms: bool = False               # gemma-2 style post-block norms
+    norm_plus_one: bool = False            # gemma (1 + w) RMSNorm
+    embed_scale: bool = False              # gemma sqrt(d_model) embed scaling
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    remat_policy: str = "minimal"          # none | minimal | dots
+    query_chunk: int = 1024
+    # unroll the layer scan into a python loop: larger HLO but (a) XLA can
+    # optimize across layers and (b) cost_analysis counts every layer (a
+    # while-loop body is costed ONCE regardless of trip count — the roofline
+    # pass needs unrolled lowering for honest FLOP totals)
+    unroll_layers: bool = False
+    # gradient accumulation: split the batch into this many microbatches and
+    # accumulate grads (activation memory / n_microbatches)
+    n_microbatches: int = 1
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rows padded to a mesh-shardable multiple (embedding rows and
+        logits shard over the model axis). Padded logits are masked to -inf
+        before the softmax, so semantics are unchanged."""
+        if self.vocab_size % 256 == 0 or self.vocab_size < 256:
+            return self.vocab_size
+        return (self.vocab_size + 255) // 256 * 256
+
+    @property
+    def pattern_len(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.pattern_len == 0, (
+            self.n_layers, self.layer_pattern)
+        return self.n_layers // self.pattern_len
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        """Total parameters (for MODEL_FLOPS accounting)."""
+        dh, H, KV = self.head_dim, self.n_heads, self.n_kv_heads
+        attn = self.d_model * dh * (H + 2 * KV) + H * dh * self.d_model
+        if self.qkv_bias:
+            attn += dh * (H + 2 * KV)
+        if self.is_moe:
+            ffn = self.d_model * self.n_experts  # router
+            ffn += 3 * self.d_model * self.moe_d_ff * self.n_experts
+            if self.n_shared_experts:
+                ffn += 3 * self.d_model * self.moe_d_ff * self.n_shared_experts
+        else:
+            ffn = 3 * self.d_model * self.d_ff
+        norms = (4 if self.post_norms else 2) * self.d_model
+        per_layer = attn + ffn + norms
+        embed = self.vocab_size * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + self.d_model
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed top-k + shared only)."""
+        if not self.is_moe:
+            return self.param_count()
+        dh, H, KV = self.head_dim, self.n_heads, self.n_kv_heads
+        attn = self.d_model * dh * (H + 2 * KV) + H * dh * self.d_model
+        ffn = self.d_model * self.n_experts
+        ffn += 3 * self.d_model * self.moe_d_ff * (self.top_k + self.n_shared_experts)
+        per_layer = attn + ffn + 2 * self.d_model
+        embed = self.vocab_size * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + self.d_model
+
+
+# -- init ---------------------------------------------------------------------
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> dict:
+    dh, H, KV, D = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    G, PL = cfg.n_groups, cfg.pattern_len
+    keys = iter(jax.random.split(key, 64))
+    dt = cfg.dtype
+
+    def stack(shape, scale=None):
+        return L.dense_init(next(keys), (G, PL) + tuple(shape), scale, dt)
+
+    layer = {
+        "wq": stack((D, H * dh)),
+        "wk": stack((D, KV * dh)),
+        "wv": stack((D, KV * dh)),
+        "wo": stack((H * dh, D)),
+        "ln1": jnp.zeros((G, PL, D), dt) if cfg.norm_plus_one else jnp.ones((G, PL, D), dt),
+        "ln2": jnp.zeros((G, PL, D), dt) if cfg.norm_plus_one else jnp.ones((G, PL, D), dt),
+    }
+    if cfg.qkv_bias:
+        layer["bq"] = jnp.zeros((G, PL, H * dh), dt)
+        layer["bk"] = jnp.zeros((G, PL, KV * dh), dt)
+        layer["bv"] = jnp.zeros((G, PL, KV * dh), dt)
+    if cfg.post_norms:
+        zeros = jnp.zeros((G, PL, D), dt)
+        layer["ln1_post"] = zeros
+        layer["ln2_post"] = zeros
+    if cfg.is_moe:
+        E, F = moe_lib.padded_experts(cfg.n_experts), cfg.moe_d_ff
+        layer["router"] = stack((D, E), scale=D**-0.5)
+        layer["we_gate"] = stack((E, D, F))
+        layer["we_up"] = stack((E, D, F))
+        layer["we_down"] = stack((E, F, D), scale=F**-0.5)
+        if cfg.n_shared_experts:
+            Fs = F * cfg.n_shared_experts
+            layer["ws_gate"] = stack((D, Fs))
+            layer["ws_up"] = stack((D, Fs))
+            layer["ws_down"] = stack((Fs, D), scale=Fs**-0.5)
+            layer["ws_gate_logit"] = stack((D, 1), scale=D**-0.5)
+    else:
+        layer["w_gate"] = stack((D, cfg.d_ff))
+        layer["w_up"] = stack((D, cfg.d_ff))
+        layer["w_down"] = stack((cfg.d_ff, D), scale=cfg.d_ff**-0.5)
+
+    params = {
+        "embed": L.dense_init(next(keys), (cfg.padded_vocab, D), 1.0, dt),
+        "layers": layer,
+        "final_norm": jnp.zeros((D,), dt) if cfg.norm_plus_one else jnp.ones((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(next(keys), (D, cfg.padded_vocab), None, dt)
+    return params
+
+
+# -- layer body ---------------------------------------------------------------
+
+
+def _one_layer(
+    cfg: TransformerConfig,
+    p: dict,           # single-layer params (leading (G, PL) axes already indexed)
+    x: Array,          # (B, S, D)
+    positions: Array,  # (B, S)
+    window: int,
+    kv: Optional[Tuple[Array, Array]] = None,      # cached (k, v): (B, Skv, KV, dh)
+    kv_positions: Optional[Array] = None,
+) -> Tuple[Array, Tuple[Array, Array]]:
+    B, S, D = x.shape
+    dh, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    act = L.ActFn(cfg.act)
+    npo = cfg.norm_plus_one
+
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps, plus_one=npo)
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"], preferred_element_type=jnp.float32)
+    k = jnp.einsum("bsd,dh->bsh", h, p["wk"], preferred_element_type=jnp.float32)
+    v = jnp.einsum("bsd,dh->bsh", h, p["wv"], preferred_element_type=jnp.float32)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, dh).astype(cfg.dtype)
+    k = k.reshape(B, S, KV, dh).astype(cfg.dtype)
+    v = v.reshape(B, S, KV, dh).astype(cfg.dtype)
+    q = L.rope(q, positions, theta=cfg.rope_theta)
+    k = L.rope(k, positions, theta=cfg.rope_theta)
+
+    if kv is not None:
+        k_all = jnp.concatenate([kv[0], k], axis=1)
+        v_all = jnp.concatenate([kv[1], v], axis=1)
+        kv_pos = jnp.concatenate([kv_positions, positions], axis=1)
+    else:
+        k_all, v_all, kv_pos = k, v, positions
+
+    attn = L.attention(
+        q, k_all, v_all,
+        q_positions=positions, kv_positions=kv_pos,
+        causal=True, window=window, attn_softcap=cfg.attn_softcap,
+        query_chunk=cfg.query_chunk,
+    )
+    attn = jnp.einsum(
+        "bsf,fd->bsd", attn.reshape(B, S, H * dh), p["wo"],
+        preferred_element_type=jnp.float32,
+    ).astype(cfg.dtype)
+    if cfg.post_norms:
+        attn = L.rms_norm(attn, p["ln1_post"], cfg.norm_eps, plus_one=npo)
+    x = x + attn
+
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps, plus_one=npo)
+    if cfg.is_moe:
+        ffn = moe_lib.moe_ffn(cfg, p, h)
+        if cfg.n_shared_experts:
+            shared = L.mlp_glu(h, p["ws_gate"], p["ws_up"], p["ws_down"], act)
+            gate = jax.nn.sigmoid(
+                jnp.einsum("bsd,dk->bsk", h, p["ws_gate_logit"],
+                           preferred_element_type=jnp.float32)
+            ).astype(cfg.dtype)
+            ffn = ffn + gate * shared
+    else:
+        ffn = L.mlp_glu(h, p["w_gate"], p["w_up"], p["w_down"], act)
+    if cfg.post_norms:
+        ffn = L.rms_norm(ffn, p["ln2_post"], cfg.norm_eps, plus_one=npo)
+    x = x + ffn
+    return x, (k, v)
+
+
+def _scan_groups(cfg: TransformerConfig, body, x, layer_params, extra_xs=None):
+    """lax.scan over layer groups, or an unrolled python loop (see
+    cfg.unroll_layers). body(x, scanned) -> (x, y); ys are stacked."""
+    if not cfg.unroll_layers:
+        xs = layer_params if extra_xs is None else (layer_params, extra_xs)
+        return jax.lax.scan(body, x, xs)
+    ys = []
+    for g in range(cfg.n_groups):
+        gp = jax.tree.map(lambda a: a[g], layer_params)
+        scanned = gp if extra_xs is None else (
+            gp, jax.tree.map(lambda a: a[g], extra_xs))
+        x, y = body(x, scanned)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *leaves: jnp.stack(leaves, axis=0), *ys)
+    else:
+        ys = None
+    return x, ys
+
+
+def _remat(cfg: TransformerConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "minimal":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(cfg.remat_policy)
+
+
+def _lm_logits(cfg: TransformerConfig, params: dict, x: Array) -> Array:
+    """Project hidden states to (padded) vocab logits; softcap; mask padding."""
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", x, head,
+                        preferred_element_type=jnp.float32)
+    logits = L.softcap(logits, cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad, -1e30, logits)
+    return logits
+
+
+# -- forward: training --------------------------------------------------------
+
+
+def forward(
+    cfg: TransformerConfig,
+    params: dict,
+    tokens: Array,  # (B, S) int32
+    *,
+    shard: ActShard = ActShard.none(),
+) -> Array:
+    """Token logits (B, S, V)."""
+    B, S = tokens.shape
+    tokens = _constrain(tokens, shard.tokens)
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    x = _constrain(x, shard.hidden)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def group_body(x, group_params):
+        for pos in range(cfg.pattern_len):
+            p = jax.tree.map(lambda a: a[pos], group_params)
+            x, _ = _one_layer(cfg, p, x, positions, cfg.layer_pattern[pos])
+        x = _constrain(x, shard.hidden)
+        return x, None
+
+    body = _remat(cfg, group_body)
+    x, _ = _scan_groups(cfg, body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    logits = _lm_logits(cfg, params, x)
+    return _constrain(logits, shard.logits)
+
+
+def loss_fn(
+    cfg: TransformerConfig,
+    params: dict,
+    batch: dict,
+    *,
+    shard: ActShard = ActShard.none(),
+) -> Tuple[Array, dict]:
+    """Next-token cross entropy. batch: {tokens (B,S), loss_mask (B,S) optional}."""
+    tokens = batch["tokens"]
+    logits = forward(cfg, params, tokens, shard=shard)  # (B, S, V) f32
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1]
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    tgt_logit = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    nll = logz - tgt_logit  # (B, S-1)
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(nll) if mask is None else mask[:, 1:].astype(nll.dtype)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "ntokens": jnp.sum(mask)}
+
+
+# -- serving: prefill + decode ------------------------------------------------
+
+
+def init_kv_cache(
+    cfg: TransformerConfig, batch: int, seq_len: int
+) -> dict:
+    """Per-pattern-position caches. Sliding-window positions get a ring buffer
+    of length min(window, seq_len); global positions a full-length buffer."""
+    dh, KV, G = cfg.head_dim, cfg.n_kv_heads, cfg.n_groups
+    caches = {}
+    for pos, window in enumerate(cfg.layer_pattern):
+        slen = min(window, seq_len) if window else seq_len
+        caches[f"pos{pos}"] = {
+            "k": jnp.zeros((G, batch, slen, KV, dh), cfg.dtype),
+            "v": jnp.zeros((G, batch, slen, KV, dh), cfg.dtype),
+        }
+    return caches
+
+
+def decode_step(
+    cfg: TransformerConfig,
+    params: dict,
+    cache: dict,
+    token: Array,       # (B, 1) int32
+    cache_len: Array,   # scalar int32: number of valid cached positions
+    *,
+    shard: ActShard = ActShard.none(),
+) -> Tuple[Array, dict]:
+    """One autoregressive step against a KV cache of ``cache_len`` tokens.
+
+    Returns (logits (B, V), updated cache). The sequence axis of global-layer
+    caches may be sharded across the mesh (sequence-parallel decode); softmax
+    over the sharded axis reduces via GSPMD collectives.
+    """
+    B = token.shape[0]
+    x = params["embed"][token].astype(cfg.dtype)  # (B, 1, D)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+
+    def group_body(x, scanned):
+        group_params, caches = scanned
+        new_caches = []
+        for pos in range(cfg.pattern_len):
+            p = jax.tree.map(lambda a: a[pos], group_params)
+            window = cfg.layer_pattern[pos]
+            ck, cv = caches[pos]["k"], caches[pos]["v"]
+            slen = ck.shape[1]
+            if window:
+                # ring buffer: slot of the cached token at absolute pos p is
+                # p % window; all occupied slots are in-window by construction.
+                kv_pos = _ring_positions(cache_len, slen, B)
+            else:
+                kv_pos = jnp.broadcast_to(
+                    jnp.arange(slen, dtype=jnp.int32), (B, slen))
+                kv_pos = jnp.where(kv_pos < cache_len, kv_pos, jnp.int32(1 << 30))
+            x, (k_new, v_new) = _one_layer(
+                cfg, p, x, positions, window,
+                kv=(ck, cv), kv_positions=kv_pos,
+            )
+            if window:
+                slot = cache_len % jnp.int32(max(slen, 1))
+            else:
+                slot = jnp.minimum(cache_len, slen - 1)
+            # index dtypes must match exactly (int32 even under x64)
+            z = jnp.int32(0)
+            slot = slot.astype(jnp.int32)
+            ck = jax.lax.dynamic_update_slice(ck, k_new, (z, slot, z, z))
+            cv = jax.lax.dynamic_update_slice(cv, v_new, (z, slot, z, z))
+            new_caches.append({"k": ck, "v": cv})
+        return x, new_caches
+
+    # scan over layer groups; caches are scan xs/ys (leading G axis)
+    cache_list = [cache[f"pos{p}"] for p in range(cfg.pattern_len)]
+    body = lambda x, sc: group_body(x, sc)
+    x, new_cache_list = _scan_groups(cfg, body, x, params["layers"],
+                                     extra_xs=cache_list)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    logits = _lm_logits(cfg, params, x)[:, 0]
+    new_cache = {f"pos{p}": c for p, c in enumerate(new_cache_list)}
+    return _constrain(logits, shard.logits), new_cache
+
+
+def _ring_positions(cache_len: Array, slen: int, batch: int) -> Array:
+    """Absolute position held by each ring-buffer slot (invalid -> far future)."""
+    slots = jnp.arange(slen, dtype=jnp.int32)
+    # latest absolute position congruent to slot (mod slen) strictly < cache_len
+    rem = (cache_len - 1 - slots) % slen
+    pos = cache_len - 1 - rem
+    pos = jnp.where(pos >= 0, pos, jnp.int32(1 << 30))
+    pos = jnp.where(cache_len > 0, pos, jnp.int32(1 << 30))
+    return jnp.broadcast_to(pos, (batch, slen))
+
+
+def prefill(
+    cfg: TransformerConfig,
+    params: dict,
+    tokens: Array,  # (B, S)
+    *,
+    pad_to: Optional[int] = None,
+    shard: ActShard = ActShard.none(),
+) -> Tuple[Array, dict]:
+    """Run the prompt, returning (last-token logits (B, V), filled KV cache).
+
+    Global-layer caches are padded to ``pad_to`` total positions (headroom for
+    subsequent decode steps); sliding-window caches are rolled into the ring
+    layout ``decode_step`` expects (position p at slot p % window).
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    x = _constrain(x, shard.hidden)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def group_body(x, group_params):
+        caches = []
+        for pos in range(cfg.pattern_len):
+            p = jax.tree.map(lambda a: a[pos], group_params)
+            window = cfg.layer_pattern[pos]
+            x, (k, v) = _one_layer(cfg, p, x, positions, window)
+            if window:
+                if window < S:
+                    k, v = k[:, -window:], v[:, -window:]
+                    # ring layout: position p lives at slot p % window
+                    shift = (S - window) % window
+                    k = jnp.roll(k, shift, axis=1)
+                    v = jnp.roll(v, shift, axis=1)
+            elif pad_to is not None and pad_to > S:
+                widths = ((0, 0), (0, pad_to - S), (0, 0), (0, 0))
+                k, v = jnp.pad(k, widths), jnp.pad(v, widths)
+            caches.append({"k": k, "v": v})
+        return _constrain(x, shard.hidden), caches
+
+    body = _remat(cfg, group_body)
+    x, cache_list = _scan_groups(cfg, body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    logits = _lm_logits(cfg, params, x[:, -1])
+    cache = {f"pos{p}": c for p, c in enumerate(cache_list)}
+    return logits, cache
+
+
+def embeddings(
+    cfg: TransformerConfig, params: dict, tokens: Array, **kw
+) -> Array:
+    """Mean-pooled final hidden states — the metric space the nSimplex DR
+    consumes (DESIGN.md §4). (B, d_model)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def group_body(x, group_params):
+        for pos in range(cfg.pattern_len):
+            p = jax.tree.map(lambda a: a[pos], group_params)
+            x, _ = _one_layer(cfg, p, x, positions, cfg.layer_pattern[pos])
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    return jnp.mean(x.astype(jnp.float32), axis=1)

@@ -1,0 +1,15 @@
+from .adamw import AdamW, apply_updates, clip_by_global_norm
+from .schedules import constant, cosine_decay, linear_warmup_cosine
+from .compression import CompressionState, compress_decompress, error_feedback_update
+
+__all__ = [
+    "AdamW",
+    "apply_updates",
+    "clip_by_global_norm",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+    "CompressionState",
+    "compress_decompress",
+    "error_feedback_update",
+]

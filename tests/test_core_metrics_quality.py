@@ -1,0 +1,212 @@
+"""Metric definitions (paper Appendix A) and quality measures (Appendix E)."""
+import numpy as np
+import pytest
+import scipy.stats
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics as M
+from repro.core import quality as Q
+from repro.core.baselines import (
+    LMDSTransform,
+    MDSTransform,
+    PCATransform,
+    RandomProjection,
+    classical_mds_embed,
+)
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ----------------------------- metrics --------------------------------------
+
+
+def test_euclidean_matches_numpy():
+    rng = np.random.default_rng(0)
+    X, Y = rng.normal(size=(20, 13)), rng.normal(size=(7, 13))
+    got = np.asarray(M.euclidean_pdist(jnp.asarray(X), jnp.asarray(Y)))
+    want = np.linalg.norm(X[:, None] - Y[None, :], axis=-1)
+    np.testing.assert_allclose(got, want, atol=1e-10)
+
+
+def test_cosine_is_l2_over_normalised():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(10, 8))
+    Xn = X / np.linalg.norm(X, axis=1, keepdims=True)
+    got = np.asarray(M.cosine_pdist(jnp.asarray(X), jnp.asarray(X)))
+    want = np.linalg.norm(Xn[:, None] - Xn[None, :], axis=-1)
+    np.testing.assert_allclose(got, want, atol=1e-10)
+
+
+def test_jsd_range_and_symmetry():
+    rng = np.random.default_rng(2)
+    X = M.l1_normalize(jnp.asarray(rng.uniform(size=(12, 30))))
+    D = np.asarray(M.jsd_pdist(X, X, assume_normalized=True))
+    assert (D >= -1e-12).all() and (D <= 1.0 + 1e-9).all()
+    np.testing.assert_allclose(D, D.T, atol=1e-10)
+    np.testing.assert_allclose(np.diag(D), 0.0, atol=1e-6)
+
+
+def test_jsd_zero_handling():
+    # sparse vectors: 0 log 0 := 0 must not produce nan
+    v = jnp.asarray([[0.5, 0.5, 0.0, 0.0], [0.0, 0.0, 0.5, 0.5]])
+    D = M.jsd_pdist(v, v, assume_normalized=True)
+    assert bool(jnp.isfinite(D).all())
+    # disjoint supports -> maximal JSD distance 1
+    np.testing.assert_allclose(float(D[0, 1]), 1.0, atol=1e-7)
+
+
+def test_triangular_estimates_jsd():
+    # paper Appendix A.4: triangular is an accurate JSD estimator in high dims
+    rng = np.random.default_rng(3)
+    X = M.l1_normalize(jnp.asarray(rng.uniform(size=(20, 200))))
+    J = np.asarray(M.jsd_pdist(X, X, assume_normalized=True))
+    T = np.asarray(M.triangular_pdist(X, X, assume_normalized=True))
+    mask = ~np.eye(20, dtype=bool)
+    # accurate estimator (same ordering, ~10% magnitude) in high dimensions
+    assert np.abs(J - T)[mask].mean() < 0.15 * J[mask].mean()
+    assert Q.spearman_rho(J[mask], T[mask]) > 0.99
+
+
+def test_qform_reduces_to_euclidean():
+    rng = np.random.default_rng(4)
+    X, Y = rng.normal(size=(6, 5)), rng.normal(size=(4, 5))
+    got = np.asarray(M.qform_pdist(jnp.asarray(X), jnp.asarray(Y), jnp.eye(5)))
+    want = np.asarray(M.euclidean_pdist(jnp.asarray(X), jnp.asarray(Y)))
+    np.testing.assert_allclose(got, want, atol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 16), m=st.integers(2, 32))
+def test_property_metric_axioms(seed, n, m):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(n, m)))
+    for name in ("euclidean", "cosine"):
+        D = np.asarray(M.pairwise(name, X, X))
+        np.testing.assert_allclose(D, D.T, atol=1e-8)
+        assert (D >= -1e-9).all()
+        i, j, k = rng.integers(0, n, size=(3, 50))
+        assert (D[i, k] <= D[i, j] + D[j, k] + 1e-7).all()
+
+
+# ----------------------------- quality --------------------------------------
+
+
+def test_pava_monotone_and_ls():
+    y = np.array([3.0, 1.0, 2.0, 5.0, 4.0])
+    fit = Q._pava(y)
+    assert (np.diff(fit) >= -1e-12).all()
+    np.testing.assert_allclose(fit, [2.0, 2.0, 2.0, 4.5, 4.5])
+
+
+def test_kruskal_zero_for_monotone_map():
+    rng = np.random.default_rng(5)
+    delta = rng.uniform(1, 10, size=500)
+    zeta = np.sqrt(delta) * 3.0  # monotone, nonlinear
+    assert Q.kruskal_stress(delta, zeta) < 1e-12
+    assert Q.spearman_rho(delta, zeta) > 0.999999
+
+
+def test_spearman_matches_scipy():
+    rng = np.random.default_rng(6)
+    a, b = rng.normal(size=300), rng.normal(size=300)
+    got = Q.spearman_rho(a, b)
+    want = scipy.stats.spearmanr(a, b).statistic
+    np.testing.assert_allclose(got, want, atol=1e-10)
+
+
+def test_sammon_and_qloss_zero_when_exact():
+    d = np.random.default_rng(7).uniform(1, 5, size=100)
+    assert Q.sammon_stress(d, d) == 0.0
+    assert Q.quadratic_loss(d, d) == 0.0
+
+
+def test_dcg_recall_perfect_and_disjoint():
+    ids = np.arange(1000)
+    assert Q.dcg_recall(ids, ids) == pytest.approx(1.0)
+    assert Q.dcg_recall(ids, ids + 10_000) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_dcg_recall_prefers_early_agreement():
+    ids = np.arange(1000)
+    # swap within the head (significant region) vs within the tail
+    head = ids.copy(); head[:10] = head[:10][::-1]
+    tail = ids.copy(); tail[-10:] = tail[-10:][::-1]
+    assert Q.dcg_recall(ids, tail) > Q.dcg_recall(ids, head) or (
+        Q.dcg_recall(ids, tail) == pytest.approx(1.0, abs=1e-6)
+    )
+    assert Q.dcg_recall(ids, head) > 0.9  # head swaps are still near neighbours
+
+
+# ----------------------------- baselines ------------------------------------
+
+
+def test_pca_recovers_low_rank():
+    rng = np.random.default_rng(8)
+    Z5 = rng.normal(size=(400, 5))
+    A = rng.normal(size=(5, 64))
+    X = jnp.asarray(Z5 @ A)  # rank-5 manifold in R^64
+    pca = PCATransform(k=5).fit(X)
+    assert pca.dims_for_variance(0.999) <= 5
+    Xp = pca.transform(X)
+    D0 = np.asarray(M.euclidean_pdist(X, X))
+    D1 = np.asarray(M.euclidean_pdist(Xp, Xp))
+    # float32 SVD path: off-diagonal distances agree to f32 noise
+    mask = ~np.eye(D0.shape[0], dtype=bool)
+    np.testing.assert_allclose(D1[mask], D0[mask], rtol=1e-3)
+
+
+def test_rp_preserves_distances_statistically():
+    rng = np.random.default_rng(9)
+    X = jnp.asarray(rng.normal(size=(100, 512)))
+    rp = RandomProjection(k=128).fit(512, key=jax.random.PRNGKey(0))
+    Xp = rp.transform(X)
+    d0 = np.asarray(M.euclidean_pdist(X, X))
+    d1 = np.asarray(M.euclidean_pdist(Xp, Xp))
+    mask = ~np.eye(100, dtype=bool)
+    ratio = d1[mask] / d0[mask]
+    assert abs(ratio.mean() - 1.0) < 0.05
+    assert ratio.std() < 0.15
+
+
+def test_classical_mds_recovers_euclidean_config():
+    rng = np.random.default_rng(10)
+    X = rng.normal(size=(50, 4))
+    D = np.linalg.norm(X[:, None] - X[None, :], axis=-1)
+    coords, evals, _ = classical_mds_embed(jnp.asarray(D), 4)
+    D2 = np.asarray(M.euclidean_pdist(coords, coords))
+    np.testing.assert_allclose(D2, D, rtol=1e-4, atol=1e-5)
+
+
+def test_mds_out_of_sample_linear_map():
+    rng = np.random.default_rng(11)
+    W = jnp.asarray(rng.normal(size=(120, 16)))
+    mds = MDSTransform(k=16).fit(W)
+    X = jnp.asarray(rng.normal(size=(30, 16)))
+    D0 = np.asarray(M.euclidean_pdist(X, X))
+    D1 = np.asarray(M.euclidean_pdist(mds.transform(X), mds.transform(X)))
+    # full-rank k=m: must be near-isometric
+    np.testing.assert_allclose(D1, D0, rtol=1e-3, atol=1e-4)
+
+
+def test_lmds_matches_mds_on_landmarks():
+    rng = np.random.default_rng(12)
+    L = rng.normal(size=(40, 6))
+    D = np.linalg.norm(L[:, None] - L[None, :], axis=-1)
+    lmds = LMDSTransform(k=6).fit_from_distances(jnp.asarray(D))
+    emb = lmds.transform_from_distances(jnp.asarray(D))
+    D1 = np.asarray(M.euclidean_pdist(emb, emb))
+    np.testing.assert_allclose(D1, D, rtol=1e-3, atol=1e-4)
+
+
+def test_lmds_distance_only_jsd_space():
+    rng = np.random.default_rng(13)
+    L = M.l1_normalize(jnp.asarray(rng.uniform(size=(30, 50))))
+    X = M.l1_normalize(jnp.asarray(rng.uniform(size=(20, 50))))
+    DL = M.jsd_pdist(L, L, assume_normalized=True)
+    lmds = LMDSTransform(k=10).fit_from_distances(DL)
+    emb = lmds.transform_from_distances(M.jsd_pdist(X, L, assume_normalized=True))
+    assert emb.shape == (20, 10)
+    assert bool(jnp.isfinite(emb).all())

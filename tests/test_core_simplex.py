@@ -1,0 +1,186 @@
+"""Core nSimplex correctness: TPU-native path vs paper-faithful oracle, and the
+paper's bound/estimator properties (Lemma C.2) as hypothesis property tests."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics as M
+from repro.core import simplex as S
+from repro.core import zen as Z
+from repro.core.projection import NSimplexTransform, select_references
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _euclid_space(seed, n, m, k):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, m))
+    refs = rng.normal(size=(k, m))
+    return X, refs
+
+
+@pytest.mark.parametrize("k", [2, 3, 8, 33])
+def test_base_simplex_matches_paper_oracle(k):
+    _, refs = _euclid_space(0, 1, 64, k)
+    D = np.array(M.euclidean_pdist(jnp.asarray(refs), jnp.asarray(refs)))
+    np.fill_diagonal(D, 0.0)
+    sigma_oracle = S.nsimplex_build_reference(D)
+    base = S.build_base_simplex(D)
+    np.testing.assert_allclose(np.asarray(base.vertices()), sigma_oracle, atol=1e-9)
+
+
+@pytest.mark.parametrize("k", [2, 5, 16])
+def test_base_simplex_reconstructs_distances(k):
+    _, refs = _euclid_space(1, 1, 32, k)
+    D = np.array(M.euclidean_pdist(jnp.asarray(refs), jnp.asarray(refs)))
+    np.fill_diagonal(D, 0.0)
+    ok, err = S.verify_base_simplex(D, S.build_base_simplex(D), atol=1e-8)
+    assert ok, f"distance reconstruction error {err}"
+
+
+@pytest.mark.parametrize("k,n", [(2, 7), (10, 50), (31, 11)])
+def test_apex_matches_paper_oracle(k, n):
+    X, refs = _euclid_space(2, n, 48, k)
+    D = np.array(M.euclidean_pdist(jnp.asarray(refs), jnp.asarray(refs)))
+    np.fill_diagonal(D, 0.0)
+    dists = np.asarray(M.euclidean_pdist(jnp.asarray(X), jnp.asarray(refs)))
+    apex_oracle = S.apex_project_reference(D, dists)
+    apex = np.asarray(S.apex_project(S.build_base_simplex(D), dists))
+    np.testing.assert_allclose(apex, apex_oracle, atol=1e-8)
+
+
+def test_apex_preserves_reference_distances():
+    # l2(apex, vertex_i) == d(u, r_i): the defining property of the projection.
+    X, refs = _euclid_space(3, 20, 64, 12)
+    tr = NSimplexTransform(k=12).fit(jnp.asarray(refs))
+    dists = np.asarray(tr.reference_distances(jnp.asarray(X)))
+    apex = np.asarray(tr.transform(jnp.asarray(X)))
+    V = np.asarray(tr.base.vertices())  # (k, k-1)
+    Vfull = np.concatenate([V, np.zeros((V.shape[0], 1))], axis=1)  # embed in R^k
+    got = np.linalg.norm(apex[:, None, :] - Vfull[None, :, :], axis=-1)
+    np.testing.assert_allclose(got, dists, atol=1e-8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(16, 128),
+    k=st.integers(2, 16),
+    n=st.integers(2, 24),
+)
+def test_property_bounds_euclidean(seed, m, k, n):
+    """Lemma C.2: lwb <= d <= upb and lwb <= zen <= upb, any Euclidean space.
+
+    k <= m so the random reference simplex is non-degenerate (k > m+1 points
+    in R^m CANNOT be affinely independent — the library contract, paper §7.2,
+    is to redraw such reference sets; select_references does)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, m))
+    refs = rng.normal(size=(k, m))
+    tr = NSimplexTransform(k=k).fit(jnp.asarray(refs))
+    Xp = tr.transform(jnp.asarray(X))
+    Dt = np.asarray(M.euclidean_pdist(jnp.asarray(X), jnp.asarray(X)))
+    lwb, zen, upb = [np.asarray(a) for a in Z.estimate_triple(Xp, Xp)]
+    tol = 1e-6 * (1.0 + Dt.max())
+    assert (lwb <= Dt + tol).all()
+    assert (Dt <= upb + tol).all()
+    assert (lwb <= zen + tol).all() and (zen <= upb + tol).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(2, 10), n=st.integers(2, 12))
+def test_property_bounds_jsd(seed, k, n):
+    """Bounds hold for the coordinate-free Jensen-Shannon Hilbert space."""
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.uniform(0.05, 1.0, size=(n, 40)))
+    R = jnp.asarray(rng.uniform(0.05, 1.0, size=(k, 40)))
+    X, R = M.l1_normalize(X), M.l1_normalize(R)
+    D_refs = np.array(M.jsd_pdist(R, R, assume_normalized=True))
+    np.fill_diagonal(D_refs, 0.0)
+    tr = NSimplexTransform.from_distances(D_refs)
+    dX = M.jsd_pdist(X, R, assume_normalized=True)
+    Xp = tr.transform_from_distances(dX)
+    Dt = np.asarray(M.jsd_pdist(X, X, assume_normalized=True))
+    lwb, zen, upb = [np.asarray(a) for a in Z.estimate_triple(Xp, Xp)]
+    tol = 2e-5
+    assert (lwb <= Dt + tol).all()
+    assert (Dt <= upb + tol).all()
+    assert (lwb <= zen + tol).all() and (zen <= upb + tol).all()
+
+
+def test_zen_triangle_inequality_sampled():
+    """Zen is not a metric (no identity) but keeps the triangle inequality."""
+    rng = np.random.default_rng(7)
+    X, refs = _euclid_space(7, 64, 100, 8)
+    tr = NSimplexTransform(k=8).fit(jnp.asarray(refs))
+    Xp = tr.transform(jnp.asarray(X))
+    D = np.asarray(Z.zen_pdist(Xp, Xp))
+    i, j, l = rng.integers(0, 64, size=(3, 500))
+    assert (D[i, l] <= D[i, j] + D[j, l] + 1e-9).all()
+
+
+def test_zen_self_distance_positive():
+    # paper §7.1: Zen(x, x) = sqrt(2) * altitude > 0 — by design, not a bug.
+    X, refs = _euclid_space(9, 10, 64, 6)
+    tr = NSimplexTransform(k=6).fit(jnp.asarray(refs))
+    Xp = np.asarray(tr.transform(jnp.asarray(X)))
+    zen_self = np.diag(np.asarray(Z.zen_pdist(Xp, Xp)))
+    np.testing.assert_allclose(zen_self, np.sqrt(2.0) * Xp[:, -1], atol=1e-9)
+
+
+def test_contraction_property():
+    # sigma is a contraction: l2(sigma(u), sigma(v)) <= d(u, v)  (paper §4.1)
+    X, refs = _euclid_space(11, 40, 200, 24)
+    tr = NSimplexTransform(k=24).fit(jnp.asarray(refs))
+    Xp = tr.transform(jnp.asarray(X))
+    Dt = np.asarray(M.euclidean_pdist(jnp.asarray(X), jnp.asarray(X)))
+    lwb = np.asarray(Z.lwb_pdist(Xp, Xp))
+    assert (lwb <= Dt + 1e-6 * (1.0 + Dt.max())).all()
+
+
+def test_degenerate_detection():
+    # duplicate reference -> rank-deficient simplex must be flagged
+    rng = np.random.default_rng(5)
+    refs = rng.normal(size=(6, 16))
+    refs[3] = refs[1]  # duplicate
+    D = np.array(M.euclidean_pdist(jnp.asarray(refs), jnp.asarray(refs)))
+    np.fill_diagonal(D, 0.0)
+    base = S.build_base_simplex(D)
+    assert bool(S.simplex_is_degenerate(base))
+
+
+def test_select_references_avoids_degenerate():
+    rng = np.random.default_rng(6)
+    X = rng.normal(size=(100, 32))
+    tr = select_references(jnp.asarray(X), 8, jax.random.PRNGKey(0))
+    assert tr.is_fitted and not bool(tr.degenerate())
+
+
+def test_knn_search_chunked_equals_dense():
+    rng = np.random.default_rng(8)
+    X, refs = _euclid_space(8, 300, 64, 16)
+    q = rng.normal(size=(9, 64))
+    tr = NSimplexTransform(k=16).fit(jnp.asarray(refs))
+    Xp, Qp = tr.transform(jnp.asarray(X)), tr.transform(jnp.asarray(q))
+    d0, i0 = Z.knn_search(Qp, Xp, n_neighbors=5)
+    d1, i1 = Z.knn_search(Qp, Xp, n_neighbors=5, chunk=64)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), atol=1e-9)
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+
+
+def test_zen_estimator_beats_lwb_in_high_dims():
+    """The paper's headline effect: Zen tracks true distance closely."""
+    rng = np.random.default_rng(10)
+    X = rng.uniform(size=(200, 100))
+    refs = rng.uniform(size=(10, 100))
+    tr = NSimplexTransform(k=10).fit(jnp.asarray(refs))
+    Xp = tr.transform(jnp.asarray(X))
+    Dt = np.asarray(M.euclidean_pdist(jnp.asarray(X), jnp.asarray(X)))
+    lwb, zen, _ = [np.asarray(a) for a in Z.estimate_triple(Xp, Xp)]
+    mask = ~np.eye(200, dtype=bool)
+    zen_err = np.abs(zen - Dt)[mask].mean()
+    lwb_err = np.abs(lwb - Dt)[mask].mean()
+    assert zen_err < 0.25 * lwb_err

@@ -1,0 +1,80 @@
+"""Serving stack: index build, zen top-k quality, exact re-rank, stats."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as M
+from repro.data import synthetic as syn
+from repro.launch.serve import ZenServer, build_index
+
+
+def _recall(ids, true_ids):
+    ids, true_ids = np.asarray(ids), np.asarray(true_ids)
+    return np.mean([
+        len(set(ids[i]) & set(true_ids[i])) / ids.shape[1]
+        for i in range(ids.shape[0])
+    ])
+
+
+def test_zen_server_end_to_end():
+    key = jax.random.PRNGKey(0)
+    corpus = syn.manifold_space(key, 5000, 128, 16)
+    index = build_index(corpus, 16)
+    assert index.coords.shape == (5000, 16)
+
+    server = ZenServer(index, rerank_factor=8)
+    q = syn.manifold_space(jax.random.fold_in(key, 1), 16, 128, 16)
+    d, ids = server.query(q, 10)
+    assert d.shape == (16, 10) and ids.shape == (16, 10)
+    # monotone non-decreasing distances per row
+    assert bool((jnp.diff(d, axis=1) >= -1e-6).all())
+
+    true_d = M.euclidean_pdist(q, corpus)
+    _, tids = jax.lax.top_k(-true_d, 10)
+    rec = _recall(ids, tids)
+    assert rec > 0.8, f"recall@10 with rerank too low: {rec}"
+
+    stats = server.stats()
+    assert stats["queries"] == 16 and stats["batches"] == 1
+    assert stats["p50_ms"] > 0
+
+
+def test_zen_server_rerank_improves_recall():
+    key = jax.random.PRNGKey(2)
+    corpus = syn.manifold_space(key, 4000, 128, 8)
+    index = build_index(corpus, 8)
+    q = syn.manifold_space(jax.random.fold_in(key, 1), 12, 128, 8)
+    true_d = M.euclidean_pdist(q, corpus)
+    _, tids = jax.lax.top_k(-true_d, 10)
+
+    plain = ZenServer(index, rerank_factor=0)
+    rerank = ZenServer(index, rerank_factor=10)
+    _, ids0 = plain.query(q, 10)
+    _, ids1 = rerank.query(q, 10)
+    assert _recall(ids1, tids) >= _recall(ids0, tids)
+
+
+def test_zen_server_chunked_path():
+    key = jax.random.PRNGKey(3)
+    corpus = syn.uniform_space(key, 3000, 64)
+    index = build_index(corpus, 8)
+    server = ZenServer(index, chunk=512)  # forces the scan path
+    q = syn.uniform_space(jax.random.fold_in(key, 1), 4, 64)
+    d, ids = server.query(q, 5)
+    # must agree with the dense path
+    dense = ZenServer(index, chunk=10**9)
+    d2, ids2 = dense.query(q, 5)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d2), rtol=1e-5)
+    assert (np.asarray(ids) == np.asarray(ids2)).all()
+
+
+def test_index_distance_only_metric():
+    # cosine corpus goes through the metric-aware normalisation path
+    key = jax.random.PRNGKey(4)
+    corpus = syn.relu_feature_space(key, 2000, 96, 12)
+    index = build_index(corpus, 10, metric="cosine")
+    server = ZenServer(index, rerank_factor=4)
+    q = syn.relu_feature_space(jax.random.fold_in(key, 1), 8, 96, 12)
+    d, ids = server.query(q, 5)
+    assert bool(jnp.isfinite(d).all())

@@ -1,0 +1,228 @@
+"""Substrate tests: optimizer, checkpoint (atomic/async/reshard), data
+pipeline determinism, neighbor sampler, fault-tolerance hooks, compression."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.data import synthetic as syn
+from repro.data.graph import CSRGraph, random_graph, sample_padded_batch
+from repro.data.pipeline import PrefetchPipeline, shard_for_host
+from repro.distributed.fault import (
+    HeartbeatRegistry,
+    PreemptionGuard,
+    StepMonitor,
+)
+from repro.optim import AdamW, clip_by_global_norm
+from repro.optim import compression as comp_lib
+
+
+# ----------------------------- optimizer ------------------------------------
+
+
+def test_adamw_reduces_quadratic_loss():
+    opt = AdamW(learning_rate=0.1, weight_decay=0.0, clip_norm=None)
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        updates, state = opt.update(g, state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+    assert float(loss(params)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    total = jnp.sqrt(jnp.sum(clipped["a"] ** 2))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_adamw_moments_are_f32_for_bf16_params():
+    params = {"w": jnp.zeros((3,), jnp.bfloat16)}
+    state = AdamW().init(params)
+    assert state.mu["w"].dtype == jnp.float32
+
+
+# ----------------------------- checkpoint -----------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": [jnp.ones((4,), jnp.bfloat16), jnp.int32(7)]}
+    mgr.save(3, tree)
+    step, restored = mgr.restore(like=tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert restored["b"][0].dtype == jnp.bfloat16
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async_and_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.arange(10_000, dtype=jnp.float32)}
+    mgr.save_async(1, tree)
+    mgr.wait()
+    # no tmp dirs left behind; manifest readable
+    assert not [d for d in os.listdir(tmp_path) if d.startswith("tmp.")]
+    step, restored = mgr.restore(like=tree)
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.asarray(tree["x"]))
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Save replicated, restore onto a 1x1 mesh with explicit sharding."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_host_mesh
+
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    specs = {"w": P(None, None)}
+    mgr.save(5, tree, specs)
+    mesh = make_host_mesh(1, 1)
+    step, restored = mgr.restore(mesh=mesh, like=tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+
+# ----------------------------- data pipeline --------------------------------
+
+
+def test_pipeline_deterministic_restart():
+    make = lambda step: syn.lm_batch(7, step, 2, 8, 100)
+    p1 = PrefetchPipeline(make, start_step=0)
+    seq1 = [next(p1) for _ in range(5)]
+    p1.close()
+    # restart at step 3: batches must be byte-identical
+    p2 = PrefetchPipeline(make, start_step=3)
+    step, batch = next(p2)
+    p2.close()
+    assert step == 3
+    np.testing.assert_array_equal(
+        np.asarray(batch["tokens"]), np.asarray(seq1[3][1]["tokens"]))
+
+
+def test_shard_for_host_slices_batch():
+    batch = {"x": jnp.arange(8).reshape(8, 1)}
+    out = shard_for_host(batch, host_index=1, num_hosts=4)
+    np.testing.assert_array_equal(np.asarray(out["x"]).ravel(), [2, 3])
+
+
+# ----------------------------- graph sampler --------------------------------
+
+
+def test_csr_graph_neighbors():
+    g = CSRGraph.from_edges(
+        np.array([0, 0, 1, 2]), np.array([1, 2, 2, 0]), num_nodes=3)
+    assert sorted(g.neighbors(0).tolist()) == [1, 2]
+    assert g.neighbors(1).tolist() == [2]
+
+
+def test_neighbor_sampler_shapes_and_validity():
+    g = random_graph(1000, avg_degree=12, seed=0)
+    batch = sample_padded_batch(
+        g, batch_nodes=32, fanout=(15, 10), max_nodes=8192, max_edges=8192,
+        seed=1)
+    assert batch["senders"].shape == (8192,)
+    n_valid_edges = int(batch["edge_mask"].sum())
+    n_valid_nodes = int(batch["node_mask"].sum())
+    assert 32 <= n_valid_nodes <= 8192
+    assert n_valid_edges >= 32  # at least the root fanout edges
+    # all valid edge endpoints are valid local node ids
+    s = batch["senders"][: n_valid_edges]
+    r = batch["receivers"][: n_valid_edges]
+    assert (s < n_valid_nodes).all() and (r < n_valid_nodes).all()
+    assert int(batch["root_mask"].sum()) == 32
+
+
+def test_sampler_respects_fanout():
+    g = random_graph(500, avg_degree=20, seed=2)
+    batch = sample_padded_batch(
+        g, batch_nodes=4, fanout=(5,), max_nodes=512, max_edges=512, seed=3)
+    # each root samples at most 5 1-hop edges
+    assert int(batch["edge_mask"].sum()) <= 4 * 5
+
+
+# ----------------------------- fault tolerance ------------------------------
+
+
+def test_step_monitor_flags_stragglers():
+    mon = StepMonitor(threshold=2.0, warmup_steps=2, patience=2)
+    for i in range(10):
+        assert mon.record(i, 1.0) is None
+    ev = mon.record(10, 5.0)
+    assert ev is not None and ev.ratio > 2.0
+    assert not mon.should_escalate
+    mon.record(11, 5.0)
+    assert mon.should_escalate
+
+
+def test_step_monitor_ema_excludes_stragglers():
+    mon = StepMonitor(threshold=2.0, warmup_steps=1)
+    for i in range(5):
+        mon.record(i, 1.0)
+    mon.record(5, 100.0)  # straggler must not poison the EMA
+    assert mon.ema < 1.5
+
+
+def test_heartbeat_registry():
+    t = [0.0]
+    reg = HeartbeatRegistry(deadline_s=10.0, now=lambda: t[0])
+    reg.beat("host0"); reg.beat("host1")
+    t[0] = 5.0
+    reg.beat("host0")
+    t[0] = 12.0
+    assert reg.dead_hosts() == ["host1"]
+    assert reg.alive() == ["host0"]
+
+
+def test_preemption_guard_manual_trigger():
+    g = PreemptionGuard(install_signal=False)
+    assert not g.should_save()
+    g.request()
+    assert g.should_save()
+    g.clear()
+    assert not g.should_save()
+
+
+# ----------------------------- compression ----------------------------------
+
+
+def test_compression_roundtrip_error_bound():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1000,)), jnp.float32)
+    rec, resid = comp_lib.compress_decompress(x)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(resid))) <= scale * 0.5 + 1e-6
+    np.testing.assert_allclose(np.asarray(rec + resid), np.asarray(x), atol=1e-6)
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """EF residual carries over: sum of exchanged grads converges to sum of
+    true grads (the EF-SGD guarantee)."""
+    rng = np.random.default_rng(1)
+    state = comp_lib.init_state({"g": jnp.zeros(64)})
+    total_true = np.zeros(64)
+    total_sent = np.zeros(64)
+    for _ in range(200):
+        g = {"g": jnp.asarray(rng.normal(size=64) * 1e-3, jnp.float32)}
+        sent, state = comp_lib.error_feedback_update(g, state)
+        total_true += np.asarray(g["g"])
+        total_sent += np.asarray(sent["g"])
+    # residual is bounded, so averages converge
+    err = np.abs(total_sent + np.asarray(state.error["g"]) - total_true).max()
+    assert err < 1e-4
