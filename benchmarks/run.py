@@ -1,5 +1,8 @@
-"""Benchmark harness — one entry per paper table/figure plus kernel and
-transform micro-benchmarks. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one entry per paper table/figure plus kernel,
+transform and retrieval micro-benchmarks. Prints ``name,us_per_call,derived``
+CSV.  ``--workload retrieval_topk`` runs only the serving hot-path comparison
+(dense vs streaming vs sharded top-k; QPS + XLA peak temp memory);
+``--smoke`` shrinks it to a CI-sized index.
 
   figs 5-6   euclid_uniform_100   Kruskal/quality, 100d uniform -> 80/10d
   figs 7-8   euclid_uniform_500   500d uniform -> 400d
@@ -205,6 +208,60 @@ def bench_ablations() -> None:
          ";".join(f"{k}={v:.4f}" for k, v in res.items()))
 
 
+def bench_retrieval_topk(smoke: bool = False) -> None:
+    """Serving hot path at scale: dense (Q, N) materialisation vs the
+    streaming fused top-k vs the sharded per-device search, on synthetic
+    projected coordinates. Reports per-batch wall time, QPS and the XLA temp
+    allocation (the peak transient working set) of each jitted search fn —
+    the streaming path must stay flat in N while dense grows linearly."""
+    import numpy as np_
+
+    from jax.sharding import Mesh
+
+    from repro.core import zen as Z
+    from repro.distributed.retrieval import sharded_knn_search
+    from repro.kernels import zen_topk as zt
+
+    q, kdim, nn, chunk = 32, 16, 10, 4096
+    sizes = [20_000] if smoke else [100_000, 1_000_000]
+    mesh = Mesh(np_.asarray(jax.devices()), ("shard",))
+
+    def temp_bytes(fn, n):
+        Qs = jax.ShapeDtypeStruct((q, kdim), jnp.float32)
+        Xs = jax.ShapeDtypeStruct((n, kdim), jnp.float32)
+        try:
+            mem = jax.jit(fn).lower(Qs, Xs).compile().memory_analysis()
+            return int(mem.temp_size_in_bytes)
+        except Exception:
+            return -1  # backend without memory_analysis support
+
+    key = jax.random.PRNGKey(0)
+    for n in sizes:
+        X = jax.random.normal(key, (n, kdim), jnp.float32)
+        X = X.at[:, -1].set(jnp.abs(X[:, -1]))
+        Qb = X[:q] + 0.1 * jax.random.normal(
+            jax.random.fold_in(key, 1), (q, kdim), jnp.float32
+        )
+        paths = {
+            "dense": lambda Q_, X_: Z._dense_topk(Q_, X_, nn, "zen"),
+            "stream": lambda Q_, X_: zt.zen_topk_scan(
+                Q_, X_, nn, "zen", chunk=chunk
+            ),
+            "sharded": lambda Q_, X_: sharded_knn_search(
+                Q_, X_, nn, "zen", mesh=mesh, chunk=chunk
+            ),
+        }
+        for name, fn in paths.items():
+            t = _timeit(lambda: fn(Qb, X)[0], repeat=2)
+            tb = temp_bytes(fn, n)
+            mb = f"{tb / 2**20:.2f}" if tb >= 0 else "n/a"
+            _row(
+                f"retrieval_topk_{name}_n{n}", t,
+                f"qps={q / (t * 1e-6):.0f};peak_temp_mb={mb};"
+                f"neighbors={nn};chunk={chunk}",
+            )
+
+
 def bench_serving() -> None:
     from repro.data import synthetic as syn
     from repro.launch.serve import ZenServer, build_index
@@ -219,16 +276,35 @@ def bench_serving() -> None:
          "per-query; zen topk + exact rerank")
 
 
+_WORKLOADS = {
+    "bounds": lambda a: bench_bounds(),
+    "euclidean": lambda a: bench_euclidean_spaces(),
+    "jsd": lambda a: bench_jsd_spaces(),
+    "recall": lambda a: bench_recall(),
+    "runtime": lambda a: bench_runtime_fig21(),
+    "ablations": lambda a: bench_ablations(),
+    "kernels": lambda a: bench_kernels(),
+    "serving": lambda a: bench_serving(),
+    "retrieval_topk": lambda a: bench_retrieval_topk(smoke=a.smoke),
+}
+
+
 def main() -> None:
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--workload", default="all",
+                   choices=["all"] + sorted(_WORKLOADS))
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized shapes (retrieval_topk only)")
+    args = p.parse_args()
+
     print("name,us_per_call,derived")
-    bench_bounds()
-    bench_euclidean_spaces()
-    bench_jsd_spaces()
-    bench_recall()
-    bench_runtime_fig21()
-    bench_ablations()
-    bench_kernels()
-    bench_serving()
+    if args.workload == "all":
+        for fn in _WORKLOADS.values():
+            fn(args)
+    else:
+        _WORKLOADS[args.workload](args)
 
 
 if __name__ == "__main__":

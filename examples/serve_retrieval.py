@@ -2,10 +2,15 @@
 reduced index (the paper's production use case).
 
 Pipeline: synthesise a 100k x 512 corpus on a manifold -> build the reduced
-index (k = 24) -> serve 16 query batches of 128 with Zen top-k + exact
-re-rank -> report recall vs brute force and latency percentiles.
+index (k = 24) -> serve 16 query batches of 128 with the *streaming* Zen
+top-k (never materialises the (Q, N) estimator matrix; peak per-query memory
+is one --chunk tile) + exact re-rank -> report recall vs brute force and
+latency percentiles. ``--sharded`` row-shards the reduced index over every
+local device and searches per shard with a host-side candidate merge.
 
 Run:  PYTHONPATH=src python examples/serve_retrieval.py [--n 100000]
+      PYTHONPATH=src python examples/serve_retrieval.py --sharded \
+          [--chunk 8192]
 """
 import argparse
 import time
@@ -27,6 +32,10 @@ def main():
     p.add_argument("--batches", type=int, default=16)
     p.add_argument("--batch-size", type=int, default=128)
     p.add_argument("--neighbors", type=int, default=10)
+    p.add_argument("--chunk", type=int, default=8192,
+                   help="streaming tile: per-query peak memory bound")
+    p.add_argument("--sharded", action="store_true",
+                   help="row-shard the index over all local devices")
     args = p.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -34,13 +43,19 @@ def main():
           f"{args.dim // 16})")
     corpus = syn.manifold_space(key, args.n, args.dim, args.dim // 16)
 
+    mesh = None
+    if args.sharded:
+        from jax.sharding import Mesh
+        mesh = Mesh(np.asarray(jax.devices()), ("shard",))
+        print(f"sharding index rows over {len(jax.devices())} device(s)")
+
     t0 = time.time()
-    index = build_index(corpus, args.k)
+    index = build_index(corpus, args.k, mesh=mesh)
     print(f"index built in {time.time() - t0:.1f}s: "
           f"{index.size} x {args.k} "
           f"({args.dim * 4 / (args.k * 4):.0f}x memory reduction)")
 
-    server = ZenServer(index, rerank_factor=8)
+    server = ZenServer(index, rerank_factor=8, chunk=args.chunk)
     recalls = []
     for b in range(args.batches):
         q = syn.manifold_space(

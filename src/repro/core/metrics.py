@@ -32,6 +32,10 @@ def sqeuclidean_pdist(X: Array, Y: Array) -> Array:
     y2 = jnp.sum(Y.astype(acc) ** 2, axis=-1)
     xy = jnp.matmul(X, Y.T, preferred_element_type=acc)
     d2 = x2[:, None] + y2[None, :] - 2.0 * xy
+    if Y is X:
+        # self-distances are definitionally zero; the matmul form leaves
+        # O(eps*||x||^2) roundoff there, which sqrt inflates to O(sqrt(eps))
+        d2 = d2 * (1.0 - jnp.eye(d2.shape[0], dtype=d2.dtype))
     return jnp.maximum(d2, 0.0)
 
 
@@ -53,7 +57,9 @@ def l1_normalize(X: Array, eps: float = _EPS) -> Array:
 
 def cosine_pdist(X: Array, Y: Array) -> Array:
     """Paper Eq. (11): Euclidean distance over L2-normalised vectors."""
-    return euclidean_pdist(l2_normalize(X), l2_normalize(Y))
+    Xn = l2_normalize(X)
+    Yn = Xn if Y is X else l2_normalize(Y)
+    return euclidean_pdist(Xn, Yn)
 
 
 def _h(x: Array) -> Array:
@@ -161,7 +167,9 @@ def pairwise(name: str, X: Array, Y: Array) -> Array:
     """Normalise (if the metric requires it) and compute the pairwise matrix."""
     m = get_metric(name)
     if m.normalize is not None:
-        X, Y = m.normalize(X), m.normalize(Y)
+        Xn = m.normalize(X)
+        Y = Xn if Y is X else m.normalize(Y)  # keep the self-pdist identity
+        X = Xn
     return m.pdist(X, Y)
 
 

@@ -202,6 +202,9 @@ def verify_base_simplex(D: Array, base: BaseSimplex, *, atol: float = 1e-4) -> T
         + jnp.sum(V**2, -1)[None, :]
         - 2 * V @ V.T
     )
+    # self-distances are definitionally zero; the matrix-op form leaves
+    # O(eps*||v||^2) roundoff there which sqrt would inflate to O(sqrt(eps))
+    d2 = d2 * (1.0 - jnp.eye(d2.shape[0], dtype=d2.dtype))
     got = jnp.sqrt(jnp.maximum(d2, 0.0))
     err = float(jnp.max(jnp.abs(got - jnp.asarray(D, got.dtype))))
     return err <= atol, err

@@ -26,6 +26,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
+
 Array = jax.Array
 
 MODES = ("zen", "lwb", "upb")
@@ -76,51 +78,61 @@ def estimate_triple(X: Array, Y: Array) -> Tuple[Array, Array, Array]:
     return sq(z2 - cross), sq(z2), sq(z2 + cross)
 
 
-@partial(jax.jit, static_argnames=("n_neighbors", "mode", "chunk"))
+@partial(jax.jit, static_argnames=("n_neighbors", "mode"))
+def _dense_topk(
+    queries: Array, index: Array, n_neighbors: int, mode: str
+) -> Tuple[Array, Array]:
+    """Reference dense path: full (Q, N) estimator matrix + lax.top_k."""
+    d = estimate_pdist(queries, index, mode)
+    neg, ids = jax.lax.top_k(-d, n_neighbors)
+    return -neg, ids
+
+
 def knn_search(
     queries: Array,
     index: Array,
     n_neighbors: int = 10,
     mode: str = "zen",
     chunk: int = 0,
+    *,
+    stream: bool = None,
+    force_kernel: bool = False,
 ) -> Tuple[Array, Array]:
     """Top-k nearest neighbours of ``queries`` in ``index`` under an estimator.
 
     Args:
       queries: (Q, k) projected queries.
       index:   (N, k) projected index.
-      chunk:   if > 0, scan the index in chunks of this many rows (bounded
+      chunk:   if > 0, stream the index in blocks of this many rows (bounded
                memory: keeps a running top-k instead of the full (Q, N) matrix).
+      stream:  force the streaming path on (True) or off (False); by default
+               it is chosen automatically — always on TPU (fused Pallas
+               kernel), and on other backends whenever ``chunk`` is set and
+               the index is larger than one chunk.
+      force_kernel: run the Pallas kernel in interpret mode off-TPU
+               (tests / parity checks).
 
     Returns:
       (distances, indices), each (Q, n_neighbors), ascending distance.
+
+    The streaming path dispatches through ``kernels.ops.zen_topk``: the fused
+    Pallas kernel on TPU, a lax.scan with identical merge semantics elsewhere.
+    Peak per-query memory is one index tile — flat in N — versus the dense
+    path's O(N).
     """
-    if chunk and index.shape[0] > chunk:
-        n = index.shape[0]
-        pad = (-n) % chunk
-        idx_pad = jnp.pad(index, ((0, pad), (0, 0)))  # zero rows, masked below
-        n_chunks = idx_pad.shape[0] // chunk
-        blocks = idx_pad.reshape(n_chunks, chunk, index.shape[1])
-
-        def body(carry, blk_and_off):
-            best_d, best_i = carry
-            blk, off = blk_and_off
-            d = estimate_pdist(queries, blk, mode)
-            ids = (off + jnp.arange(chunk, dtype=jnp.int32)).astype(jnp.int32)
-            d = jnp.where(ids[None, :] < n, d, jnp.inf)  # mask padded rows
-            cat_d = jnp.concatenate([best_d, d], axis=1)
-            cat_i = jnp.concatenate([best_i, jnp.broadcast_to(ids, d.shape)], axis=1)
-            neg, pos = jax.lax.top_k(-cat_d, n_neighbors)
-            return (-neg, jnp.take_along_axis(cat_i, pos, axis=1)), None
-
-        init = (
-            jnp.full((queries.shape[0], n_neighbors), jnp.inf, _acc(queries)),
-            jnp.full((queries.shape[0], n_neighbors), -1, jnp.int32),
+    n_neighbors = min(n_neighbors, index.shape[0])
+    use_stream = stream
+    if use_stream is None:  # auto: always stream on TPU, else when chunked
+        use_stream = (
+            bool(chunk) and index.shape[0] > chunk
+        ) or jax.default_backend() == "tpu"
+    if use_stream or force_kernel:
+        return kernel_ops.zen_topk(
+            queries,
+            index,
+            n_neighbors,
+            mode,
+            force_kernel=force_kernel,
+            chunk=chunk or 4096,
         )
-        offs = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
-        (best_d, best_i), _ = jax.lax.scan(body, init, (blocks, offs))
-        return best_d, best_i
-
-    d = estimate_pdist(queries, index, mode)
-    neg, ids = jax.lax.top_k(-d, n_neighbors)
-    return -neg, ids
+    return _dense_topk(queries, index, n_neighbors, mode)

@@ -1,4 +1,12 @@
-from . import sharding
+from . import retrieval, sharding
+from .retrieval import sharded_knn_search
 from .sharding import data_axes, opt_state_specs, param_specs
 
-__all__ = ["sharding", "param_specs", "opt_state_specs", "data_axes"]
+__all__ = [
+    "sharding",
+    "retrieval",
+    "sharded_knn_search",
+    "param_specs",
+    "opt_state_specs",
+    "data_axes",
+]

@@ -1,0 +1,134 @@
+"""Sharded nSimplex-Zen retrieval: per-shard streaming top-k + host merge.
+
+For indexes too large for one device, the reduced (N, k) coordinate matrix is
+row-sharded over a mesh axis. Each device runs the streaming fused top-k
+(``kernels.ops.zen_topk``) over its local shard — never materialising a
+(Q, N_shard) matrix — and emits its best-k candidates with *global* row ids
+(local id + shard offset, derived from ``lax.axis_index`` inside shard_map).
+The per-shard candidate lists, (Q, n_shards * k) after the shard_map gather,
+are merged with one host-side ``lax.top_k``; merge cost is O(n_shards * k)
+per query, independent of index size.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:  # moved out of experimental in newer jax
+    from jax.shard_map import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
+from repro.kernels import ops as kernel_ops
+
+Array = jax.Array
+
+
+def sharded_knn_search(
+    queries: Array,
+    index: Array,
+    n_neighbors: int = 10,
+    mode: str = "zen",
+    *,
+    mesh,
+    axis: Optional[Union[str, Tuple[str, ...]]] = None,
+    chunk: int = 4096,
+    force_kernel: bool = False,
+    n_valid: Optional[int] = None,
+) -> Tuple[Array, Array]:
+    """Top-k of ``queries`` in a row-sharded ``index`` over ``mesh``.
+
+    Args:
+      queries: (Q, k) projected queries, replicated to every device.
+      index:   (N, k) projected index, row-sharded over ``axis``.
+      mesh:    the device mesh.
+      axis:    mesh axis name (or tuple of names) the rows are sharded over;
+               defaults to all mesh axes.
+      chunk:   streaming chunk for the per-shard scan fallback off-TPU.
+      force_kernel: run the Pallas kernel in interpret mode off-TPU.
+      n_valid: number of real index rows when ``index`` was pre-padded to a
+               shard-divisible length (e.g. by ``build_index``); trailing
+               rows are treated as padding. Defaults to all rows.
+
+    Returns:
+      (distances, indices), each (Q, n_neighbors), ascending distance, with
+      indices referring to rows of the *global* index.
+    """
+    if axis is None:
+        axis_names: Tuple[str, ...] = tuple(mesh.axis_names)
+    elif isinstance(axis, str):
+        axis_names = (axis,)
+    else:
+        axis_names = tuple(axis)
+    n_shards = math.prod(mesh.shape[a] for a in axis_names)
+
+    n = index.shape[0] if n_valid is None else n_valid
+    n_neighbors = min(n_neighbors, n)
+    if index.shape[0] % n_shards:
+        shard_rows = -(-index.shape[0] // n_shards)  # ceil
+        index = jnp.pad(
+            index, ((0, shard_rows * n_shards - index.shape[0]), (0, 0))
+        )  # zero rows, never returned (see k_fetch below)
+    else:  # pre-padded (or evenly divisible) index: no O(N) copy per call
+        shard_rows = index.shape[0] // n_shards
+    # Padding rows sit at the estimator distance of the origin, so they can
+    # win local top-k slots from real candidates before the global-id mask
+    # runs. All padding lives in the trailing shard(s): fetching that many
+    # extra local candidates guarantees the true top-k survives the merge.
+    n_pad = shard_rows * n_shards - n
+    k_fetch = min(shard_rows, n_neighbors + min(n_pad, shard_rows))
+    return _sharded_topk(
+        queries, index, n=n, shard_rows=shard_rows, k_fetch=k_fetch,
+        n_neighbors=n_neighbors, mode=mode, mesh=mesh,
+        axis_names=axis_names, chunk=chunk, force_kernel=force_kernel,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n", "shard_rows", "k_fetch", "n_neighbors", "mode", "mesh",
+        "axis_names", "chunk", "force_kernel",
+    ),
+)
+def _sharded_topk(
+    queries: Array,
+    index: Array,
+    *,
+    n: int,
+    shard_rows: int,
+    k_fetch: int,
+    n_neighbors: int,
+    mode: str,
+    mesh,
+    axis_names: Tuple[str, ...],
+    chunk: int,
+    force_kernel: bool,
+) -> Tuple[Array, Array]:
+    def local_topk(q, x):
+        # x: (shard_rows, kdim) — this device's shard
+        off = jnp.int32(0)
+        for a in axis_names:  # linearised shard position on the (sub)mesh
+            off = off * mesh.shape[a] + jax.lax.axis_index(a)
+        d, ids = kernel_ops.zen_topk(
+            q, x, k_fetch, mode, force_kernel=force_kernel, chunk=chunk
+        )
+        gids = ids + off * shard_rows
+        d = jnp.where(gids < n, d, jnp.inf)  # mask padded tail rows
+        return d, gids
+
+    shard_axes = axis_names if len(axis_names) > 1 else axis_names[0]
+    d, gids = shard_map(
+        local_topk,
+        mesh=mesh,
+        in_specs=(P(), P(shard_axes, None)),
+        out_specs=(P(None, shard_axes), P(None, shard_axes)),
+    )(queries, index)
+    # (Q, n_shards * k_local) candidate pool -> final host-side merge
+    neg, pos = jax.lax.top_k(-d, n_neighbors)
+    return -neg, jnp.take_along_axis(gids, pos, axis=1)

@@ -2,10 +2,11 @@
 
 Layout (per repo convention):
   pdist.py / zen.py / jsd.py — pl.pallas_call kernels with explicit BlockSpecs
+  zen_topk.py                — streaming fused estimator + running top-k
   ops.py                     — jit'd public wrappers with backend dispatch
   ref.py                     — pure-jnp oracles, the correctness source of truth
 """
-from . import ops, ref
+from . import ops, ref, zen_topk
 from .ops import jsd_pdist, pdist_sq, zen_estimate
 
-__all__ = ["ops", "ref", "pdist_sq", "zen_estimate", "jsd_pdist"]
+__all__ = ["ops", "ref", "zen_topk", "pdist_sq", "zen_estimate", "jsd_pdist"]

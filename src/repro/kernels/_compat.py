@@ -1,0 +1,23 @@
+"""Version compatibility shims for the Pallas TPU API surface.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and back,
+depending on the release line); every kernel in this package goes through
+:func:`compiler_params` so a single site tracks the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+if CompilerParams is None:  # pragma: no cover - ancient jax
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is unsupported"
+    )
+
+
+def compiler_params(*, dimension_semantics, **kw):
+    """Build TPU compiler params across the CompilerParams rename."""
+    return CompilerParams(dimension_semantics=dimension_semantics, **kw)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import compiler_params
+
 Array = jax.Array
 
 _INNER = 16  # feature columns folded per fori_loop step
@@ -98,7 +100,7 @@ def jsd_pdist(
         out_specs=pl.BlockSpec((bn, bk), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Np, Kp), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bn, bk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -15,6 +15,7 @@ from . import jsd as _jsd
 from . import pdist as _pdist
 from . import ref as _ref
 from . import zen as _zen
+from . import zen_topk as _zen_topk
 
 Array = jax.Array
 
@@ -45,6 +46,35 @@ def zen_estimate(
     if force_kernel:
         return _zen.zen_estimate(X, Y, mode, interpret=True, **block_kw)
     return _ref.zen_estimate_ref(X, Y, mode)
+
+
+def zen_topk(
+    queries: Array,
+    index: Array,
+    n_neighbors: int = 10,
+    mode: str = "zen",
+    *,
+    force_kernel: bool = False,
+    chunk: int = 4096,
+    **block_kw,
+):
+    """Streaming top-k retrieval under an estimator; kernel-accelerated.
+
+    Dispatch: fused Pallas kernel on TPU (or under ``force_kernel`` via
+    interpret mode); otherwise the lax.scan fallback with the same
+    O(chunk)-per-query memory bound. All paths return
+    (distances, indices), each (Q, n_neighbors), without ever materialising
+    the (Q, N) estimator matrix.
+    """
+    if _on_tpu():
+        return _zen_topk.zen_topk(queries, index, n_neighbors, mode, **block_kw)
+    if force_kernel:
+        return _zen_topk.zen_topk(
+            queries, index, n_neighbors, mode, interpret=True, **block_kw
+        )
+    return _zen_topk.zen_topk_scan(
+        queries, index, n_neighbors, mode, chunk=chunk
+    )
 
 
 def jsd_pdist(

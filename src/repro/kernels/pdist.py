@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import compiler_params
+
 Array = jax.Array
 
 
@@ -81,7 +83,7 @@ def pdist_sq(
         out_specs=pl.BlockSpec((bn, bk), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Np, Kp), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bn, bk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

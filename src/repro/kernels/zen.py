@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import compiler_params
+
 Array = jax.Array
 
 _MODE = {"zen": 0, "lwb": 1, "upb": 2}
@@ -82,7 +84,7 @@ def zen_estimate(
         ],
         out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Np, Mp), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,

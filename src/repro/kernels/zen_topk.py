@@ -1,0 +1,241 @@
+"""Pallas TPU kernel: streaming fused Zen/Lwb/Upb top-k retrieval.
+
+The serving hot path (paper §6) is "find the n nearest index rows to each
+query under an estimator". The dense formulation materialises the full (Q, N)
+estimator matrix and runs ``lax.top_k`` over it, so per-query memory grows
+linearly with index size N. This kernel never materialises that matrix: the
+grid is (Q/bq, N/bn) with ``dimension_semantics=("parallel", "arbitrary")`` —
+each query block walks the index tiles sequentially, fusing the estimator
+(same masked-matmul + rank-1 altitude correction as ``kernels/zen.py``) with a
+running top-k held in VMEM scratch:
+
+  best_d, best_i : (bq, kw) scratch, kw = n_neighbors rounded up to a lane
+  per tile:        d = estimator(q_block, x_tile)          (bq, bn)
+                   merge = top_k(concat([best, d], axis=1), kw)
+
+Peak per-query state is therefore O(kw + bn) — one tile — independent of N.
+Index row ids are derived in-register from the tile position (``j*bn + iota``)
+so no id tensor is streamed either. Padded tail rows (N not a multiple of bn)
+are masked to +inf before the merge; padded scratch lanes (kw > n_neighbors)
+start at +inf and can never win.
+
+``zen_topk_scan`` is the schedule-equivalent jnp fallback for CPU/GPU: a
+``lax.scan`` over index chunks with the same concat + top_k merge — XLA keeps
+only one chunk of distances live, giving the same O(chunk) memory bound.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import compiler_params
+
+Array = jax.Array
+
+_MODE = {"zen": 0, "lwb": 1, "upb": 2}
+
+
+def _estimate_tile(q: Array, x: Array, *, true_k: int, mode: int) -> Array:
+    """Fused estimator distances for one (bq, kp) x (bn, kp) tile, f32."""
+    kp = q.shape[1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1)
+    keep = (col < true_k - 1).astype(jnp.float32)  # mask altitude + padding
+    valid = (col < true_k).astype(jnp.float32)  # mask padding only
+    qv = q * valid
+    xv = x * valid
+    nq = jnp.sum(qv * qv, axis=1, keepdims=True)  # (bq, 1) full norms
+    nx = jnp.sum(xv * xv, axis=1, keepdims=True)  # (bn, 1)
+    dot = jax.lax.dot_general(
+        qv * keep,
+        xv,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # altitude column zeroed on one side only — enough to drop it
+    z2 = nq + nx.T - 2.0 * dot
+    if mode != 0:
+        is_alt = (col == true_k - 1).astype(jnp.float32)
+        qa = jnp.sum(qv * is_alt, axis=1, keepdims=True)  # (bq, 1)
+        xa = jnp.sum(xv * is_alt, axis=1, keepdims=True)  # (bn, 1)
+        cross = 2.0 * qa * xa.T
+        z2 = z2 - cross if mode == 1 else z2 + cross
+    return jnp.sqrt(jnp.maximum(z2, 0.0))
+
+
+def _topk_kernel(
+    q_ref,
+    x_ref,
+    od_ref,
+    oi_ref,
+    bd_ref,
+    bi_ref,
+    *,
+    true_k: int,
+    n_index: int,
+    n_index_blocks: int,
+    mode: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        bd_ref[...] = jnp.full_like(bd_ref, jnp.inf)
+        bi_ref[...] = jnp.full_like(bi_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)  # (bq, kp)
+    x = x_ref[...].astype(jnp.float32)  # (bn, kp)
+    d = _estimate_tile(q, x, true_k=true_k, mode=mode)  # (bq, bn)
+
+    bn = x.shape[0]
+    ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    d = jnp.where(ids < n_index, d, jnp.inf)  # mask padded tail rows
+
+    kw = bd_ref.shape[1]
+    cat_d = jnp.concatenate([bd_ref[...], d], axis=1)  # (bq, kw + bn)
+    cat_i = jnp.concatenate(
+        [bi_ref[...], jnp.broadcast_to(ids, d.shape)], axis=1
+    )
+    neg, pos = jax.lax.top_k(-cat_d, kw)
+    bd_ref[...] = -neg
+    bi_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+
+    @pl.when(j == n_index_blocks - 1)
+    def _done():
+        od_ref[...] = bd_ref[...]
+        oi_ref[...] = bi_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_neighbors", "mode", "block_q", "block_n", "interpret"),
+)
+def zen_topk(
+    queries: Array,
+    index: Array,
+    n_neighbors: int = 10,
+    mode: str = "zen",
+    *,
+    block_q: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> Tuple[Array, Array]:
+    """Streaming top-k under an estimator: (Q, k) x (N, k) -> (Q, n), (Q, n).
+
+    Returns (distances f32, indices int32), each (Q, n_neighbors), rows sorted
+    ascending by distance. Never materialises a (Q, N) matrix.
+    """
+    q, kdim = queries.shape
+    n, kdim2 = index.shape
+    assert kdim == kdim2, (queries.shape, index.shape)
+    assert 0 < n_neighbors <= n, (n_neighbors, n)
+    bq = min(block_q, _rup(q, 8))
+    bn = min(block_n, _rup(n, 128))
+    kw = _rup(n_neighbors, 128)  # scratch lane width
+    Qp, Np, Kp = _rup(q, bq), _rup(n, bn), _rup(kdim, 128)
+    Qpad = jnp.pad(queries, ((0, Qp - q), (0, Kp - kdim)))
+    Xpad = jnp.pad(index, ((0, Np - n), (0, Kp - kdim)))
+    n_index_blocks = Np // bn
+
+    out_d, out_i = pl.pallas_call(
+        functools.partial(
+            _topk_kernel,
+            true_k=kdim,
+            n_index=n,
+            n_index_blocks=n_index_blocks,
+            mode=_MODE[mode],
+        ),
+        grid=(Qp // bq, n_index_blocks),
+        in_specs=[
+            pl.BlockSpec((bq, Kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, Kp), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, kw), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, kw), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, kw), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, kw), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, kw), jnp.float32),
+            pltpu.VMEM((bq, kw), jnp.int32),
+        ],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+        name="nsimplex_zen_topk",
+    )(Qpad, Xpad)
+    return out_d[:q, :n_neighbors], out_i[:q, :n_neighbors]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_neighbors", "mode", "chunk")
+)
+def zen_topk_scan(
+    queries: Array,
+    index: Array,
+    n_neighbors: int = 10,
+    mode: str = "zen",
+    *,
+    chunk: int = 4096,
+) -> Tuple[Array, Array]:
+    """Bounded-memory jnp fallback: fori_loop of dynamic index slices.
+
+    Peak live distance state is one (Q, chunk) block + the (Q, n_neighbors)
+    running best — flat in index size, matching the kernel's memory bound.
+    The index is sliced in place (no padded copy): the final chunk is clamped
+    back to ``n - chunk`` and its already-visited rows masked out, so no
+    O(N) temporary is ever allocated.
+    """
+    q, kdim = queries.shape
+    n = index.shape[0]
+    assert 0 < n_neighbors <= n, (n_neighbors, n)
+    chunk = min(chunk, n)
+    acc = jnp.promote_types(queries.dtype, jnp.float32)
+    queries = queries.astype(acc)
+    n_chunks = -(-n // chunk)  # ceil
+
+    mode_i = _MODE[mode]
+    qn = jnp.sum(queries * queries, axis=1, keepdims=True)  # (Q, 1)
+    qa = queries[:, -1:]  # (Q, 1) altitudes
+
+    def body(i, carry):
+        best_d, best_i = carry
+        start = jnp.minimum(i * chunk, n - chunk)  # clamp the tail chunk
+        blk = jax.lax.dynamic_slice_in_dim(index, start, chunk, axis=0)
+        blk = blk.astype(acc)
+        xn = jnp.sum(blk * blk, axis=1)  # (chunk,)
+        dot = jnp.matmul(
+            queries[:, :-1], blk[:, :-1].T, preferred_element_type=acc
+        )
+        z2 = qn + xn[None, :] - 2.0 * dot
+        if mode_i != 0:
+            cross = 2.0 * qa * blk[:, -1][None, :]
+            z2 = z2 - cross if mode_i == 1 else z2 + cross
+        d = jnp.sqrt(jnp.maximum(z2, 0.0))
+        ids = (start + jnp.arange(chunk, dtype=jnp.int32)).astype(jnp.int32)
+        # a clamped tail revisits rows of the previous chunk: mask them out
+        d = jnp.where(ids[None, :] >= i * chunk, d, jnp.inf)
+        cat_d = jnp.concatenate([best_d, d], axis=1)
+        cat_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(ids, d.shape)], axis=1
+        )
+        neg, pos = jax.lax.top_k(-cat_d, n_neighbors)
+        return -neg, jnp.take_along_axis(cat_i, pos, axis=1)
+
+    init = (
+        jnp.full((q, n_neighbors), jnp.inf, acc),
+        jnp.full((q, n_neighbors), -1, jnp.int32),
+    )
+    best_d, best_i = jax.lax.fori_loop(0, n_chunks, body, init)
+    return best_d, best_i
+
+
+def _rup(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

@@ -13,7 +13,20 @@ importing this module touches no jax device state; the dry-run sets
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types on Mesh
+    from jax.sharding import AxisType
+except ImportError:  # older jax: every mesh axis is implicitly "auto"
+    AxisType = None
+
+
+def _make_mesh(shape, axes, devices):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes, devices=devices)
+    return jax.make_mesh(
+        shape, axes, devices=devices,
+        axis_types=(AxisType.Auto,) * len(axes),
+    )
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -29,16 +42,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             "dry-run entrypoint must set XLA_FLAGS="
             "--xla_force_host_platform_device_count=512 before importing jax"
         )
-    return jax.make_mesh(
-        shape, axes, devices=devices[:n],
-        axis_types=(AxisType.Auto,) * len(axes),
-    )
+    return _make_mesh(shape, axes, devices[:n])
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU smoke)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        devices=jax.devices()[: data * model],
-        axis_types=(AxisType.Auto, AxisType.Auto),
+    return _make_mesh(
+        (data, model), ("data", "model"), jax.devices()[: data * model]
     )

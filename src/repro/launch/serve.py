@@ -3,11 +3,18 @@ feature (DESIGN.md §3).
 
 Offline:  ``build_index`` fits the transform on a witness sample, projects the
           corpus to (N, k) apex coordinates (one pdist + one triangular solve,
-          both kernel paths), and shards the reduced index over the mesh.
-Online:   ``ZenServer.query`` projects a query batch (k reference distances),
-          scores it against the sharded index with the fused Zen kernel,
-          merges per-shard top-k, and optionally re-ranks the candidate pool
-          with true distances (paper [50]'s deployment pattern).
+          both kernel paths), and optionally row-shards the reduced index over
+          a mesh.
+Online:   ``ZenServer.query`` projects a query batch (k reference distances)
+          and scores it with the *streaming fused top-k* path
+          (``kernels.ops.zen_topk``): the estimator and a running top-k are
+          fused over index tiles, so per-query peak memory is one tile —
+          O(chunk + n_neighbors), flat in index size — instead of the dense
+          (Q, N) estimator matrix. Sharded indexes run the same streaming
+          search per device shard (``distributed.sharded_knn_search``) and
+          merge the (Q, n_shards * k) candidate pool host-side. An optional
+          exact re-rank of the candidate pool with true distances follows
+          (paper [50]'s deployment pattern).
 
 CLI (CPU demo):  PYTHONPATH=src python -m repro.launch.serve --n 20000 --dim \
                  256 --k 16 --queries 64
@@ -28,6 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import metrics as metrics_lib
 from repro.core import zen as zen_lib
 from repro.core.projection import NSimplexTransform, select_references
+from repro.distributed import retrieval as retrieval_lib
 from repro.kernels import ops as kernel_ops
 
 Array = jax.Array
@@ -38,10 +46,12 @@ class ZenIndex:
     transform: NSimplexTransform
     coords: Array            # (N, k) apex coordinates (possibly sharded)
     corpus: Optional[Array]  # original vectors for re-ranking (optional)
+    mesh: Optional[object] = None  # device mesh when coords are row-sharded
+    n_valid: Optional[int] = None  # real rows when coords are shard-padded
 
     @property
     def size(self) -> int:
-        return self.coords.shape[0]
+        return self.n_valid if self.n_valid is not None else self.coords.shape[0]
 
 
 def build_index(
@@ -57,22 +67,42 @@ def build_index(
     key = key if key is not None else jax.random.PRNGKey(0)
     tr = select_references(corpus, k, key, metric=metric)
     coords = tr.transform(corpus)
+    n_valid = None
     if mesh is not None:
-        rows = P(tuple(mesh.axis_names))  # shard rows over the whole mesh
+        # pad once to a shard-divisible row count so every query batch skips
+        # the O(N) re-pad; the search masks rows >= n_valid
+        n_valid = coords.shape[0]
+        n_shards = 1
+        for a in mesh.axis_names:
+            n_shards *= mesh.shape[a]
+        pad = (-n_valid) % n_shards
+        if pad:
+            coords = jnp.pad(coords, ((0, pad), (0, 0)))
+        rows = tuple(mesh.axis_names)  # shard rows over the whole mesh
         coords = jax.device_put(coords, NamedSharding(mesh, P(rows, None)))
     return ZenIndex(transform=tr, coords=coords,
-                    corpus=corpus if keep_corpus else None)
+                    corpus=corpus if keep_corpus else None, mesh=mesh,
+                    n_valid=n_valid)
 
 
 class ZenServer:
-    """Batched k-NN serving over a reduced index."""
+    """Batched k-NN serving over a reduced index.
+
+    The search path never materialises a (Q, N) estimator matrix: single-host
+    indexes stream through ``core.zen.knn_search`` (fused Pallas kernel on
+    TPU, bounded-memory scan elsewhere) once the index exceeds ``chunk`` rows;
+    mesh-sharded indexes run the streaming search per shard and merge the
+    per-shard candidates host-side.
+    """
 
     def __init__(self, index: ZenIndex, *, mode: str = "zen",
-                 rerank_factor: int = 0, chunk: int = 8192):
+                 rerank_factor: int = 0, chunk: int = 8192,
+                 force_kernel: bool = False):
         self.index = index
         self.mode = mode
         self.rerank_factor = rerank_factor
         self.chunk = chunk
+        self.force_kernel = force_kernel
         self._stats = {"queries": 0, "batches": 0, "latency_s": []}
 
     def query(self, queries: Array, n_neighbors: int = 10
@@ -81,11 +111,20 @@ class ZenServer:
         t0 = time.time()
         qp = self.index.transform.transform(queries)
         n_fetch = n_neighbors * max(self.rerank_factor, 1)
-        d, ids = zen_lib.knn_search(
-            qp, self.index.coords, n_neighbors=min(n_fetch, self.index.size),
-            mode=self.mode,
-            chunk=self.chunk if self.index.size > self.chunk else 0,
-        )
+        if self.index.mesh is not None:
+            d, ids = retrieval_lib.sharded_knn_search(
+                qp, self.index.coords,
+                n_neighbors=min(n_fetch, self.index.size), mode=self.mode,
+                mesh=self.index.mesh, chunk=self.chunk,
+                force_kernel=self.force_kernel, n_valid=self.index.n_valid,
+            )
+        else:
+            d, ids = zen_lib.knn_search(
+                qp, self.index.coords,
+                n_neighbors=min(n_fetch, self.index.size), mode=self.mode,
+                chunk=self.chunk if self.index.size > self.chunk else 0,
+                force_kernel=self.force_kernel,
+            )
         if self.rerank_factor and self.index.corpus is not None:
             d, ids = self._rerank(queries, ids, n_neighbors)
         else:

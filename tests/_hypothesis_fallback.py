@@ -1,0 +1,59 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The property tests in this suite only use ``@settings``/``@given`` with
+``st.integers`` strategies. This fallback replays each property over a fixed
+deterministic sample of draws (seeded rng), so the suite stays runnable — and
+still exercises a spread of shapes/seeds — in environments without the real
+dependency. With ``hypothesis`` installed the real library is used instead
+(see the try/except import in the test modules).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def sample(self, rng):
+        return self._draw(rng)
+
+
+class _Integers:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+st = _Integers()
+
+_DEFAULT_EXAMPLES = 10
+
+
+def settings(*, max_examples=_DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                fn(**drawn)
+
+        # pytest must see the zero-arg signature, not the wrapped one —
+        # otherwise the drawn parameters look like missing fixtures
+        del wrapper.__dict__["__wrapped__"]
+        return wrapper
+
+    return deco

@@ -5,7 +5,11 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: fixed-seed replay keeps the suite green
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import metrics as M
 from repro.core import simplex as S

@@ -20,12 +20,10 @@ _SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json, sys
     import jax
-    from jax.sharding import AxisType
+    from repro.launch.mesh import _make_mesh
     from repro.launch.steps import build_plan
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         devices=jax.devices()[:8],
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = _make_mesh((2, 2, 2), ("pod", "data", "model"), jax.devices()[:8])
     out = []
     for arch, shape in json.loads(sys.argv[1]):
         plan = build_plan(arch, shape, reduced=True, multi_pod=True)
@@ -34,6 +32,8 @@ _SCRIPT = textwrap.dedent("""
             continue
         compiled = plan.lower(mesh).compile()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax: list of per-computation dicts
+            ca = ca[0] if ca else {}
         out.append([arch, shape, "ok", float(ca.get("flops", 0))])
     print("RESULT " + json.dumps(out))
 """)

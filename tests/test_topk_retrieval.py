@@ -1,0 +1,266 @@
+"""Streaming fused top-k retrieval: kernel/scan/dense parity (including
+chunk-boundary and padded-tail shapes), estimator bound ordering, apex
+projection parity with the paper oracle, sharded search, and the
+bounded-memory guarantee. All paths run on CPU (interpret=True for Pallas)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as M
+from repro.core import simplex as S
+from repro.core import zen as Z
+from repro.core.projection import NSimplexTransform
+from repro.kernels import ops
+from repro.kernels import zen_topk as zt
+
+
+def _projected(seed, n, m, k):
+    """Real apex coordinates: fit on random refs, project random objects."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, m))
+    refs = rng.normal(size=(k, m))
+    tr = NSimplexTransform(k=k).fit(jnp.asarray(refs, jnp.float32))
+    return tr, jnp.asarray(tr.transform(jnp.asarray(X, jnp.float32)), jnp.float32)
+
+
+def _rand_coords(seed, n, k):
+    """Synthetic projected coords (non-negative altitude column)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, k)).astype(np.float32)
+    X[:, -1] = np.abs(X[:, -1])
+    return jnp.asarray(X)
+
+
+# -- kernel vs dense parity ----------------------------------------------------
+
+SHAPES = [
+    # (Q, N, k, n_neighbors, block_n): aligned, chunk-boundary, padded tail,
+    # single-block, k=1 and k=N corner cases
+    (8, 512, 16, 10, 128),    # N a multiple of the tile
+    (5, 300, 17, 10, 128),    # padded tail (300 = 2*128 + 44)
+    (3, 129, 8, 5, 128),      # one-row tail
+    (9, 100, 12, 7, 128),     # N smaller than one tile
+    (2, 257, 6, 1, 128),      # n_neighbors = 1
+    (4, 96, 9, 96, 128),      # n_neighbors = N (full ranking)
+]
+
+
+@pytest.mark.parametrize("q,n,k,nn,bn", SHAPES)
+@pytest.mark.parametrize("mode", ["zen", "lwb", "upb"])
+def test_streaming_kernel_matches_dense(q, n, k, nn, bn, mode):
+    rng = np.random.default_rng(q * 7 + n)
+    Q = _rand_coords(q * 7 + n, q, k)
+    X = _rand_coords(q * 7 + n + 1, n, k)
+    want_d, want_i = Z._dense_topk(Q, X, nn, mode)
+    got_d, got_i = zt.zen_topk(Q, X, nn, mode, block_n=bn, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got_d), np.asarray(want_d), rtol=1e-5, atol=1e-5
+    )
+    assert (np.asarray(got_i) == np.asarray(want_i)).all()
+
+
+@pytest.mark.parametrize("q,n,k,nn,bn", SHAPES)
+def test_streaming_scan_matches_dense(q, n, k, nn, bn):
+    Q = _rand_coords(q + n, q, k)
+    X = _rand_coords(q + n + 1, n, k)
+    want_d, want_i = Z._dense_topk(Q, X, nn, "zen")
+    got_d, got_i = zt.zen_topk_scan(Q, X, nn, "zen", chunk=bn)
+    np.testing.assert_allclose(
+        np.asarray(got_d), np.asarray(want_d), rtol=1e-5, atol=1e-5
+    )
+    assert (np.asarray(got_i) == np.asarray(want_i)).all()
+
+
+def test_kernel_custom_query_blocks():
+    Q = _rand_coords(0, 37, 11)  # ragged query count vs block_q
+    X = _rand_coords(1, 400, 11)
+    want_d, want_i = Z._dense_topk(Q, X, 9, "zen")
+    got_d, got_i = zt.zen_topk(
+        Q, X, 9, "zen", block_q=16, block_n=128, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_d), np.asarray(want_d), rtol=1e-5, atol=1e-5
+    )
+    assert (np.asarray(got_i) == np.asarray(want_i)).all()
+
+
+def test_knn_search_dispatch_modes_agree():
+    tr, Xp = _projected(3, 400, 64, 12)
+    Qp = Xp[:11]
+    dense = Z.knn_search(Qp, Xp, n_neighbors=8)
+    streamed = Z.knn_search(Qp, Xp, n_neighbors=8, chunk=128)
+    kernel = Z.knn_search(Qp, Xp, n_neighbors=8, force_kernel=True)
+    for got_d, got_i in (streamed, kernel):
+        np.testing.assert_allclose(
+            np.asarray(got_d), np.asarray(dense[0]), rtol=1e-5, atol=1e-5
+        )
+        assert (np.asarray(got_i) == np.asarray(dense[1])).all()
+
+
+def test_ops_dispatch_cpu_scan_vs_interpret_kernel():
+    Q = _rand_coords(5, 6, 10)
+    X = _rand_coords(6, 350, 10)
+    a = ops.zen_topk(Q, X, 12)                      # scan fallback on CPU
+    b = ops.zen_topk(Q, X, 12, force_kernel=True)   # interpret-mode kernel
+    np.testing.assert_allclose(
+        np.asarray(a[0]), np.asarray(b[0]), rtol=1e-5, atol=1e-5
+    )
+    assert (np.asarray(a[1]) == np.asarray(b[1])).all()
+
+
+# -- estimator bound ordering (paper Lemma C.2 over the streaming path) --------
+
+
+def test_streaming_bound_ordering_on_projected_batch():
+    """Full streaming ranking per mode, rebuilt as matrices: Lwb <= Zen <= Upb."""
+    tr, Xp = _projected(11, 160, 48, 10)
+    Qp = Xp[:13]
+    n = Xp.shape[0]
+    mats = {}
+    for mode in ("lwb", "zen", "upb"):
+        d, ids = zt.zen_topk(Qp, Xp, n, mode, block_n=128, interpret=True)
+        mat = np.zeros((Qp.shape[0], n), np.float32)
+        np.put_along_axis(mat, np.asarray(ids), np.asarray(d), axis=1)
+        mats[mode] = mat
+    tol = 1e-5
+    assert (mats["lwb"] <= mats["zen"] + tol).all()
+    assert (mats["zen"] <= mats["upb"] + tol).all()
+    # and the true distance is bracketed (projection preserves ref distances)
+    np.testing.assert_allclose(
+        mats["zen"], np.asarray(Z.zen_pdist(Qp, Xp)), rtol=1e-4, atol=1e-4
+    )
+
+
+# -- apex projection parity with the paper-faithful oracle ---------------------
+
+
+def test_apex_projection_parity_feeds_streaming_search():
+    rng = np.random.default_rng(21)
+    X = rng.normal(size=(50, 40))
+    refs = rng.normal(size=(9, 40))
+    D_refs = np.linalg.norm(refs[:, None] - refs[None, :], axis=-1)
+    dists = np.linalg.norm(X[:, None] - refs[None, :], axis=-1)
+    apex_oracle = S.apex_project_reference(D_refs, dists)
+
+    tr = NSimplexTransform(k=9).fit(jnp.asarray(refs))
+    Xp = np.asarray(tr.transform(jnp.asarray(X)))
+    np.testing.assert_allclose(Xp, apex_oracle, atol=1e-4)
+
+    # the oracle coordinates drive the streaming kernel to the same neighbours
+    Qf = jnp.asarray(Xp[:5], jnp.float32)
+    Xf = jnp.asarray(apex_oracle, jnp.float32)
+    got_d, got_i = zt.zen_topk(Qf, Xf, 6, "zen", interpret=True)
+    want_d, want_i = Z._dense_topk(Qf, Xf, 6, "zen")
+    np.testing.assert_allclose(
+        np.asarray(got_d), np.asarray(want_d), rtol=1e-5, atol=1e-5
+    )
+    assert (np.asarray(got_i) == np.asarray(want_i)).all()
+
+
+# -- sharded search ------------------------------------------------------------
+
+
+def test_sharded_search_single_device_mesh():
+    from jax.sharding import Mesh
+
+    from repro.distributed.retrieval import sharded_knn_search
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("shard",))
+    Q = _rand_coords(30, 7, 14)
+    X = _rand_coords(31, 500, 14)
+    want_d, want_i = Z._dense_topk(Q, X, 10, "zen")
+    got_d, got_i = sharded_knn_search(Q, X, 10, "zen", mesh=mesh)
+    np.testing.assert_allclose(
+        np.asarray(got_d), np.asarray(want_d), rtol=1e-5, atol=1e-5
+    )
+    assert (np.asarray(got_i) == np.asarray(want_i)).all()
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import zen as Z
+    from repro.distributed.retrieval import sharded_knn_search
+
+    mesh = Mesh(np.array(jax.devices()[:4]), ("shard",))
+    rng = np.random.default_rng(2)
+    for n, shift in [(1000, 0.0), (1001, 0.0), (37, 0.0),
+                     # pad rows sit at the origin: with the corpus far from it
+                     # and queries near it, padding would win every local
+                     # top-k slot unless masked/compensated correctly
+                     (5, 100.0), (1001, 100.0)]:
+        Q = jnp.asarray(rng.normal(size=(6, 12)), jnp.float32)
+        X = jnp.asarray(shift + rng.normal(size=(n, 12)), jnp.float32)
+        want_d, want_i = Z._dense_topk(Q, X, min(10, n), "zen")
+        got_d, got_i = sharded_knn_search(Q, X, 10, "zen", mesh=mesh)
+        assert np.allclose(np.asarray(got_d), np.asarray(want_d), atol=1e-4), n
+        assert (np.asarray(got_i) == np.asarray(want_i)).all(), (n, shift)
+    print("SHARDED_OK")
+""")
+
+
+def test_sharded_search_multi_device_merge():
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"),
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SHARDED_OK" in r.stdout
+
+
+# -- serving end-to-end over the kernel path -----------------------------------
+
+
+def test_zen_server_force_kernel_matches_default():
+    from repro.data import synthetic as syn
+    from repro.launch.serve import ZenServer, build_index
+
+    key = jax.random.PRNGKey(5)
+    corpus = syn.uniform_space(key, 2000, 64)
+    index = build_index(corpus, 8)
+    q = syn.uniform_space(jax.random.fold_in(key, 1), 5, 64)
+    d0, i0 = ZenServer(index, chunk=256).query(q, 5)
+    d1, i1 = ZenServer(index, chunk=256, force_kernel=True).query(q, 5)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-5,
+                               atol=1e-5)
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+
+
+# -- the memory bound itself ---------------------------------------------------
+
+
+def test_streaming_memory_flat_in_index_size():
+    """XLA temp allocation: dense grows ~linearly with N, streaming stays flat."""
+    kdim, nn, chunk, q = 16, 10, 1024, 8
+
+    def temp_bytes(fn, n):
+        Q = jax.ShapeDtypeStruct((q, kdim), jnp.float32)
+        X = jax.ShapeDtypeStruct((n, kdim), jnp.float32)
+        mem = jax.jit(fn).lower(Q, X).compile().memory_analysis()
+        return mem.temp_size_in_bytes
+
+    dense = lambda Q, X: Z._dense_topk(Q, X, nn, "zen")
+    stream = lambda Q, X: zt.zen_topk_scan(Q, X, nn, "zen", chunk=chunk)
+
+    n_small, n_big = 16 * 1024, 128 * 1024
+    dense_growth = temp_bytes(dense, n_big) / max(temp_bytes(dense, n_small), 1)
+    stream_small = temp_bytes(stream, n_small)
+    stream_big = temp_bytes(stream, n_big)
+    assert dense_growth > 4, dense_growth  # ~8x for 8x the rows
+    assert stream_big <= 2 * max(stream_small, 1), (stream_small, stream_big)
+    # and the streaming path's live state is tile-sized, not index-sized
+    assert stream_big < q * n_big * 4, stream_big
