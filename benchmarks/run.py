@@ -262,6 +262,82 @@ def bench_retrieval_topk(smoke: bool = False) -> None:
             )
 
 
+def bench_retrieval_ivf(smoke: bool = False) -> None:
+    """Clustered IVF vs flat streaming retrieval on the serving hot path:
+    project a manifold corpus to (N, k) apex coordinates (the paper
+    pipeline), build a k-means coarse quantizer over them, then sweep
+    ``nprobe`` reporting QPS and recall@10 against the flat streaming scan
+    over the same coordinates. Also reports the XLA peak temp allocation of
+    the probe at two index sizes with the tile geometry fixed — like the
+    flat streaming path, the probe's working set is one tile per query, flat
+    in N."""
+    from repro.core.projection import select_references
+    from repro.core.quality import recall_at_k
+    from repro.data import synthetic as syn
+    from repro.index import IVFZenIndex
+    from repro.kernels import ivf_probe as ip
+    from repro.kernels import zen_topk as zt
+
+    q, dim, kdim, nn, chunk = 32, 128, 16, 10, 4096
+    n = 20_000 if smoke else 200_000
+    n_clusters = max(64, int(round(4 * n**0.5)))
+    key = jax.random.PRNGKey(0)
+    corpus = syn.manifold_space(key, n, dim, 8)
+    tr = select_references(corpus, kdim, jax.random.fold_in(key, 1))
+    X = tr.transform(corpus).astype(jnp.float32)
+    Qb = tr.transform(
+        syn.manifold_space(jax.random.fold_in(key, 3), q, dim, 8)
+    ).astype(jnp.float32)
+
+    t0 = time.perf_counter()
+    index = IVFZenIndex.build(
+        X, n_clusters, key=jax.random.fold_in(key, 2),
+        n_iters=8 if smoke else 10,
+    )
+    _row(f"retrieval_ivf_build_n{n}", (time.perf_counter() - t0) * 1e6,
+         f"clusters={index.n_clusters};tiles_per_cluster="
+         f"{index.tiles_per_cluster};tile_rows={index.tile_rows}")
+
+    flat = lambda: zt.zen_topk_scan(Qb, X, nn, "zen", chunk=chunk)
+    flat_ids = np.asarray(flat()[1])  # also compiles ahead of the timing loop
+    t_flat = _timeit(lambda: flat()[0], repeat=2)
+    _row(f"retrieval_ivf_flat_n{n}", t_flat,
+         f"qps={q / (t_flat * 1e-6):.0f};recall10=1.000;speedup=1.0x")
+
+    for nprobe in (1, 2, 4, 8, 16, 32, 64):
+        if nprobe > index.n_clusters:
+            break
+        fn = lambda: index.search(Qb, nn, nprobe=nprobe)
+        rec = recall_at_k(flat_ids, np.asarray(fn()[1]))  # compiles too
+        t = _timeit(lambda: fn()[0], repeat=2)
+        _row(
+            f"retrieval_ivf_nprobe{nprobe}_n{n}", t,
+            f"qps={q / (t * 1e-6):.0f};recall10={rec:.3f};"
+            f"speedup={t_flat / t:.1f}x;clusters={index.n_clusters}",
+        )
+
+    # memory flatness of the probe: fixed tile geometry, 8x the index rows
+    nprobe_m, tile_rows, T = 8, 128, 2
+    for label, n_rows in (("small", 16 * 1024), ("big", 128 * 1024)):
+        n_c = n_rows // (T * tile_rows)
+        shapes = (
+            jax.ShapeDtypeStruct((q, kdim), jnp.float32),
+            jax.ShapeDtypeStruct((n_c * T, tile_rows, kdim), jnp.float32),
+            jax.ShapeDtypeStruct((n_c * T, tile_rows), jnp.int32),
+            jax.ShapeDtypeStruct((q, nprobe_m), jnp.int32),
+        )
+        probe = lambda Q_, TC, TI, PR: ip.ivf_probe_scan(
+            Q_, TC, TI, PR, nn, "zen", tiles_per_cluster=T
+        )
+        try:
+            mem = jax.jit(probe).lower(*shapes).compile().memory_analysis()
+            mb = f"{mem.temp_size_in_bytes / 2**20:.2f}"
+        except Exception:
+            mb = "n/a"
+        _row(f"retrieval_ivf_probe_mem_{label}", 0.0,
+             f"rows={n_rows};peak_temp_mb={mb}")
+
+
 def bench_serving() -> None:
     from repro.data import synthetic as syn
     from repro.launch.serve import ZenServer, build_index
@@ -286,6 +362,7 @@ _WORKLOADS = {
     "kernels": lambda a: bench_kernels(),
     "serving": lambda a: bench_serving(),
     "retrieval_topk": lambda a: bench_retrieval_topk(smoke=a.smoke),
+    "retrieval_ivf": lambda a: bench_retrieval_ivf(smoke=a.smoke),
 }
 
 
@@ -296,7 +373,7 @@ def main() -> None:
     p.add_argument("--workload", default="all",
                    choices=["all"] + sorted(_WORKLOADS))
     p.add_argument("--smoke", action="store_true",
-                   help="CI-sized shapes (retrieval_topk only)")
+                   help="CI-sized shapes (retrieval_topk / retrieval_ivf)")
     args = p.parse_args()
 
     print("name,us_per_call,derived")

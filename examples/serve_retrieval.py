@@ -8,9 +8,17 @@ is one --chunk tile) + exact re-rank -> report recall vs brute force and
 latency percentiles. ``--sharded`` row-shards the reduced index over every
 local device and searches per shard with a host-side candidate merge.
 
+``--index ivf`` swaps the flat streaming scan for the clustered IVF path
+(k-means coarse quantizer + inverted-list probes, ``repro.index``): each
+query scores only its ``--nprobe`` nearest clusters — sublinear in N — and
+the script prints the recall/QPS comparison against the flat scan.
+``--sharded --index ivf`` row-shards the inverted lists per device.
+
 Run:  PYTHONPATH=src python examples/serve_retrieval.py [--n 100000]
       PYTHONPATH=src python examples/serve_retrieval.py --sharded \
           [--chunk 8192]
+      PYTHONPATH=src python examples/serve_retrieval.py --index ivf \
+          [--nprobe 16 --clusters 0]
 """
 import argparse
 import time
@@ -21,7 +29,7 @@ import jax
 
 from repro.core import metrics as M
 from repro.data import synthetic as syn
-from repro.launch.serve import ZenServer, build_index
+from repro.launch.serve import ZenIndex, ZenServer, build_index
 
 
 def main():
@@ -36,6 +44,12 @@ def main():
                    help="streaming tile: per-query peak memory bound")
     p.add_argument("--sharded", action="store_true",
                    help="row-shard the index over all local devices")
+    p.add_argument("--index", default="flat", choices=["flat", "ivf"],
+                   help="flat streaming scan or clustered IVF probes")
+    p.add_argument("--nprobe", type=int, default=32,
+                   help="clusters probed per query (ivf only)")
+    p.add_argument("--clusters", type=int, default=0,
+                   help="IVF cluster count (0 = ~4*sqrt(N))")
     args = p.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -50,13 +64,22 @@ def main():
         print(f"sharding index rows over {len(jax.devices())} device(s)")
 
     t0 = time.time()
-    index = build_index(corpus, args.k, mesh=mesh)
+    index = build_index(corpus, args.k, mesh=mesh, index=args.index,
+                        n_clusters=args.clusters or None)
     print(f"index built in {time.time() - t0:.1f}s: "
           f"{index.size} x {args.k} "
-          f"({args.dim * 4 / (args.k * 4):.0f}x memory reduction)")
+          f"({args.dim * 4 / (args.k * 4):.0f}x memory reduction)"
+          + (f"; ivf: {index.ivf.n_clusters} clusters" if index.ivf is not None
+             else ""))
 
-    server = ZenServer(index, rerank_factor=8, chunk=args.chunk)
-    recalls = []
+    server = ZenServer(index, rerank_factor=8, chunk=args.chunk,
+                       nprobe=args.nprobe)
+    flat_server = None
+    if index.ivf is not None:  # flat baseline over the same coordinates
+        flat_index = ZenIndex(transform=index.transform, coords=index.coords,
+                              corpus=index.corpus)
+        flat_server = ZenServer(flat_index, rerank_factor=8, chunk=args.chunk)
+    recalls, flat_recalls = [], []
     for b in range(args.batches):
         q = syn.manifold_space(
             jax.random.fold_in(key, 100 + b), args.batch_size, args.dim,
@@ -70,8 +93,22 @@ def main():
             len(set(ids_np[i]) & set(tids_np[i])) / args.neighbors
             for i in range(args.batch_size)
         ]))
-    print(f"recall@{args.neighbors} (zen + rerank): {np.mean(recalls):.3f}")
+        if flat_server is not None:
+            _, fids = flat_server.query(q, args.neighbors)
+            fids_np = np.asarray(fids)
+            flat_recalls.append(np.mean([
+                len(set(fids_np[i]) & set(tids_np[i])) / args.neighbors
+                for i in range(args.batch_size)
+            ]))
+    label = "ivf + rerank" if index.ivf is not None else "zen + rerank"
+    print(f"recall@{args.neighbors} ({label}): {np.mean(recalls):.3f}")
     print("serving stats:", server.stats())
+    if flat_server is not None:
+        fs, ss = flat_server.stats(), server.stats()
+        print(f"flat streaming baseline: recall@{args.neighbors} "
+              f"{np.mean(flat_recalls):.3f}, p50 {fs['p50_ms']:.1f} ms "
+              f"(ivf p50 {ss['p50_ms']:.1f} ms, nprobe={args.nprobe}/"
+              f"{index.ivf.n_clusters})")
 
 
 if __name__ == "__main__":

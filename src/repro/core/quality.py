@@ -147,6 +147,34 @@ def batch_dcg_recall(true_ids: np.ndarray, approx_ids: np.ndarray) -> float:
     )
 
 
+def recall_at_k(true_ids: np.ndarray, approx_ids: np.ndarray) -> float:
+    """Plain (unweighted) set-overlap recall@k, meaned over a query batch.
+
+    Args:
+      true_ids:   (Q, k) — or (k,) — ids of the true nearest neighbours.
+      approx_ids: (Q, k') ids returned by an approximate search; order is
+                  ignored and negative ids (padding slots from clustered /
+                  sharded searches) never count as hits.
+
+    Returns |true ∩ approx| / k averaged over queries — the standard ANN
+    benchmark recall, complementing the rank-weighted ``batch_dcg_recall``.
+    """
+    true_ids = np.atleast_2d(np.asarray(true_ids))
+    approx_ids = np.atleast_2d(np.asarray(approx_ids))
+    if true_ids.shape[0] != approx_ids.shape[0]:
+        raise ValueError(
+            f"query counts differ: {true_ids.shape} vs {approx_ids.shape}"
+        )
+    k = true_ids.shape[1]
+    if k == 0:
+        return 0.0
+    hits = [
+        len(set(t.tolist()) & set(a[a >= 0].tolist()))
+        for t, a in zip(true_ids, approx_ids)
+    ]
+    return float(np.mean(hits) / k)
+
+
 # -- normalised quality profiles (paper Appendix E.4) ------------------------
 
 

@@ -1,4 +1,5 @@
-"""Sharded nSimplex-Zen retrieval: per-shard streaming top-k + host merge.
+"""Sharded nSimplex-Zen retrieval: per-shard streaming (or clustered IVF)
+top-k + host merge.
 
 For indexes too large for one device, the reduced (N, k) coordinate matrix is
 row-sharded over a mesh axis. Each device runs the streaming fused top-k
@@ -8,6 +9,12 @@ row-sharded over a mesh axis. Each device runs the streaming fused top-k
 The per-shard candidate lists, (Q, n_shards * k) after the shard_map gather,
 are merged with one host-side ``lax.top_k``; merge cost is O(n_shards * k)
 per query, independent of index size.
+
+``sharded_ivf_probe`` runs the clustered variant under the same shard_map +
+merge scaffolding: each device probes its local slice of the packed
+inverted-list tiles (``kernels.ops.ivf_probe``) with a replicated per-query
+probe list; tile ids are already global and padding rows are masked inside
+the probe (id == -1 -> +inf), so the merge needs no padding compensation.
 """
 from __future__ import annotations
 
@@ -59,12 +66,7 @@ def sharded_knn_search(
       (distances, indices), each (Q, n_neighbors), ascending distance, with
       indices referring to rows of the *global* index.
     """
-    if axis is None:
-        axis_names: Tuple[str, ...] = tuple(mesh.axis_names)
-    elif isinstance(axis, str):
-        axis_names = (axis,)
-    else:
-        axis_names = tuple(axis)
+    axis_names = resolve_axis_names(mesh, axis)
     n_shards = math.prod(mesh.shape[a] for a in axis_names)
 
     n = index.shape[0] if n_valid is None else n_valid
@@ -130,5 +132,93 @@ def _sharded_topk(
         out_specs=(P(None, shard_axes), P(None, shard_axes)),
     )(queries, index)
     # (Q, n_shards * k_local) candidate pool -> final host-side merge
+    neg, pos = jax.lax.top_k(-d, n_neighbors)
+    return -neg, jnp.take_along_axis(gids, pos, axis=1)
+
+
+def resolve_axis_names(
+    mesh, axis: Optional[Union[str, Tuple[str, ...]]]
+) -> Tuple[str, ...]:
+    """Normalise an ``axis`` argument: None -> all mesh axes, str -> 1-tuple."""
+    if axis is None:
+        return tuple(mesh.axis_names)
+    if isinstance(axis, str):
+        return (axis,)
+    return tuple(axis)
+
+
+def sharded_ivf_probe(
+    queries: Array,
+    tile_coords: Array,
+    tile_ids: Array,
+    probes: Array,
+    n_neighbors: int = 10,
+    mode: str = "zen",
+    *,
+    mesh,
+    axis: Optional[Union[str, Tuple[str, ...]]] = None,
+    tiles_per_cluster: int,
+    force_kernel: bool = False,
+) -> Tuple[Array, Array]:
+    """Clustered top-k of ``queries`` in mesh-sharded inverted-list tiles.
+
+    Args:
+      queries:     (Q, k) projected queries, replicated to every device.
+      tile_coords: (S*C*T, tile_rows, k) packed tiles, row-sharded over
+                   ``axis`` — each device holds its own shard's (C*T, ...)
+                   inverted lists (see ``index.ivf.ShardedIVFZenIndex``).
+      tile_ids:    (S*C*T, tile_rows) int32 *global* row ids, -1 = padding.
+      probes:      (Q, nprobe) int32 cluster ids, replicated (one global
+                   coarse quantizer).
+      tiles_per_cluster: T of the packed layout.
+
+    Returns (distances, indices), each (Q, n_neighbors), ascending, with
+    global indices; slots the probed clusters cannot fill are (+inf, -1).
+    """
+    axis_names = resolve_axis_names(mesh, axis)
+    return _sharded_ivf_topk(
+        queries, tile_coords, tile_ids, probes,
+        n_neighbors=n_neighbors, mode=mode, mesh=mesh,
+        axis_names=axis_names, tiles_per_cluster=tiles_per_cluster,
+        force_kernel=force_kernel,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_neighbors", "mode", "mesh", "axis_names", "tiles_per_cluster",
+        "force_kernel",
+    ),
+)
+def _sharded_ivf_topk(
+    queries: Array,
+    tile_coords: Array,
+    tile_ids: Array,
+    probes: Array,
+    *,
+    n_neighbors: int,
+    mode: str,
+    mesh,
+    axis_names: Tuple[str, ...],
+    tiles_per_cluster: int,
+    force_kernel: bool,
+) -> Tuple[Array, Array]:
+    def local_probe(q, tc, ti, pr):
+        # tc: (C*T, tile_rows, k) — this device's inverted lists, global ids
+        return kernel_ops.ivf_probe(
+            q, tc, ti, pr, n_neighbors, mode,
+            tiles_per_cluster=tiles_per_cluster, force_kernel=force_kernel,
+        )
+
+    shard_axes = axis_names if len(axis_names) > 1 else axis_names[0]
+    d, gids = shard_map(
+        local_probe,
+        mesh=mesh,
+        in_specs=(P(), P(shard_axes, None, None), P(shard_axes, None), P()),
+        out_specs=(P(None, shard_axes), P(None, shard_axes)),
+    )(queries, tile_coords, tile_ids, probes)
+    # (Q, n_shards * k) candidate pool -> final host-side merge; local
+    # padding already carries (+inf, -1) so no compensation is needed
     neg, pos = jax.lax.top_k(-d, n_neighbors)
     return -neg, jnp.take_along_axis(gids, pos, axis=1)

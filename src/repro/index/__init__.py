@@ -1,0 +1,16 @@
+"""Clustered (IVF) retrieval index over nSimplex-Zen apex coordinates.
+
+``kmeans``   batched Lloyd's k-means in JAX — the coarse quantizer.
+``ivf``      IVFZenIndex: padded inverted-list layout + clustered search,
+             probing only a few clusters per query (sublinear retrieval).
+"""
+from .ivf import IVFZenIndex, ShardedIVFZenIndex, exact_rerank
+from .kmeans import kmeans_assign, kmeans_fit
+
+__all__ = [
+    "IVFZenIndex",
+    "ShardedIVFZenIndex",
+    "exact_rerank",
+    "kmeans_assign",
+    "kmeans_fit",
+]

@@ -1,0 +1,353 @@
+"""IVFZenIndex — clustered (inverted-file) retrieval over apex coordinates.
+
+Filter-and-refine at production scale (paper §Perf; the supermetric-search
+predecessor arXiv:1707.08370): instead of streaming every one of the N index
+rows per query (``core.zen.knn_search``), partition the reduced (N, k)
+coordinates with a k-means coarse quantizer and probe only the ``nprobe``
+clusters whose centroids are closest to the query. Scan cost per query drops
+from O(N) to O(nprobe * max_cluster_size); ``nprobe = n_clusters`` recovers
+the flat result exactly.
+
+Padded tile layout
+------------------
+Cluster sizes are data-dependent, so the inverted lists are packed into a
+*static* shape: members are sorted by cluster and written into ``T`` fixed
+``tile_rows``-row tiles per cluster,
+
+  tile_coords : (C*T, tile_rows, k)   cluster c owns blocks c*T .. c*T+T-1
+  tile_ids    : (C*T, tile_rows)      global row ids, -1 marks padding
+
+with ``T`` sized by the largest cluster. Every probe therefore touches the
+same block shapes under jit, the Pallas kernel can DMA tiles straight from a
+scalar-prefetched probe list, and padding rows are masked (id == -1 -> +inf)
+before the running top-k merge — never returned.
+
+``search`` dispatches through ``kernels.ops.ivf_probe``: the fused Pallas
+kernel on TPU, a fori_loop gather fallback elsewhere — both bounded-memory
+(one tile per query per step). ``exact_rerank`` refines a candidate pool with
+true distances in the original space (the PR-1 serving pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as metrics_lib
+from repro.core import zen as zen_lib
+from repro.kernels import ops as kernel_ops
+
+from .kmeans import kmeans_assign, kmeans_fit
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class IVFZenIndex:
+    """Clustered Zen index: k-means centroids + padded inverted-list tiles."""
+
+    centroids: Array    # (C, k) f32 coarse-quantizer centroids
+    tile_coords: Array  # (C*T, tile_rows, k) packed member coordinates
+    tile_ids: Array     # (C*T, tile_rows) int32 global row ids, -1 = padding
+    n_clusters: int
+    tiles_per_cluster: int
+    tile_rows: int
+    n_valid: int        # number of real (un-padded) index rows
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        children = (self.centroids, self.tile_coords, self.tile_ids)
+        aux = (self.n_clusters, self.tiles_per_cluster, self.tile_rows,
+               self.n_valid)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def size(self) -> int:
+        return self.n_valid
+
+    @property
+    def dim(self) -> int:
+        return int(self.centroids.shape[1])
+
+    # -- build ---------------------------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        coords: Array,
+        n_clusters: int,
+        *,
+        tile_rows: int = 128,
+        n_iters: int = 15,
+        chunk: int = 16384,
+        key: Optional[Array] = None,
+    ) -> "IVFZenIndex":
+        """Cluster (N, k) apex coordinates and pack the inverted lists.
+
+        The quantizer fit and assignment run jit-compiled and chunked
+        (``index.kmeans``); the pack itself is a one-off host-side sort.
+        ``tile_rows`` should stay a multiple of 128 so tiles are lane-aligned
+        for the TPU probe kernel.
+        """
+        key = key if key is not None else jax.random.PRNGKey(0)
+        n, kdim = coords.shape
+        n_clusters = max(1, min(n_clusters, n))
+        centroids, _ = kmeans_fit(
+            coords, n_clusters, key=key, n_iters=n_iters, chunk=chunk
+        )
+        assign = np.asarray(kmeans_assign(coords, centroids, chunk=chunk))
+
+        counts = np.bincount(assign, minlength=n_clusters)
+        per_cluster = max(tile_rows, int(
+            math.ceil(counts.max() / tile_rows)) * tile_rows)
+        T = per_cluster // tile_rows
+        ids = np.full((n_clusters, per_cluster), -1, np.int64)
+        order = np.argsort(assign, kind="stable")
+        starts = np.cumsum(counts) - counts
+        pos = np.arange(n) - np.repeat(starts, counts)
+        ids[assign[order], pos] = order
+        packed = np.zeros((n_clusters, per_cluster, kdim), np.float32)
+        valid = ids >= 0
+        packed[valid] = np.asarray(coords, np.float32)[ids[valid]]
+
+        return cls(
+            centroids=centroids,
+            tile_coords=jnp.asarray(
+                packed.reshape(n_clusters * T, tile_rows, kdim)),
+            tile_ids=jnp.asarray(
+                ids.reshape(n_clusters * T, tile_rows).astype(np.int32)),
+            n_clusters=n_clusters,
+            tiles_per_cluster=T,
+            tile_rows=tile_rows,
+            n_valid=n,
+        )
+
+    # -- search --------------------------------------------------------------
+    def search(
+        self,
+        queries: Array,
+        n_neighbors: int = 10,
+        nprobe: int = 8,
+        mode: str = "zen",
+        *,
+        force_kernel: bool = False,
+    ) -> Tuple[Array, Array]:
+        """Probe the ``nprobe`` nearest clusters per query, return best-k.
+
+        Returns (distances, indices), each (Q, n_neighbors), ascending; ids
+        refer to rows of the original coordinate matrix (valid ids only —
+        slots the probed clusters cannot fill come back as (+inf, -1)).
+        ``nprobe = n_clusters`` scans every list and matches the flat
+        ``knn_search`` result exactly.
+        """
+        n_neighbors = min(n_neighbors, self.n_valid)
+        nprobe = max(1, min(nprobe, self.n_clusters))
+        return _ivf_search(
+            self, queries, n_neighbors=n_neighbors, nprobe=nprobe, mode=mode,
+            force_kernel=force_kernel,
+        )
+
+    def probe_clusters(
+        self, queries: Array, nprobe: int, mode: str = "zen"
+    ) -> Array:
+        """(Q, nprobe) ids of the clusters nearest each query's coordinates."""
+        nprobe = max(1, min(nprobe, self.n_clusters))
+        return _probe_clusters(queries, self.centroids, nprobe, mode)
+
+
+def _probe_clusters(
+    queries: Array, centroids: Array, nprobe: int, mode: str
+) -> Array:
+    """Coarse ranking: the ``nprobe`` estimator-nearest centroids per query.
+
+    One small (Q, C) matrix — the sublinear part of the search is never
+    materialising anything N-sized after this. The single shared
+    implementation keeps single-host, sharded and diagnostic probes
+    identical (same tie-breaking, same estimator mode).
+    """
+    cd = zen_lib.estimate_pdist(queries, centroids, mode)
+    _, probes = jax.lax.top_k(-cd, nprobe)
+    return probes.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_neighbors", "nprobe", "mode", "force_kernel"),
+)
+def _ivf_search(
+    index: IVFZenIndex,
+    queries: Array,
+    *,
+    n_neighbors: int,
+    nprobe: int,
+    mode: str,
+    force_kernel: bool,
+) -> Tuple[Array, Array]:
+    probes = _probe_clusters(queries, index.centroids, nprobe, mode)
+    return kernel_ops.ivf_probe(
+        queries, index.tile_coords, index.tile_ids, probes, n_neighbors,
+        mode, tiles_per_cluster=index.tiles_per_cluster,
+        force_kernel=force_kernel,
+    )
+
+
+def exact_rerank(
+    queries: Array,
+    corpus: Array,
+    cand_ids: Array,
+    n_neighbors: int,
+    *,
+    metric: str = "euclidean",
+) -> Tuple[Array, Array]:
+    """Refine a (Q, C) candidate pool with true distances (serving pattern).
+
+    Gathers the candidates' original vectors, scores them exactly under
+    ``metric``'s normalisation, and returns the best ``n_neighbors``.
+    Padding candidates (id == -1) are masked out, never returned (unless the
+    pool holds fewer than ``n_neighbors`` valid candidates).
+    """
+    m = metrics_lib.get_metric(metric)
+    safe_ids = jnp.maximum(cand_ids, 0)
+    cands = corpus[safe_ids]                         # (Q, C, m)
+    qn = m.normalize(queries) if m.normalize is not None else queries
+    cn = m.normalize(cands) if m.normalize is not None else cands
+    d = jnp.linalg.norm(
+        qn[:, None, :].astype(jnp.float32) - cn.astype(jnp.float32), axis=-1
+    )
+    d = jnp.where(cand_ids >= 0, d, jnp.inf)
+    n_neighbors = min(n_neighbors, cand_ids.shape[1])
+    dd, pos = jax.lax.top_k(-d, n_neighbors)
+    return -dd, jnp.take_along_axis(cand_ids, pos, axis=1)
+
+
+@dataclasses.dataclass
+class ShardedIVFZenIndex:
+    """IVF index row-sharded over a device mesh.
+
+    One global quantizer; each shard packs the inverted lists of its own row
+    range (global ids), padded to a common tiles-per-cluster so the stacked
+    (S*C*T, tile_rows, k) tile array row-shards cleanly over the mesh. A
+    query probes the same clusters on every shard (centroids are replicated)
+    and the per-shard candidates merge host-side — the same shard_map pattern
+    as ``distributed.sharded_knn_search``.
+    """
+
+    centroids: Array    # (C, k) — replicated
+    tile_coords: Array  # (S*C*T, tile_rows, k) — row-sharded over the mesh
+    tile_ids: Array     # (S*C*T, tile_rows) int32 global ids, -1 = padding
+    n_clusters: int
+    tiles_per_cluster: int
+    tile_rows: int
+    n_valid: int
+    n_shards: int
+    mesh: object
+    axis_names: Tuple[str, ...]
+
+    @property
+    def size(self) -> int:
+        return self.n_valid
+
+    @classmethod
+    def build(
+        cls,
+        coords: Array,
+        n_clusters: int,
+        *,
+        mesh,
+        axis: Optional[Union[str, Tuple[str, ...]]] = None,
+        tile_rows: int = 128,
+        n_iters: int = 15,
+        chunk: int = 16384,
+        key: Optional[Array] = None,
+    ) -> "ShardedIVFZenIndex":
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.distributed.retrieval import resolve_axis_names
+
+        axis_names = resolve_axis_names(mesh, axis)
+        n_shards = math.prod(mesh.shape[a] for a in axis_names)
+
+        key = key if key is not None else jax.random.PRNGKey(0)
+        n, kdim = coords.shape
+        n_clusters = max(1, min(n_clusters, n))
+        centroids, _ = kmeans_fit(
+            coords, n_clusters, key=key, n_iters=n_iters, chunk=chunk
+        )
+        assign = np.asarray(kmeans_assign(coords, centroids, chunk=chunk))
+        coords_np = np.asarray(coords, np.float32)
+
+        # contiguous row ranges per shard, packed with *global* ids
+        rows_per = -(-n // n_shards)  # ceil
+        bounds = [
+            (s * rows_per, min((s + 1) * rows_per, n))
+            for s in range(n_shards)
+        ]
+        per_shard_max = max(
+            int(np.bincount(assign[lo:hi], minlength=n_clusters).max())
+            if hi > lo else 0
+            for lo, hi in bounds
+        )
+        per_cluster = max(tile_rows, int(
+            math.ceil(per_shard_max / tile_rows)) * tile_rows)
+        T = per_cluster // tile_rows
+
+        ids = np.full((n_shards, n_clusters, per_cluster), -1, np.int64)
+        packed = np.zeros(
+            (n_shards, n_clusters, per_cluster, kdim), np.float32)
+        for s, (lo, hi) in enumerate(bounds):
+            a = assign[lo:hi]
+            counts = np.bincount(a, minlength=n_clusters)
+            order = np.argsort(a, kind="stable")
+            starts = np.cumsum(counts) - counts
+            pos = np.arange(hi - lo) - np.repeat(starts, counts)
+            ids[s, a[order], pos] = order + lo
+            valid = ids[s] >= 0
+            packed[s][valid] = coords_np[ids[s][valid]]
+
+        tile_coords = jnp.asarray(
+            packed.reshape(n_shards * n_clusters * T, tile_rows, kdim))
+        tile_ids = jnp.asarray(
+            ids.reshape(n_shards * n_clusters * T, tile_rows)
+            .astype(np.int32))
+        rows = axis_names if len(axis_names) > 1 else axis_names[0]
+        tile_coords = jax.device_put(
+            tile_coords, NamedSharding(mesh, P(rows, None, None)))
+        tile_ids = jax.device_put(
+            tile_ids, NamedSharding(mesh, P(rows, None)))
+        return cls(
+            centroids=centroids, tile_coords=tile_coords, tile_ids=tile_ids,
+            n_clusters=n_clusters, tiles_per_cluster=T, tile_rows=tile_rows,
+            n_valid=n, n_shards=n_shards, mesh=mesh, axis_names=axis_names,
+        )
+
+    def search(
+        self,
+        queries: Array,
+        n_neighbors: int = 10,
+        nprobe: int = 8,
+        mode: str = "zen",
+        *,
+        force_kernel: bool = False,
+    ) -> Tuple[Array, Array]:
+        """Per-shard IVF probe + host-side candidate merge (global ids)."""
+        from repro.distributed import retrieval as retrieval_lib
+
+        n_neighbors = min(n_neighbors, self.n_valid)
+        nprobe = max(1, min(nprobe, self.n_clusters))
+        probes = _probe_clusters(queries, self.centroids, nprobe, mode)
+        return retrieval_lib.sharded_ivf_probe(
+            queries, self.tile_coords, self.tile_ids, probes, n_neighbors,
+            mode, mesh=self.mesh, axis=self.axis_names,
+            tiles_per_cluster=self.tiles_per_cluster,
+            force_kernel=force_kernel,
+        )

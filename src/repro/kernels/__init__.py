@@ -3,10 +3,16 @@
 Layout (per repo convention):
   pdist.py / zen.py / jsd.py — pl.pallas_call kernels with explicit BlockSpecs
   zen_topk.py                — streaming fused estimator + running top-k
+  ivf_probe.py               — clustered probe over scalar-prefetched tiles
+  scoring.py                 — estimator + top-k-merge inner loop shared by
+                               zen_topk and ivf_probe (and their fallbacks)
   ops.py                     — jit'd public wrappers with backend dispatch
   ref.py                     — pure-jnp oracles, the correctness source of truth
 """
-from . import ops, ref, zen_topk
+from . import ivf_probe, ops, ref, scoring, zen_topk
 from .ops import jsd_pdist, pdist_sq, zen_estimate
 
-__all__ = ["ops", "ref", "zen_topk", "pdist_sq", "zen_estimate", "jsd_pdist"]
+__all__ = [
+    "ivf_probe", "ops", "ref", "scoring", "zen_topk",
+    "pdist_sq", "zen_estimate", "jsd_pdist",
+]

@@ -1,0 +1,212 @@
+"""Pallas TPU kernel: fused IVF probe — gather probed cluster tiles, score,
+keep a running top-k.
+
+The clustered index (``repro.index.ivf``) stores each cluster's members in a
+fixed number ``T`` of fixed-size row tiles:
+
+  tile_coords : (C*T, tile_rows, k)   member apex coordinates
+  tile_ids    : (C*T, tile_rows)      global row ids, -1 = padding
+
+so the tiles of cluster ``c`` are the blocks ``c*T .. c*T+T-1`` and every
+shape is static under jit regardless of the (data-dependent) cluster sizes.
+
+Given per-query probe lists ``probes`` (Q, P) of cluster ids, the kernel runs
+on a (Q, P*T) grid with ``probes`` as a *scalar-prefetch* operand: the block
+index maps read ``probes[i, j // T] * T + j % T`` to DMA exactly the probed
+tiles from HBM — un-probed clusters are never touched, which is what makes
+the probe sublinear in index size. Each grid step fuses the Zen/Lwb/Upb
+estimator over one tile (``kernels.scoring.estimate_tile`` — shared with the
+brute-force ``zen_topk`` kernel) with the concat + ``top_k`` merge into VMEM
+scratch; padding rows (id == -1) are masked to +inf before the merge. Peak
+per-query state is O(kw + tile_rows), independent of both index size and
+cluster-size skew.
+
+``ivf_probe_scan`` is the schedule-equivalent jnp fallback for CPU/GPU: a
+``fori_loop`` over the same (probe, tile) steps, gathering one
+(Q, tile_rows, k) block per step — the same flat memory bound.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import compiler_params
+from .scoring import MODE_IDS, estimate_rows, estimate_tile, merge_topk
+
+Array = jax.Array
+
+
+def _probe_kernel(
+    probes_ref,  # scalar-prefetch (Q, P) — also consumed by the index maps
+    q_ref,       # (1, kp)
+    x_ref,       # (1, tile_rows, kp) — the probed tile
+    id_ref,      # (1, tile_rows)
+    od_ref,      # (1, kw)
+    oi_ref,      # (1, kw)
+    bd_ref,      # VMEM scratch (1, kw)
+    bi_ref,      # VMEM scratch (1, kw)
+    *,
+    true_k: int,
+    n_steps: int,
+    mode: int,
+):
+    del probes_ref  # only the index maps need it
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        bd_ref[...] = jnp.full_like(bd_ref, jnp.inf)
+        bi_ref[...] = jnp.full_like(bi_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)          # (1, kp)
+    x = x_ref[0].astype(jnp.float32)            # (tile_rows, kp)
+    ids = id_ref[...]                           # (1, tile_rows)
+    d = estimate_tile(q, x, true_k=true_k, mode=mode)  # (1, tile_rows)
+    d = jnp.where(ids >= 0, d, jnp.inf)         # mask padding rows
+
+    kw = bd_ref.shape[1]
+    bd_ref[...], bi_ref[...] = merge_topk(bd_ref[...], bi_ref[...], d, ids, kw)
+
+    @pl.when(j == n_steps - 1)
+    def _done():
+        od_ref[...] = bd_ref[...]
+        oi_ref[...] = bi_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_neighbors", "mode", "tiles_per_cluster", "interpret"),
+)
+def ivf_probe(
+    queries: Array,
+    tile_coords: Array,
+    tile_ids: Array,
+    probes: Array,
+    n_neighbors: int = 10,
+    mode: str = "zen",
+    *,
+    tiles_per_cluster: int,
+    interpret: bool = False,
+) -> Tuple[Array, Array]:
+    """Clustered top-k probe: score only the tiles of the probed clusters.
+
+    Args:
+      queries:     (Q, k) projected queries.
+      tile_coords: (C*T, tile_rows, k) packed cluster tiles.
+      tile_ids:    (C*T, tile_rows) int32 global row ids, -1 = padding.
+      probes:      (Q, P) int32 cluster ids to visit per query.
+      tiles_per_cluster: T — tiles per cluster in the packed layout.
+
+    Returns (distances f32, indices int32), each (Q, n_neighbors), rows
+    ascending by distance; slots beyond the number of valid candidates in the
+    probed clusters come back as (+inf, -1).
+    """
+    q, kdim = queries.shape
+    ct, tile_rows, kdim2 = tile_coords.shape
+    assert kdim == kdim2, (queries.shape, tile_coords.shape)
+    assert tile_ids.shape == (ct, tile_rows), tile_ids.shape
+    assert probes.shape[0] == q, (probes.shape, queries.shape)
+    assert ct % tiles_per_cluster == 0, (ct, tiles_per_cluster)
+    T = tiles_per_cluster
+    n_probe = probes.shape[1]
+    n_steps = n_probe * T
+    kw = _rup(n_neighbors, 128)  # scratch lane width
+    Kp = _rup(kdim, 128)
+    Qpad = jnp.pad(queries, ((0, 0), (0, Kp - kdim)))
+    Xpad = jnp.pad(tile_coords, ((0, 0), (0, 0), (0, Kp - kdim)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q, n_steps),
+        in_specs=[
+            pl.BlockSpec((1, Kp), lambda i, j, pref: (i, 0)),
+            pl.BlockSpec(
+                (1, tile_rows, Kp),
+                lambda i, j, pref: (pref[i, j // T] * T + j % T, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, tile_rows),
+                lambda i, j, pref: (pref[i, j // T] * T + j % T, 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kw), lambda i, j, pref: (i, 0)),
+            pl.BlockSpec((1, kw), lambda i, j, pref: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, kw), jnp.float32),
+            pltpu.VMEM((1, kw), jnp.int32),
+        ],
+    )
+    out_d, out_i = pl.pallas_call(
+        functools.partial(
+            _probe_kernel, true_k=kdim, n_steps=n_steps, mode=MODE_IDS[mode]
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q, kw), jnp.float32),
+            jax.ShapeDtypeStruct((q, kw), jnp.int32),
+        ],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+        name="nsimplex_ivf_probe",
+    )(probes.astype(jnp.int32), Qpad, Xpad, tile_ids)
+    return out_d[:, :n_neighbors], out_i[:, :n_neighbors]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_neighbors", "mode", "tiles_per_cluster")
+)
+def ivf_probe_scan(
+    queries: Array,
+    tile_coords: Array,
+    tile_ids: Array,
+    probes: Array,
+    n_neighbors: int = 10,
+    mode: str = "zen",
+    *,
+    tiles_per_cluster: int,
+) -> Tuple[Array, Array]:
+    """Bounded-memory jnp fallback: fori_loop over (probe, tile) steps.
+
+    Each step gathers one (Q, tile_rows, k) block of the probed clusters'
+    tiles and merges into the running (Q, n_neighbors) best — peak temp
+    memory is one tile per query, flat in index size and in cluster count.
+    """
+    q, kdim = queries.shape
+    ct, tile_rows, _ = tile_coords.shape
+    T = tiles_per_cluster
+    assert ct % T == 0, (ct, T)
+    n_steps = probes.shape[1] * T
+    acc = jnp.promote_types(queries.dtype, jnp.float32)
+    queries = queries.astype(acc)
+    mode_i = MODE_IDS[mode]
+
+    def body(j, carry):
+        best_d, best_i = carry
+        p, t = j // T, j % T
+        c = jax.lax.dynamic_slice_in_dim(probes, p, 1, axis=1)[:, 0]
+        b = c.astype(jnp.int32) * T + t             # (Q,) tile block ids
+        blk = tile_coords[b].astype(acc)            # (Q, tile_rows, k)
+        ids = tile_ids[b]                           # (Q, tile_rows)
+        d = estimate_rows(queries, blk, mode=mode_i)
+        d = jnp.where(ids >= 0, d, jnp.inf)         # mask padding rows
+        return merge_topk(best_d, best_i, d, ids, n_neighbors)
+
+    init = (
+        jnp.full((q, n_neighbors), jnp.inf, acc),
+        jnp.full((q, n_neighbors), -1, jnp.int32),
+    )
+    best_d, best_i = jax.lax.fori_loop(0, n_steps, body, init)
+    return best_d.astype(jnp.float32), best_i
+
+
+def _rup(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import ivf_probe as _ivf_probe
 from . import jsd as _jsd
 from . import pdist as _pdist
 from . import ref as _ref
@@ -74,6 +75,41 @@ def zen_topk(
         )
     return _zen_topk.zen_topk_scan(
         queries, index, n_neighbors, mode, chunk=chunk
+    )
+
+
+def ivf_probe(
+    queries: Array,
+    tile_coords: Array,
+    tile_ids: Array,
+    probes: Array,
+    n_neighbors: int = 10,
+    mode: str = "zen",
+    *,
+    tiles_per_cluster: int,
+    force_kernel: bool = False,
+):
+    """Clustered IVF top-k probe over packed cluster tiles; kernel-accelerated.
+
+    Dispatch: scalar-prefetch Pallas kernel on TPU (or under ``force_kernel``
+    via interpret mode) — only the probed clusters' tiles are ever DMA'd;
+    otherwise a fori_loop gather fallback with the same one-tile-per-step
+    memory bound. Returns (distances, indices), each (Q, n_neighbors);
+    unfilled slots are (+inf, -1).
+    """
+    if _on_tpu():
+        return _ivf_probe.ivf_probe(
+            queries, tile_coords, tile_ids, probes, n_neighbors, mode,
+            tiles_per_cluster=tiles_per_cluster,
+        )
+    if force_kernel:
+        return _ivf_probe.ivf_probe(
+            queries, tile_coords, tile_ids, probes, n_neighbors, mode,
+            tiles_per_cluster=tiles_per_cluster, interpret=True,
+        )
+    return _ivf_probe.ivf_probe_scan(
+        queries, tile_coords, tile_ids, probes, n_neighbors, mode,
+        tiles_per_cluster=tiles_per_cluster,
     )
 
 

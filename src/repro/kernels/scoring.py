@@ -1,0 +1,94 @@
+"""Shared Zen/Lwb/Upb scoring + running-top-k helpers for streaming kernels.
+
+Both streaming retrieval kernels — the brute-force ``zen_topk`` walk over the
+whole index and the clustered ``ivf_probe`` walk over probed inverted-list
+tiles — fuse the same two inner loops:
+
+  1. estimator distances between a query block and one index tile
+     (masked-last-column matmul + rank-1 altitude correction, paper §4.1);
+  2. a merge of that tile's distances into a running per-query best-k
+     (concat + ``lax.top_k``), kept in VMEM scratch on TPU.
+
+This module is that shared inner loop, factored out so the two kernels (and
+their jnp scan fallbacks) cannot drift apart numerically. ``estimate_tile``
+operates on lane-padded 2D tiles as seen inside a Pallas kernel body;
+``estimate_rows`` is the batched-gather variant used by the IVF scan fallback
+where every query gathers its *own* (rows, k) tile.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: estimator name -> static integer id used inside kernel bodies
+MODE_IDS = {"zen": 0, "lwb": 1, "upb": 2}
+
+
+def estimate_tile(q: Array, x: Array, *, true_k: int, mode: int) -> Array:
+    """Fused estimator distances for one (bq, kp) x (bn, kp) tile, f32.
+
+    ``kp`` may be lane-padded beyond the true coordinate width ``true_k``;
+    padding columns and the altitude column are masked in-register. ``mode``
+    is the static id from :data:`MODE_IDS`.
+    """
+    kp = q.shape[1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1)
+    keep = (col < true_k - 1).astype(jnp.float32)  # mask altitude + padding
+    valid = (col < true_k).astype(jnp.float32)  # mask padding only
+    qv = q * valid
+    xv = x * valid
+    nq = jnp.sum(qv * qv, axis=1, keepdims=True)  # (bq, 1) full norms
+    nx = jnp.sum(xv * xv, axis=1, keepdims=True)  # (bn, 1)
+    dot = jax.lax.dot_general(
+        qv * keep,
+        xv,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # altitude column zeroed on one side only — enough to drop it
+    z2 = nq + nx.T - 2.0 * dot
+    if mode != 0:
+        is_alt = (col == true_k - 1).astype(jnp.float32)
+        qa = jnp.sum(qv * is_alt, axis=1, keepdims=True)  # (bq, 1)
+        xa = jnp.sum(xv * is_alt, axis=1, keepdims=True)  # (bn, 1)
+        cross = 2.0 * qa * xa.T
+        z2 = z2 - cross if mode == 1 else z2 + cross
+    return jnp.sqrt(jnp.maximum(z2, 0.0))
+
+
+def estimate_rows(q: Array, blk: Array, *, mode: int) -> Array:
+    """Estimator distances between queries (Q, k) and per-query row tiles
+    (Q, R, k) — the gathered-inverted-list shape of the IVF scan fallback.
+
+    Unpadded widths (no lane masking); returns (Q, R) in the accumulation
+    dtype of ``q``.
+    """
+    qn = jnp.sum(q * q, axis=1, keepdims=True)  # (Q, 1)
+    xn = jnp.sum(blk * blk, axis=-1)  # (Q, R)
+    dot = jnp.einsum(
+        "qk,qrk->qr", q[:, :-1], blk[..., :-1],
+        preferred_element_type=q.dtype,
+    )
+    z2 = qn + xn - 2.0 * dot
+    if mode != 0:
+        cross = 2.0 * q[:, -1:] * blk[..., -1]
+        z2 = z2 - cross if mode == 1 else z2 + cross
+    return jnp.sqrt(jnp.maximum(z2, 0.0))
+
+
+def merge_topk(
+    best_d: Array, best_i: Array, d: Array, ids: Array, k: int
+) -> Tuple[Array, Array]:
+    """Merge tile distances into the running best-k: concat + ``lax.top_k``.
+
+    ``best_d``/``best_i`` are (Q, w) running state, ``d``/``ids`` the new
+    (Q, r) candidates (``ids`` may be (1, r) and is broadcast). Returns the
+    new (Q, k) state, ascending by distance.
+    """
+    cat_d = jnp.concatenate([best_d, d], axis=1)
+    cat_i = jnp.concatenate([best_i, jnp.broadcast_to(ids, d.shape)], axis=1)
+    neg, pos = jax.lax.top_k(-cat_d, k)
+    return -neg, jnp.take_along_axis(cat_i, pos, axis=1)

@@ -34,36 +34,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import compiler_params
+from .scoring import MODE_IDS as _MODE
+from .scoring import estimate_tile as _estimate_tile
+from .scoring import merge_topk as _merge_topk
 
 Array = jax.Array
-
-_MODE = {"zen": 0, "lwb": 1, "upb": 2}
-
-
-def _estimate_tile(q: Array, x: Array, *, true_k: int, mode: int) -> Array:
-    """Fused estimator distances for one (bq, kp) x (bn, kp) tile, f32."""
-    kp = q.shape[1]
-    col = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1)
-    keep = (col < true_k - 1).astype(jnp.float32)  # mask altitude + padding
-    valid = (col < true_k).astype(jnp.float32)  # mask padding only
-    qv = q * valid
-    xv = x * valid
-    nq = jnp.sum(qv * qv, axis=1, keepdims=True)  # (bq, 1) full norms
-    nx = jnp.sum(xv * xv, axis=1, keepdims=True)  # (bn, 1)
-    dot = jax.lax.dot_general(
-        qv * keep,
-        xv,
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )  # altitude column zeroed on one side only — enough to drop it
-    z2 = nq + nx.T - 2.0 * dot
-    if mode != 0:
-        is_alt = (col == true_k - 1).astype(jnp.float32)
-        qa = jnp.sum(qv * is_alt, axis=1, keepdims=True)  # (bq, 1)
-        xa = jnp.sum(xv * is_alt, axis=1, keepdims=True)  # (bn, 1)
-        cross = 2.0 * qa * xa.T
-        z2 = z2 - cross if mode == 1 else z2 + cross
-    return jnp.sqrt(jnp.maximum(z2, 0.0))
 
 
 def _topk_kernel(
@@ -95,13 +70,9 @@ def _topk_kernel(
     d = jnp.where(ids < n_index, d, jnp.inf)  # mask padded tail rows
 
     kw = bd_ref.shape[1]
-    cat_d = jnp.concatenate([bd_ref[...], d], axis=1)  # (bq, kw + bn)
-    cat_i = jnp.concatenate(
-        [bi_ref[...], jnp.broadcast_to(ids, d.shape)], axis=1
+    bd_ref[...], bi_ref[...] = _merge_topk(
+        bd_ref[...], bi_ref[...], d, ids, kw
     )
-    neg, pos = jax.lax.top_k(-cat_d, kw)
-    bd_ref[...] = -neg
-    bi_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
 
     @pl.when(j == n_index_blocks - 1)
     def _done():
@@ -131,7 +102,8 @@ def zen_topk(
     q, kdim = queries.shape
     n, kdim2 = index.shape
     assert kdim == kdim2, (queries.shape, index.shape)
-    assert 0 < n_neighbors <= n, (n_neighbors, n)
+    assert n_neighbors > 0, n_neighbors
+    n_neighbors = min(n_neighbors, n)  # clamp: only valid rows are returned
     bq = min(block_q, _rup(q, 8))
     bn = min(block_n, _rup(n, 128))
     kw = _rup(n_neighbors, 128)  # scratch lane width
@@ -195,7 +167,8 @@ def zen_topk_scan(
     """
     q, kdim = queries.shape
     n = index.shape[0]
-    assert 0 < n_neighbors <= n, (n_neighbors, n)
+    assert n_neighbors > 0, n_neighbors
+    n_neighbors = min(n_neighbors, n)  # clamp: only valid rows are returned
     chunk = min(chunk, n)
     acc = jnp.promote_types(queries.dtype, jnp.float32)
     queries = queries.astype(acc)
@@ -222,12 +195,7 @@ def zen_topk_scan(
         ids = (start + jnp.arange(chunk, dtype=jnp.int32)).astype(jnp.int32)
         # a clamped tail revisits rows of the previous chunk: mask them out
         d = jnp.where(ids[None, :] >= i * chunk, d, jnp.inf)
-        cat_d = jnp.concatenate([best_d, d], axis=1)
-        cat_i = jnp.concatenate(
-            [best_i, jnp.broadcast_to(ids, d.shape)], axis=1
-        )
-        neg, pos = jax.lax.top_k(-cat_d, n_neighbors)
-        return -neg, jnp.take_along_axis(cat_i, pos, axis=1)
+        return _merge_topk(best_d, best_i, d, ids[None, :], n_neighbors)
 
     init = (
         jnp.full((q, n_neighbors), jnp.inf, acc),

@@ -16,13 +16,20 @@ Online:   ``ZenServer.query`` projects a query batch (k reference distances)
           exact re-rank of the candidate pool with true distances follows
           (paper [50]'s deployment pattern).
 
+``build_index(..., index="ivf")`` swaps the flat scan for the *clustered* IVF
+path (``repro.index``): a k-means coarse quantizer over the apex coordinates
+plus padded inverted-list tiles, so each query scores only its ``nprobe``
+nearest clusters — sublinear in N — at a recall knob the server exposes as
+``ZenServer(nprobe=...)``. ``nprobe = n_clusters`` recovers the flat result.
+
 CLI (CPU demo):  PYTHONPATH=src python -m repro.launch.serve --n 20000 --dim \
-                 256 --k 16 --queries 64
+                 256 --k 16 --queries 64 [--index ivf --nprobe 8]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 from typing import Optional, Tuple
 
@@ -48,6 +55,7 @@ class ZenIndex:
     corpus: Optional[Array]  # original vectors for re-ranking (optional)
     mesh: Optional[object] = None  # device mesh when coords are row-sharded
     n_valid: Optional[int] = None  # real rows when coords are shard-padded
+    ivf: Optional[object] = None   # IVFZenIndex / ShardedIVFZenIndex
 
     @property
     def size(self) -> int:
@@ -62,13 +70,41 @@ def build_index(
     key: Optional[jax.Array] = None,
     mesh=None,
     keep_corpus: bool = True,
+    index: str = "flat",
+    n_clusters: Optional[int] = None,
+    tile_rows: int = 128,
+    kmeans_iters: int = 15,
 ) -> ZenIndex:
-    """Fit on the corpus (witness = corpus sample) and project every row."""
+    """Fit on the corpus (witness = corpus sample) and project every row.
+
+    ``index="flat"`` keeps the (N, k) coordinates for the streaming scan;
+    ``index="ivf"`` additionally fits a k-means coarse quantizer
+    (``n_clusters`` defaults to ~4*sqrt(N)) and packs the inverted-list
+    tiles so the server probes only a few clusters per query. With a
+    ``mesh``, both variants shard rows (flat coordinates or inverted lists)
+    over all mesh axes.
+    """
+    if index not in ("flat", "ivf"):
+        raise ValueError(f"index must be 'flat' or 'ivf', got {index!r}")
     key = key if key is not None else jax.random.PRNGKey(0)
     tr = select_references(corpus, k, key, metric=metric)
     coords = tr.transform(corpus)
+    n = coords.shape[0]
+    ivf = None
+    if index == "ivf":
+        from repro.index import IVFZenIndex, ShardedIVFZenIndex
+
+        n_clusters = n_clusters or max(1, min(n, int(round(4 * n ** 0.5))))
+        builder = (
+            functools.partial(ShardedIVFZenIndex.build, mesh=mesh)
+            if mesh is not None else IVFZenIndex.build
+        )
+        ivf = builder(
+            coords, n_clusters, tile_rows=tile_rows, n_iters=kmeans_iters,
+            key=jax.random.fold_in(key, 7),
+        )
     n_valid = None
-    if mesh is not None:
+    if mesh is not None and ivf is None:
         # pad once to a shard-divisible row count so every query batch skips
         # the O(N) re-pad; the search masks rows >= n_valid
         n_valid = coords.shape[0]
@@ -82,7 +118,7 @@ def build_index(
         coords = jax.device_put(coords, NamedSharding(mesh, P(rows, None)))
     return ZenIndex(transform=tr, coords=coords,
                     corpus=corpus if keep_corpus else None, mesh=mesh,
-                    n_valid=n_valid)
+                    n_valid=n_valid, ivf=ivf)
 
 
 class ZenServer:
@@ -92,16 +128,19 @@ class ZenServer:
     indexes stream through ``core.zen.knn_search`` (fused Pallas kernel on
     TPU, bounded-memory scan elsewhere) once the index exceeds ``chunk`` rows;
     mesh-sharded indexes run the streaming search per shard and merge the
-    per-shard candidates host-side.
+    per-shard candidates host-side. IVF-built indexes probe only the
+    ``nprobe`` nearest clusters per query (``repro.index``) — sublinear in
+    index size, with ``nprobe`` as the recall/latency knob.
     """
 
     def __init__(self, index: ZenIndex, *, mode: str = "zen",
                  rerank_factor: int = 0, chunk: int = 8192,
-                 force_kernel: bool = False):
+                 nprobe: int = 8, force_kernel: bool = False):
         self.index = index
         self.mode = mode
         self.rerank_factor = rerank_factor
         self.chunk = chunk
+        self.nprobe = nprobe
         self.force_kernel = force_kernel
         self._stats = {"queries": 0, "batches": 0, "latency_s": []}
 
@@ -111,7 +150,13 @@ class ZenServer:
         t0 = time.time()
         qp = self.index.transform.transform(queries)
         n_fetch = n_neighbors * max(self.rerank_factor, 1)
-        if self.index.mesh is not None:
+        if self.index.ivf is not None:
+            d, ids = self.index.ivf.search(
+                qp, n_neighbors=min(n_fetch, self.index.size),
+                nprobe=self.nprobe, mode=self.mode,
+                force_kernel=self.force_kernel,
+            )
+        elif self.index.mesh is not None:
             d, ids = retrieval_lib.sharded_knn_search(
                 qp, self.index.coords,
                 n_neighbors=min(n_fetch, self.index.size), mode=self.mode,
@@ -137,15 +182,12 @@ class ZenServer:
     def _rerank(self, queries: Array, cand_ids: Array, n_neighbors: int
                 ) -> Tuple[Array, Array]:
         """Exact re-rank of the Zen candidate pool with true distances."""
-        cands = self.index.corpus[cand_ids]          # (Q, C, m)
-        m = metrics_lib.get_metric(self.index.transform.metric)
-        qn = m.normalize(queries) if m.normalize is not None else queries
-        cn = m.normalize(cands) if m.normalize is not None else cands
-        d = jnp.linalg.norm(
-            qn[:, None, :].astype(jnp.float32) - cn.astype(jnp.float32), axis=-1
+        from repro.index import exact_rerank
+
+        return exact_rerank(
+            queries, self.index.corpus, cand_ids, n_neighbors,
+            metric=self.index.transform.metric,
         )
-        dd, pos = jax.lax.top_k(-d, n_neighbors)
-        return -dd, jnp.take_along_axis(cand_ids, pos, axis=1)
 
     def stats(self) -> dict:
         lat = np.asarray(self._stats["latency_s"] or [0.0])
@@ -167,6 +209,10 @@ def main() -> None:
     p.add_argument("--neighbors", type=int, default=10)
     p.add_argument("--metric", default="euclidean")
     p.add_argument("--rerank", type=int, default=4)
+    p.add_argument("--index", default="flat", choices=["flat", "ivf"])
+    p.add_argument("--clusters", type=int, default=0,
+                   help="IVF cluster count (0 = ~4*sqrt(N))")
+    p.add_argument("--nprobe", type=int, default=8)
     args = p.parse_args()
 
     from repro.core import quality
@@ -174,9 +220,12 @@ def main() -> None:
 
     key = jax.random.PRNGKey(0)
     corpus = syn.manifold_space(key, args.n, args.dim, args.dim // 8)
-    index = build_index(corpus, args.k, metric=args.metric)
-    server = ZenServer(index, rerank_factor=args.rerank)
-    print(f"index: {index.size} x {args.k} (from dim {args.dim})")
+    index = build_index(corpus, args.k, metric=args.metric, index=args.index,
+                        n_clusters=args.clusters or None)
+    server = ZenServer(index, rerank_factor=args.rerank, nprobe=args.nprobe)
+    print(f"index: {index.size} x {args.k} (from dim {args.dim})"
+          + (f"; ivf: {index.ivf.n_clusters} clusters, nprobe={args.nprobe}"
+             if index.ivf is not None else ""))
 
     qkey = jax.random.fold_in(key, 1)
     recalls = []

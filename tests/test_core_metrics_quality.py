@@ -134,6 +134,30 @@ def test_dcg_recall_perfect_and_disjoint():
     assert Q.dcg_recall(ids, ids + 10_000) == pytest.approx(0.0, abs=1e-5)
 
 
+def test_recall_at_k_hand_computed():
+    # perfect agreement (order-insensitive)
+    assert Q.recall_at_k([[1, 2, 3]], [[3, 1, 2]]) == 1.0
+    # partial overlap: {1,2} of 4 -> 0.5
+    assert Q.recall_at_k([[1, 2, 3, 4]], [[2, 1, 9, 8]]) == 0.5
+    # disjoint
+    assert Q.recall_at_k([[1, 2]], [[3, 4]]) == 0.0
+    # batch mean: 1.0 and 0.5 -> 0.75
+    assert Q.recall_at_k([[1, 2], [3, 4]], [[2, 1], [3, 9]]) == 0.75
+    # 1D convenience form
+    assert Q.recall_at_k([5, 6], [6, 7]) == 0.5
+
+
+def test_recall_at_k_ignores_padding_ids():
+    # -1 slots (clustered/sharded padding) never count as hits
+    assert Q.recall_at_k([[0, 1]], [[-1, 1]]) == 0.5
+    assert Q.recall_at_k([[0, 1]], [[-1, -1]]) == 0.0
+
+
+def test_recall_at_k_mismatched_batch_raises():
+    with pytest.raises(ValueError):
+        Q.recall_at_k([[1, 2], [3, 4]], [[1, 2]])
+
+
 def test_dcg_recall_prefers_early_agreement():
     ids = np.arange(1000)
     # swap within the head (significant region) vs within the tail
