@@ -19,6 +19,7 @@ EXPERIMENTS.md documents the mapping to the paper's full-size runs.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -41,7 +42,12 @@ def _timeit(fn, *args, repeat: int = 3, number: int = 1) -> float:
     return best * 1e6
 
 
+_ROWS: list = []  # collected (name, us, derived) rows for --json snapshots
+
+
 def _row(name: str, us: float, derived: str) -> None:
+    _ROWS.append({"name": name, "us_per_call": round(us, 1),
+                  "derived": derived})
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -338,6 +344,121 @@ def bench_retrieval_ivf(smoke: bool = False) -> None:
              f"rows={n_rows};peak_temp_mb={mb}")
 
 
+def bench_retrieval_churn(smoke: bool = False) -> None:
+    """Mutable-corpus lifecycle on the IVF serving path: build at N, churn
+    20% of the corpus (tombstone deletes + nearest-centroid upserts into
+    spare tile capacity), compact if the thresholds trip, and report
+
+      * update throughput — upserts/s and deletes/s of the control-plane
+        mutation path (batched host repack + device upload);
+      * recall-after-churn — recall@10 of the churned index vs a freshly
+        built index over the same live corpus, at the same nprobe (the
+        acceptance bar is |delta| <= 0.02);
+      * QPS of the churned index, next to the fresh index's QPS;
+      * a save -> load round-trip (must return identical neighbours).
+    """
+    from repro.core.quality import recall_at_k
+    from repro.index import IVFZenIndex
+    from repro.kernels import zen_topk as zt
+
+    # synthetic apex coordinates (the test_index_mutation acceptance
+    # protocol): isotropic data keeps the quantizer fit stable across seeds,
+    # so the churned-vs-fresh recall delta isolates churn, not k-means++
+    # seed noise (which dominates on tightly clustered corpora)
+    # q=256 keeps the recall@10 sampling error (~1/sqrt(q*nn)) well under
+    # the 0.02 acceptance bar
+    q, kdim, nn = 256, 16, 10
+    n = 20_000 if smoke else 100_000
+    n_churn = n // 5
+    batch = 2048
+    n_clusters = max(64, int(round(4 * n**0.5)))
+    key = jax.random.PRNGKey(0)
+
+    def _coords(k_, m):
+        x = jax.random.normal(k_, (m, kdim), jnp.float32)
+        return x.at[:, -1].set(jnp.abs(x[:, -1]))
+
+    X = _coords(key, n)
+    Qb = X[:q] + 0.1 * jax.random.normal(
+        jax.random.fold_in(key, 3), (q, kdim), jnp.float32)
+
+    index = IVFZenIndex.build(
+        X, n_clusters, key=jax.random.fold_in(key, 2), n_iters=10)
+
+    rng = np.random.default_rng(0)
+    dead = rng.choice(n, size=n_churn, replace=False)
+    t0 = time.perf_counter()
+    for lo in range(0, n_churn, batch):
+        index = index.delete(dead[lo:lo + batch])
+    t_del = time.perf_counter() - t0
+    _row(f"retrieval_churn_delete_n{n}", t_del * 1e6 / (n_churn // batch + 1),
+         f"deletes_per_s={n_churn / t_del:.0f};batch={batch}")
+
+    Xnew = _coords(jax.random.fold_in(key, 4), n_churn)
+    new_ids = np.arange(n, n + n_churn)
+    t0 = time.perf_counter()
+    for lo in range(0, n_churn, batch):
+        index = index.upsert(new_ids[lo:lo + batch], Xnew[lo:lo + batch])
+    t_up = time.perf_counter() - t0
+    _row(f"retrieval_churn_upsert_n{n}", t_up * 1e6 / (n_churn // batch + 1),
+         f"upserts_per_s={n_churn / t_up:.0f};batch={batch};"
+         f"tiles_per_cluster={index.tiles_per_cluster}")
+
+    # churn concentrates new points into the frozen quantizer's cells:
+    # grow-by-tile inflates T for every cluster and the probe slows down.
+    # The lifecycle answer is the re-cluster pass (ISSUE/ROADMAP): refit the
+    # quantizer on the live corpus and repack minimal tiles.
+    imb_pre, t_pre, ts_pre = (index.imbalance, index.tiles_per_cluster,
+                              index.tombstone_ratio)
+    t0 = time.perf_counter()
+    index = index.compact(recluster=True, key=jax.random.fold_in(key, 6),
+                          n_iters=10)
+    _row(f"retrieval_churn_recluster_n{n}", (time.perf_counter() - t0) * 1e6,
+         f"imbalance={imb_pre:.1f}->{index.imbalance:.1f};"
+         f"tiles_per_cluster={t_pre}->{index.tiles_per_cluster};"
+         f"tombstone_ratio_pre={ts_pre:.2f}")
+
+    # ground truth over the live corpus; fresh rebuild for the recall bar
+    live = np.setdiff1d(np.arange(n), dead)
+    all_coords = jnp.concatenate([jnp.asarray(np.asarray(X)[live]), Xnew])
+    all_ids = np.concatenate([live, new_ids])
+    truth = all_ids[np.asarray(
+        zt.zen_topk_scan(Qb, all_coords, nn, "zen")[1])]
+    fresh = IVFZenIndex.build(
+        all_coords, n_clusters, ids=all_ids,
+        key=jax.random.fold_in(key, 5), n_iters=10)
+
+    for nprobe in (8, 16):
+        churn_fn = lambda: index.search(Qb, nn, nprobe=nprobe)
+        fresh_fn = lambda: fresh.search(Qb, nn, nprobe=nprobe)
+        rec_c = recall_at_k(truth, np.asarray(churn_fn()[1]))
+        rec_f = recall_at_k(truth, np.asarray(fresh_fn()[1]))
+        t_c = _timeit(lambda: churn_fn()[0], repeat=2)
+        t_f = _timeit(lambda: fresh_fn()[0], repeat=2)
+        _row(
+            f"retrieval_churn_recall_nprobe{nprobe}_n{n}", t_c,
+            f"qps={q / (t_c * 1e-6):.0f};recall10_churned={rec_c:.3f};"
+            f"recall10_fresh={rec_f:.3f};delta={rec_c - rec_f:+.3f};"
+            f"fresh_qps={q / (t_f * 1e-6):.0f}",
+        )
+
+    # persisted index: save -> load must return identical neighbours
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        t0 = time.perf_counter()
+        index.save(os.path.join(td, "snap"))
+        t_save = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        back = IVFZenIndex.load(os.path.join(td, "snap"))
+        t_load = time.perf_counter() - t0
+        same = bool(np.array_equal(
+            np.asarray(index.search(Qb, nn, nprobe=16)[1]),
+            np.asarray(back.search(Qb, nn, nprobe=16)[1])))
+    _row(f"retrieval_churn_checkpoint_n{n}", t_save * 1e6,
+         f"save_s={t_save:.2f};load_s={t_load:.2f};roundtrip_identical={same}")
+
+
 def bench_serving() -> None:
     from repro.data import synthetic as syn
     from repro.launch.serve import ZenServer, build_index
@@ -363,17 +484,24 @@ _WORKLOADS = {
     "serving": lambda a: bench_serving(),
     "retrieval_topk": lambda a: bench_retrieval_topk(smoke=a.smoke),
     "retrieval_ivf": lambda a: bench_retrieval_ivf(smoke=a.smoke),
+    "retrieval_churn": lambda a: bench_retrieval_churn(smoke=a.smoke),
 }
 
 
 def main() -> None:
     import argparse
+    import json
+    import platform
 
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--workload", default="all",
                    choices=["all"] + sorted(_WORKLOADS))
     p.add_argument("--smoke", action="store_true",
-                   help="CI-sized shapes (retrieval_topk / retrieval_ivf)")
+                   help="CI-sized shapes (retrieval_* workloads)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write the rows as a JSON snapshot (the "
+                        "BENCH_*.json trajectory format, see "
+                        "docs/benchmarks.md)")
     args = p.parse_args()
 
     print("name,us_per_call,derived")
@@ -382,6 +510,20 @@ def main() -> None:
             fn(args)
     else:
         _WORKLOADS[args.workload](args)
+
+    if args.json:
+        snap = {
+            "workload": args.workload,
+            "smoke": args.smoke,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "platform": platform.platform(),
+            "jax": jax.__version__,
+            "rows": _ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(snap, f, indent=1)
+        print(f"# wrote {len(_ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

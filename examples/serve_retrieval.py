@@ -14,11 +14,18 @@ query scores only its ``--nprobe`` nearest clusters — sublinear in N — and
 the script prints the recall/QPS comparison against the flat scan.
 ``--sharded --index ivf`` row-shards the inverted lists per device.
 
+``--churn`` exercises the mutable corpus lifecycle (delete 10%, upsert
+replacements through the already-fitted transform, auto-compact);
+``--checkpoint DIR`` saves the server and verifies a load round-trip
+returns identical results (see docs/architecture.md).
+
 Run:  PYTHONPATH=src python examples/serve_retrieval.py [--n 100000]
       PYTHONPATH=src python examples/serve_retrieval.py --sharded \
           [--chunk 8192]
       PYTHONPATH=src python examples/serve_retrieval.py --index ivf \
           [--nprobe 16 --clusters 0]
+      PYTHONPATH=src python examples/serve_retrieval.py --index ivf \
+          --churn --checkpoint /tmp/zen.ckpt
 """
 import argparse
 import time
@@ -50,6 +57,12 @@ def main():
                    help="clusters probed per query (ivf only)")
     p.add_argument("--clusters", type=int, default=0,
                    help="IVF cluster count (0 = ~4*sqrt(N))")
+    p.add_argument("--churn", action="store_true",
+                   help="after serving, delete 10%% of the corpus and "
+                        "upsert replacements, then keep serving")
+    p.add_argument("--checkpoint", default=None, metavar="DIR",
+                   help="save the server to DIR and verify a load "
+                        "round-trip returns identical results")
     args = p.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -109,6 +122,42 @@ def main():
               f"{np.mean(flat_recalls):.3f}, p50 {fs['p50_ms']:.1f} ms "
               f"(ivf p50 {ss['p50_ms']:.1f} ms, nprobe={args.nprobe}/"
               f"{index.ivf.n_clusters})")
+
+    if args.churn and not args.sharded:
+        # mutable corpus lifecycle: delete 10% of ids, upsert replacements
+        # (projected with the already-fitted transform), keep serving
+        rng = np.random.default_rng(0)
+        n_churn = args.n // 10
+        dead = rng.choice(args.n, size=n_churn, replace=False)
+        t0 = time.time()
+        server.delete(dead)
+        t_del = time.time() - t0
+        fresh = syn.manifold_space(jax.random.fold_in(key, 999), n_churn,
+                                   args.dim, args.dim // 16)
+        t0 = time.time()
+        server.upsert(np.arange(args.n, args.n + n_churn), fresh)
+        t_up = time.time() - t0
+        compacted = server.maybe_compact()
+        q = syn.manifold_space(jax.random.fold_in(key, 200), args.batch_size,
+                               args.dim, args.dim // 16)
+        _, ids = server.query(q, args.neighbors)
+        assert not (set(dead.tolist())
+                    & set(np.asarray(ids).ravel().tolist()))
+        print(f"churn: {n_churn} deletes in {t_del:.2f}s "
+              f"({n_churn / t_del:.0f}/s), {n_churn} upserts in {t_up:.2f}s "
+              f"({n_churn / t_up:.0f}/s), compacted={compacted}, "
+              f"live={server.index.size}")
+
+    if args.checkpoint and not args.sharded:
+        server.save(args.checkpoint)
+        restored = ZenServer.load(args.checkpoint)
+        q = syn.manifold_space(jax.random.fold_in(key, 300), args.batch_size,
+                               args.dim, args.dim // 16)
+        d0, i0 = server.query(q, args.neighbors)
+        d1, i1 = restored.query(q, args.neighbors)
+        same = bool(np.array_equal(np.asarray(i0), np.asarray(i1)))
+        print(f"checkpoint: saved + reloaded from {args.checkpoint}; "
+              f"round-trip identical results: {same}")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,17 @@
 from .checkpoint import CheckpointManager
+from .index_io import (
+    INDEX_FORMAT,
+    INDEX_FORMAT_VERSION,
+    CheckpointFormatError,
+    load_state,
+    save_state,
+)
 
-__all__ = ["CheckpointManager"]
+__all__ = [
+    "CheckpointManager",
+    "CheckpointFormatError",
+    "INDEX_FORMAT",
+    "INDEX_FORMAT_VERSION",
+    "load_state",
+    "save_state",
+]

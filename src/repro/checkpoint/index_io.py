@@ -1,0 +1,157 @@
+"""Versioned, atomic on-disk state for serving indexes.
+
+``checkpoint.CheckpointManager`` handles *training* state (step-numbered,
+async, elastic pytree restore). Serving indexes have different needs: a
+single current snapshot, explicit format versioning (an index written by one
+release must either load bit-exactly or be rejected loudly by another), and
+no dependence on jax treedef serialisation. This module is that store:
+
+  save_state(dir, arrays, meta, kind=...)   -> atomic versioned snapshot
+  load_state(dir, expect_kind=...)          -> (arrays, meta) or raise
+
+Layout: one ``.npy`` per array plus ``manifest.json`` holding
+``{format, version, kind, meta, arrays}``. The write goes to a ``tmp.``
+sibling directory, every file is fsync'd, and the directory is
+``os.rename``'d into place (same discipline as
+``CheckpointManager._write``). When overwriting, the previous snapshot is
+first renamed aside to an ``old.`` sibling and only removed after the new
+one is published — a crash at any point leaves either the old or the new
+snapshot loadable (a leftover ``old.<name>`` directory means the crash hit
+the narrow window between the two renames; rename it back to recover).
+
+Consumers (``index.ivf.IVFZenIndex.save``, ``launch.serve.ZenServer.save``)
+serialise to *canonical host arrays* — live members only, global ids, no
+device layout — so a snapshot saved from S shards loads onto any other
+device count (resharding happens at load, not at save).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+#: on-disk format name; never reuse for a different layout
+INDEX_FORMAT = "zen-index"
+#: bump on any incompatible change to the manifest or array contract
+INDEX_FORMAT_VERSION = 1
+
+
+class CheckpointFormatError(ValueError):
+    """Raised when a snapshot's format/version/kind does not match."""
+
+
+def save_state(
+    directory: str,
+    arrays: Mapping[str, np.ndarray],
+    meta: Mapping[str, Any],
+    *,
+    kind: str,
+) -> str:
+    """Atomically write a versioned snapshot.
+
+    Args:
+      directory: target snapshot directory (created/replaced as a whole).
+      arrays:    name -> host array; each is stored as ``<name>.npy``. Names
+                 must be filesystem-safe (``[A-Za-z0-9_.-]``).
+      meta:      JSON-serialisable metadata (ints, strings, lists...).
+      kind:      consumer tag (e.g. ``"ivf-index"``, ``"zen-server"``)
+                 checked again at load time.
+
+    Returns the final snapshot directory path.
+    """
+    directory = os.path.abspath(directory)
+    parent = os.path.dirname(directory)
+    os.makedirs(parent, exist_ok=True)
+    tmp = os.path.join(parent, f"tmp.{os.path.basename(directory)}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest: Dict[str, Any] = {
+        "format": INDEX_FORMAT,
+        "version": INDEX_FORMAT_VERSION,
+        "kind": kind,
+        "meta": dict(meta),
+        "arrays": {},
+    }
+    for name, arr in arrays.items():
+        if not all(c.isalnum() or c in "_.-" for c in name):
+            raise ValueError(f"unsafe array name {name!r}")
+        arr = np.asarray(arr)
+        fname = f"{name}.npy"
+        with open(os.path.join(tmp, fname), "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["arrays"][name] = {
+            "file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    # publish: move the old snapshot aside (not rmtree) so a crash between
+    # the renames still leaves one loadable snapshot on disk
+    old = os.path.join(parent, f"old.{os.path.basename(directory)}")
+    if os.path.exists(directory):
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(directory, old)
+    os.rename(tmp, directory)  # atomic publish
+    shutil.rmtree(old, ignore_errors=True)
+    return directory
+
+
+def load_state(
+    directory: str,
+    *,
+    expect_kind: Optional[str] = None,
+) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Load a snapshot written by :func:`save_state`.
+
+    Args:
+      directory:   snapshot directory.
+      expect_kind: when given, the manifest's ``kind`` must match.
+
+    Returns ``(arrays, meta)`` with host numpy arrays.
+
+    Raises:
+      FileNotFoundError:     no manifest at ``directory``.
+      CheckpointFormatError: wrong format name, wrong (newer/older
+                             incompatible) version, kind mismatch, or an
+                             array whose dtype/shape disagrees with its
+                             manifest entry (truncated/corrupt file).
+    """
+    path = os.path.join(directory, "manifest.json")
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"no index snapshot at {directory}")
+    with open(path) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != INDEX_FORMAT:
+        raise CheckpointFormatError(
+            f"{directory}: format {manifest.get('format')!r}, "
+            f"expected {INDEX_FORMAT!r}"
+        )
+    if manifest.get("version") != INDEX_FORMAT_VERSION:
+        raise CheckpointFormatError(
+            f"{directory}: format version {manifest.get('version')!r} not "
+            f"readable by this build (wants {INDEX_FORMAT_VERSION})"
+        )
+    if expect_kind is not None and manifest.get("kind") != expect_kind:
+        raise CheckpointFormatError(
+            f"{directory}: snapshot kind {manifest.get('kind')!r}, "
+            f"expected {expect_kind!r}"
+        )
+    arrays: Dict[str, np.ndarray] = {}
+    for name, entry in manifest["arrays"].items():
+        arr = np.load(os.path.join(directory, entry["file"]))
+        if (str(arr.dtype) != entry["dtype"]
+                or list(arr.shape) != entry["shape"]):
+            raise CheckpointFormatError(
+                f"{directory}: array {name!r} is {arr.dtype}{arr.shape}, "
+                f"manifest says {entry['dtype']}{tuple(entry['shape'])}"
+            )
+        arrays[name] = arr
+    return arrays, manifest["meta"]

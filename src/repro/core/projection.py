@@ -33,7 +33,30 @@ Array = jax.Array
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class NSimplexTransform:
-    """nSimplex projection sigma_R : (U, d) -> R^k (paper §4)."""
+    """nSimplex projection sigma_R : (U, d) -> R^k (paper §4).
+
+    Attributes:
+      k:      number of reference objects == output dimensionality.
+      metric: name from ``core.metrics`` ("euclidean", "cosine", "jsd",
+              "triangular", ...), or "precomputed" in distance-only mode.
+      jitter: relative Gram-diagonal regulariser for nearly degenerate
+              reference sets (0.0 = exact).
+      refs:   (k, m) fitted reference objects, or ``None`` in distance-only
+              mode.
+      base:   the fitted ``BaseSimplex`` (Cholesky factor + cached norms).
+
+    A fitted transform projects *unseen* objects indefinitely — only the k
+    reference distances are needed per object — which is what the mutable
+    serving index (``launch.serve.ZenServer.upsert``) relies on.
+
+    >>> import jax, jax.numpy as jnp
+    >>> X = jax.random.normal(jax.random.PRNGKey(0), (40, 8), jnp.float32)
+    >>> tr = NSimplexTransform(k=4, metric="euclidean").fit(X[:4])
+    >>> tuple(tr.transform(X).shape)   # (N, k) apex coordinates
+    (40, 4)
+    >>> bool(tr.is_fitted)
+    True
+    """
 
     k: int
     metric: str = "euclidean"
@@ -54,7 +77,16 @@ class NSimplexTransform:
 
     # -- fitting -------------------------------------------------------------
     def fit(self, refs: Array) -> "NSimplexTransform":
-        """Fit from (k, m) reference objects in a coordinate space."""
+        """Fit from (k, m) reference objects in a coordinate space.
+
+        Args:
+          refs: (k, m) reference objects; normalised per the metric's rule
+                (e.g. L2 for cosine) before the pairwise distance matrix is
+                taken.
+
+        Returns a new fitted transform (``self`` is unchanged).
+        Raises ValueError when ``refs`` does not hold exactly ``k`` rows.
+        """
         refs = jnp.asarray(refs)
         if refs.shape[0] != self.k:
             raise ValueError(f"expected {self.k} references, got {refs.shape[0]}")
@@ -100,11 +132,20 @@ class NSimplexTransform:
         return m.pdist(X, self.refs)
 
     def transform(self, X: Array) -> Array:
-        """Project (N, m) objects to (N, k) apex coordinates."""
+        """Project (N, m) objects to (N, k) apex coordinates.
+
+        The last output column is the altitude (>= 0); the Zen/Lwb/Upb
+        estimators (``core.zen``) treat it specially.
+        """
         return simplex_lib.apex_project(self.base, self.reference_distances(X))
 
     def transform_from_distances(self, dists: Array) -> Array:
-        """Project from precomputed (N, k) object-to-reference distances."""
+        """Project from precomputed (N, k) object-to-reference distances.
+
+        The coordinate-free path (paper §5.6): ``dists[i, j]`` is the
+        original-space distance from object i to reference j. Returns (N, k)
+        apex coordinates, same contract as :meth:`transform`.
+        """
         self._check_fitted()
         return simplex_lib.apex_project(self.base, dists)
 

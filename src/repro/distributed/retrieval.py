@@ -147,6 +147,47 @@ def resolve_axis_names(
     return tuple(axis)
 
 
+def host_rows(x: Array, n_valid: Optional[int] = None):
+    """Gather a (possibly row-sharded) array to one host copy.
+
+    Used by the index checkpointing path (``ZenServer.save``): snapshots
+    store canonical unsharded rows so the device count becomes a load-time
+    choice. ``n_valid`` strips the trailing shard-padding rows that
+    ``shard_rows`` appended.
+    """
+    import numpy as np
+
+    out = np.asarray(jax.device_get(x))
+    return out if n_valid is None else out[:n_valid]
+
+
+def shard_rows(
+    x: Array,
+    *,
+    mesh,
+    axis: Optional[Union[str, Tuple[str, ...]]] = None,
+) -> Tuple[Array, int]:
+    """Row-shard ``x`` over ``mesh``, zero-padding to a divisible row count.
+
+    The per-shard-save / reshard-on-load counterpart of :func:`host_rows`:
+    pads (N, ...) with zero rows to a multiple of the shard count and
+    device_puts it with ``NamedSharding(mesh, P(axes, None, ...))``. Returns
+    ``(sharded array, n_valid)`` where ``n_valid`` is the original N —
+    pass it back to :func:`sharded_knn_search` so padded rows are masked.
+    """
+    from jax.sharding import NamedSharding
+
+    axis_names = resolve_axis_names(mesh, axis)
+    n_shards = math.prod(mesh.shape[a] for a in axis_names)
+    n_valid = x.shape[0]
+    pad = (-n_valid) % n_shards
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    rows = axis_names if len(axis_names) > 1 else axis_names[0]
+    spec = P(rows, *([None] * (x.ndim - 1)))
+    return jax.device_put(x, NamedSharding(mesh, spec)), n_valid
+
+
 def sharded_ivf_probe(
     queries: Array,
     tile_coords: Array,

@@ -2,12 +2,20 @@
 
 ``kmeans``   batched Lloyd's k-means in JAX — the coarse quantizer.
 ``ivf``      IVFZenIndex: padded inverted-list layout + clustered search,
-             probing only a few clusters per query (sublinear retrieval).
+             probing only a few clusters per query (sublinear retrieval),
+             plus the mutable-corpus lifecycle (upsert / delete / compact)
+             and versioned save / load snapshots.
 """
-from .ivf import IVFZenIndex, ShardedIVFZenIndex, exact_rerank
+from .ivf import (
+    IVF_SNAPSHOT_KIND,
+    IVFZenIndex,
+    ShardedIVFZenIndex,
+    exact_rerank,
+)
 from .kmeans import kmeans_assign, kmeans_fit
 
 __all__ = [
+    "IVF_SNAPSHOT_KIND",
     "IVFZenIndex",
     "ShardedIVFZenIndex",
     "exact_rerank",

@@ -26,19 +26,36 @@ before the running top-k merge — never returned.
 kernel on TPU, a fori_loop gather fallback elsewhere — both bounded-memory
 (one tile per query per step). ``exact_rerank`` refines a candidate pool with
 true distances in the original space (the PR-1 serving pattern).
+
+Mutable corpus lifecycle
+------------------------
+The index is not frozen at build time. ``upsert`` assigns new points to their
+nearest centroid and writes them into spare tile capacity (appending one
+whole tile per cluster — *grow-by-tile* — when a list fills); ``delete``
+tombstones rows by rewriting their id to the existing ``-1`` padding value,
+so the probe kernels need no shape or code changes — a tombstone is
+indistinguishable from padding and is masked the same way. Both are
+control-plane host operations returning a *new* index (the search path stays
+pure/jit); ``compact`` (optionally re-running ``index.kmeans``) repacks the
+tiles when ``needs_compact`` reports that tombstones or tile over-allocation
+crossed a threshold. ``save``/``load`` persist the live members in a
+canonical, device-layout-free snapshot (``repro.checkpoint.index_io``) that
+any later process — or a different shard count, via
+``ShardedIVFZenIndex.load`` — can reload.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import math
-from typing import Optional, Tuple, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint import index_io
 from repro.core import metrics as metrics_lib
 from repro.core import zen as zen_lib
 from repro.kernels import ops as kernel_ops
@@ -47,11 +64,121 @@ from .kmeans import kmeans_assign, kmeans_fit
 
 Array = jax.Array
 
+#: snapshot kind tag for IVF indexes (flat and sharded share one canonical
+#: on-disk representation: live members + global quantizer)
+IVF_SNAPSHOT_KIND = "ivf-index"
+
+
+def _check_ids(ids: np.ndarray) -> None:
+    """Reject ids the int32 tile layout cannot represent.
+
+    Ids are stored as int32 with ``-1`` reserved for padding/tombstones;
+    a negative id would alias the dead-slot encoding and an id above
+    int32 max would silently wrap negative in the ``astype`` — turning a
+    live row into an unreturnable tombstone — so both are errors here.
+    """
+    if ids.size == 0:
+        return
+    if ids.min() < 0:
+        raise ValueError("ids must be non-negative (-1 marks padding)")
+    if ids.max() > np.iinfo(np.int32).max:
+        raise ValueError(
+            f"ids must fit int32 (max {np.iinfo(np.int32).max}), "
+            f"got {ids.max()}")
+
+
+def _dedupe_last_wins(
+    ids: np.ndarray, rows: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Drop duplicate ids within an upsert batch, keeping the last
+    occurrence of each (relative order otherwise preserved)."""
+    _, first_of_rev = np.unique(ids[::-1], return_index=True)
+    keep = np.sort(ids.size - 1 - first_of_rev)
+    return ids[keep], rows[keep]
+
+
+def snapshot_payload(index) -> Tuple[dict, dict]:
+    """(arrays, meta) of an IVF index's canonical snapshot.
+
+    The single definition of the on-disk payload — live members (gathered
+    from either the flat or the sharded tile layout via ``_live_members``)
+    plus the quantizer and geometry — shared by ``IVFZenIndex.save``,
+    ``ShardedIVFZenIndex.save`` and ``launch.serve.ZenServer.save`` so the
+    three save paths cannot drift.
+    """
+    coords, ids, assign = index._live_members()
+    arrays = {
+        "centroids": np.asarray(index.centroids, np.float32),
+        "member_coords": coords,
+        "member_ids": ids.astype(np.int32),
+        "member_assign": assign.astype(np.int32),
+    }
+    meta = {"n_clusters": index.n_clusters, "tile_rows": index.tile_rows}
+    return arrays, meta
+
+
+def _pack_tiles(
+    coords: np.ndarray,
+    assign: np.ndarray,
+    ids: np.ndarray,
+    n_clusters: int,
+    tile_rows: int,
+    *,
+    min_tiles: int = 1,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Pack member rows into the padded inverted-list tile layout (host-side).
+
+    Args:
+      coords:  (n, k) member apex coordinates.
+      assign:  (n,) cluster id per member.
+      ids:     (n,) global row ids to store (any non-negative int32 values).
+      n_clusters: number of clusters C.
+      tile_rows:  rows per tile.
+      min_tiles:  lower bound on tiles per cluster T (used to align shard /
+                  growth layouts).
+
+    Returns ``(packed (C, T*tile_rows, k) f32, out_ids (C, T*tile_rows)
+    int32 with -1 padding, T)``.
+    """
+    n, kdim = coords.shape
+    counts = np.bincount(assign, minlength=n_clusters) if n else np.zeros(
+        n_clusters, np.int64)
+    cmax = int(counts.max()) if n else 0
+    per_cluster = max(
+        min_tiles * tile_rows,
+        int(math.ceil(cmax / tile_rows)) * tile_rows if cmax else 0,
+    )
+    T = per_cluster // tile_rows
+    out_ids = np.full((n_clusters, per_cluster), -1, np.int64)
+    packed = np.zeros((n_clusters, per_cluster, kdim), np.float32)
+    if n:
+        order = np.argsort(assign, kind="stable")
+        starts = np.cumsum(counts) - counts
+        pos = np.arange(n) - np.repeat(starts, counts)
+        out_ids[assign[order], pos] = ids[order]
+        packed[assign[order], pos] = np.asarray(coords, np.float32)[order]
+    return packed, out_ids.astype(np.int32), T
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class IVFZenIndex:
-    """Clustered Zen index: k-means centroids + padded inverted-list tiles."""
+    """Clustered Zen index: k-means centroids + padded inverted-list tiles.
+
+    Attributes:
+      centroids:   (C, k) f32 coarse-quantizer centroids.
+      tile_coords: (C*T, tile_rows, k) packed member apex coordinates;
+                   cluster ``c`` owns blocks ``c*T .. c*T+T-1``.
+      tile_ids:    (C*T, tile_rows) int32 global row ids; ``-1`` marks both
+                   never-used padding and tombstoned (deleted) rows — the
+                   probe kernels mask the two identically.
+      n_clusters:  C.
+      tiles_per_cluster: T (grows when ``upsert`` fills a list).
+      tile_rows:   rows per tile (keep a multiple of 128 for the TPU kernel).
+      n_valid:     number of live (searchable) rows.
+      n_deleted:   tombstones accumulated since the last build/compact —
+                   drives the ``needs_compact`` trigger.
+    """
 
     centroids: Array    # (C, k) f32 coarse-quantizer centroids
     tile_coords: Array  # (C*T, tile_rows, k) packed member coordinates
@@ -59,13 +186,14 @@ class IVFZenIndex:
     n_clusters: int
     tiles_per_cluster: int
     tile_rows: int
-    n_valid: int        # number of real (un-padded) index rows
+    n_valid: int        # number of live (un-padded, un-deleted) index rows
+    n_deleted: int = 0  # tombstones since the last build/compact
 
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
         children = (self.centroids, self.tile_coords, self.tile_ids)
         aux = (self.n_clusters, self.tiles_per_cluster, self.tile_rows,
-               self.n_valid)
+               self.n_valid, self.n_deleted)
         return children, aux
 
     @classmethod
@@ -87,6 +215,7 @@ class IVFZenIndex:
         coords: Array,
         n_clusters: int,
         *,
+        ids: Optional[Sequence[int]] = None,
         tile_rows: int = 128,
         n_iters: int = 15,
         chunk: int = 16384,
@@ -94,10 +223,22 @@ class IVFZenIndex:
     ) -> "IVFZenIndex":
         """Cluster (N, k) apex coordinates and pack the inverted lists.
 
-        The quantizer fit and assignment run jit-compiled and chunked
+        Args:
+          coords:     (N, k) apex coordinates to index.
+          n_clusters: requested cluster count (clamped to [1, N]).
+          ids:        optional (N,) non-negative int32 global ids to store
+                      with each row; defaults to ``arange(N)``. Explicit ids
+                      are what make churn (``upsert``/``delete``/``compact``)
+                      and checkpoint reload id-stable.
+          tile_rows:  rows per packed tile; keep a multiple of 128 so tiles
+                      are lane-aligned for the TPU probe kernel.
+          n_iters:    Lloyd iterations for the quantizer fit.
+          chunk:      row chunk of the k-means assignment passes.
+          key:        PRNG key for the k-means++ seeding.
+
+        Returns a fresh index with ``n_valid == N`` and no tombstones. The
+        quantizer fit and assignment run jit-compiled and chunked
         (``index.kmeans``); the pack itself is a one-off host-side sort.
-        ``tile_rows`` should stay a multiple of 128 so tiles are lane-aligned
-        for the TPU probe kernel.
         """
         key = key if key is not None else jax.random.PRNGKey(0)
         n, kdim = coords.shape
@@ -106,30 +247,299 @@ class IVFZenIndex:
             coords, n_clusters, key=key, n_iters=n_iters, chunk=chunk
         )
         assign = np.asarray(kmeans_assign(coords, centroids, chunk=chunk))
-
-        counts = np.bincount(assign, minlength=n_clusters)
-        per_cluster = max(tile_rows, int(
-            math.ceil(counts.max() / tile_rows)) * tile_rows)
-        T = per_cluster // tile_rows
-        ids = np.full((n_clusters, per_cluster), -1, np.int64)
-        order = np.argsort(assign, kind="stable")
-        starts = np.cumsum(counts) - counts
-        pos = np.arange(n) - np.repeat(starts, counts)
-        ids[assign[order], pos] = order
-        packed = np.zeros((n_clusters, per_cluster, kdim), np.float32)
-        valid = ids >= 0
-        packed[valid] = np.asarray(coords, np.float32)[ids[valid]]
-
+        ids_np = (np.arange(n, dtype=np.int64) if ids is None
+                  else np.asarray(ids, np.int64).reshape(n))
+        _check_ids(ids_np)
+        packed, out_ids, T = _pack_tiles(
+            np.asarray(coords, np.float32), assign, ids_np, n_clusters,
+            tile_rows)
         return cls(
             centroids=centroids,
             tile_coords=jnp.asarray(
                 packed.reshape(n_clusters * T, tile_rows, kdim)),
             tile_ids=jnp.asarray(
-                ids.reshape(n_clusters * T, tile_rows).astype(np.int32)),
+                out_ids.reshape(n_clusters * T, tile_rows)),
             n_clusters=n_clusters,
             tiles_per_cluster=T,
             tile_rows=tile_rows,
             n_valid=n,
+        )
+
+    # -- mutation (control plane: host-side, returns a new index) -----------
+    def delete(self, ids: Sequence[int]) -> "IVFZenIndex":
+        """Tombstone the given global ids; unknown ids are ignored.
+
+        The rows' id slots are rewritten to ``-1`` — exactly the padding
+        value the probe kernels already mask to ``+inf`` — so search needs no
+        shape or code change and never returns a deleted row. The stale
+        coordinates stay in ``tile_coords`` until ``compact`` repacks them
+        away. O(C*T*tile_rows) host work; the device arrays are re-uploaded.
+
+        Returns a new index with ``n_valid`` decreased by the number of rows
+        actually removed (``self`` unchanged).
+        """
+        ids_np = np.unique(np.asarray(ids, np.int64).ravel())
+        tids = np.asarray(self.tile_ids)
+        mask = (tids >= 0) & np.isin(tids, ids_np)
+        removed = int(mask.sum())
+        if removed == 0:
+            return self
+        tids = tids.copy()
+        tids[mask] = -1
+        return dataclasses.replace(
+            self,
+            tile_ids=jnp.asarray(tids),
+            n_valid=self.n_valid - removed,
+            n_deleted=self.n_deleted + removed,
+        )
+
+    def upsert(self, ids: Sequence[int], coords: Array) -> "IVFZenIndex":
+        """Insert (or replace) rows keyed by global id.
+
+        Args:
+          ids:    (B,) non-negative global ids. An id already in the index is
+                  *replaced*: its old row is tombstoned first (it may move to
+                  a different cluster). Duplicate ids within the batch keep
+                  the last occurrence.
+          coords: (B, k) apex coordinates (e.g. ``transform.transform(X)``).
+
+        Each new row is assigned to its nearest centroid
+        (``kmeans_assign`` with the *existing* quantizer — the paper's point
+        that a fitted transform keeps projecting new objects) and written
+        into a free slot of that cluster's tiles, reusing tombstoned slots
+        first. When a cluster's list is full the layout *grows by one or
+        more whole tiles for every cluster* (T -> T') so all shapes stay
+        uniform and the probe kernels recompile once, not per cluster.
+
+        Returns a new index (``self`` unchanged).
+        """
+        ids_np = np.asarray(ids, np.int64).ravel()
+        _check_ids(ids_np)
+        coords_np = np.asarray(coords, np.float32).reshape(
+            ids_np.size, self.dim)
+        if ids_np.size == 0:
+            return self
+        ids_np, coords_np = _dedupe_last_wins(ids_np, coords_np)
+
+        base = self.delete(ids_np)  # replaced rows become tombstones
+        C, T, rows, kdim = (self.n_clusters, base.tiles_per_cluster,
+                            self.tile_rows, self.dim)
+        tids = np.asarray(base.tile_ids).reshape(C, T * rows).copy()
+        tcoords = np.asarray(base.tile_coords).reshape(
+            C, T * rows, kdim).copy()
+
+        assign = np.asarray(
+            kmeans_assign(jnp.asarray(coords_np), self.centroids))
+        counts = np.bincount(assign, minlength=C)
+        deficit = counts - (tids < 0).sum(axis=1)
+        if deficit.max() > 0:  # grow-by-tile: append whole empty tiles
+            grow = int(math.ceil(deficit.max() / rows))
+            tids = np.concatenate(
+                [tids, np.full((C, grow * rows), -1, np.int32)], axis=1)
+            tcoords = np.concatenate(
+                [tcoords, np.zeros((C, grow * rows, kdim), np.float32)],
+                axis=1)
+            T += grow
+        for c in np.unique(assign):
+            sel = np.flatnonzero(assign == c)
+            slots = np.flatnonzero(tids[c] < 0)[: sel.size]
+            tids[c, slots] = ids_np[sel]
+            tcoords[c, slots] = coords_np[sel]
+        # every insert lands in a previously-dead slot, so the batch
+        # reclaims up to `inserted` tombstones — without the credit, a pure
+        # in-place refresh (replace existing ids) would inflate n_deleted
+        # and trip needs_compact with nothing reclaimable
+        return dataclasses.replace(
+            base,
+            tile_coords=jnp.asarray(tcoords.reshape(C * T, rows, kdim)),
+            tile_ids=jnp.asarray(tids.reshape(C * T, rows).astype(np.int32)),
+            tiles_per_cluster=T,
+            n_valid=base.n_valid + ids_np.size,
+            n_deleted=max(0, base.n_deleted - int(ids_np.size)),
+        )
+
+    @property
+    def tombstone_ratio(self) -> float:
+        """Fraction of once-live rows that are now tombstones."""
+        return self.n_deleted / max(self.n_valid + self.n_deleted, 1)
+
+    def cluster_sizes(self) -> np.ndarray:
+        """(C,) live member count per cluster (host-side)."""
+        tids = np.asarray(self.tile_ids).reshape(
+            self.n_clusters, self.tiles_per_cluster * self.tile_rows)
+        return (tids >= 0).sum(axis=1)
+
+    @property
+    def imbalance(self) -> float:
+        """Max/mean live cluster load; 1.0 is perfectly balanced.
+
+        Upserts assign into the *frozen* quantizer, so a drifting corpus
+        concentrates into few cells; every grow-by-tile then inflates T for
+        all clusters and the probe scans T tiles per probed cluster. High
+        imbalance is the signal that ``compact(recluster=True)`` — not a
+        mere repack — is needed.
+        """
+        sizes = self.cluster_sizes()
+        mean = float(sizes.mean())
+        return float(sizes.max()) / mean if mean > 0 else 0.0
+
+    def needs_compact(
+        self,
+        *,
+        max_tombstone_ratio: float = 0.2,
+        max_tile_slack: float = 2.0,
+        max_imbalance: Optional[float] = None,
+    ) -> bool:
+        """True when churn has degraded the packed layout enough to rebuild.
+
+        Triggers when (a) more than ``max_tombstone_ratio`` of the
+        once-live rows are tombstones (probes scan dead slots), (b) the
+        allocated tiles-per-cluster exceeds ``max_tile_slack`` times what
+        the current largest list actually needs (grow-by-tile inflated every
+        cluster; a repack would shrink T and the probe cost with it), or
+        (c) ``max_imbalance`` is given and :attr:`imbalance` exceeds it —
+        that one calls for ``compact(recluster=True)``. It is off by
+        default because a healthy k-means fit on clustered data is already
+        skewed; pick a threshold relative to the freshly built index.
+        """
+        if self.tombstone_ratio > max_tombstone_ratio:
+            return True
+        if max_imbalance is not None and self.imbalance > max_imbalance:
+            return True
+        t_needed = max(
+            1, -(-int(self.cluster_sizes().max()) // self.tile_rows))
+        return self.tiles_per_cluster >= max_tile_slack * t_needed
+
+    def compact(
+        self,
+        *,
+        recluster: bool = False,
+        n_clusters: Optional[int] = None,
+        n_iters: int = 15,
+        chunk: int = 16384,
+        key: Optional[Array] = None,
+    ) -> "IVFZenIndex":
+        """Repack the live rows into a minimal tile layout.
+
+        Without ``recluster`` the existing quantizer and assignments are
+        kept — a pure repack that drops tombstones and shrinks
+        grow-by-tile slack. With ``recluster=True`` (or an explicit
+        ``n_clusters``) the quantizer is refit on the live coordinates with
+        ``index.kmeans`` first — the full re-balance for heavily churned or
+        drifted corpora. Ids are preserved either way.
+        """
+        coords, ids, assign = self._live_members()
+        if recluster or n_clusters is not None:
+            key = key if key is not None else jax.random.PRNGKey(0)
+            n_clusters = n_clusters or self.n_clusters
+            n_clusters = max(1, min(n_clusters, max(len(ids), 1)))
+            if len(ids) == 0:
+                centroids = np.asarray(self.centroids, np.float32)[:n_clusters]
+            else:
+                centroids, _ = kmeans_fit(
+                    jnp.asarray(coords), n_clusters, key=key,
+                    n_iters=n_iters, chunk=chunk)
+                assign = np.asarray(kmeans_assign(
+                    jnp.asarray(coords), centroids, chunk=chunk))
+            centroids = jnp.asarray(centroids)
+        else:
+            n_clusters = self.n_clusters
+            centroids = self.centroids
+        packed, out_ids, T = _pack_tiles(
+            coords, assign, ids, n_clusters, self.tile_rows)
+        return IVFZenIndex(
+            centroids=centroids,
+            tile_coords=jnp.asarray(packed.reshape(
+                n_clusters * T, self.tile_rows, self.dim)),
+            tile_ids=jnp.asarray(out_ids.reshape(
+                n_clusters * T, self.tile_rows)),
+            n_clusters=n_clusters,
+            tiles_per_cluster=T,
+            tile_rows=self.tile_rows,
+            n_valid=len(ids),
+        )
+
+    def _live_members(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host copies of the live rows: (coords (n, k), ids (n,),
+        assign (n,)), ordered by cluster then slot."""
+        tids = np.asarray(self.tile_ids)          # (C*T, rows)
+        valid = tids >= 0
+        block_cluster = np.arange(tids.shape[0]) // self.tiles_per_cluster
+        assign = np.broadcast_to(
+            block_cluster[:, None], tids.shape)[valid]
+        coords = np.asarray(self.tile_coords)[valid]
+        return (coords.astype(np.float32), tids[valid].astype(np.int64),
+                assign.astype(np.int64))
+
+    @classmethod
+    def from_members(
+        cls,
+        coords: np.ndarray,
+        ids: np.ndarray,
+        assign: np.ndarray,
+        centroids: Array,
+        n_clusters: int,
+        tile_rows: int,
+    ) -> "IVFZenIndex":
+        """Pack canonical host member arrays into a fresh index.
+
+        The checkpoint-restore path (also used by ``launch.serve``): given
+        the live members ``(coords (n, k), ids (n,), assign (n,))`` and an
+        already-fitted quantizer, rebuild the padded tile layout with no
+        tombstones and minimal tiles-per-cluster.
+        """
+        coords = np.asarray(coords, np.float32)
+        packed, out_ids, T = _pack_tiles(
+            coords, np.asarray(assign, np.int64), np.asarray(ids, np.int64),
+            n_clusters, tile_rows)
+        kdim = coords.shape[1]
+        return cls(
+            centroids=jnp.asarray(centroids),
+            tile_coords=jnp.asarray(
+                packed.reshape(n_clusters * T, tile_rows, kdim)),
+            tile_ids=jnp.asarray(out_ids.reshape(n_clusters * T, tile_rows)),
+            n_clusters=n_clusters,
+            tiles_per_cluster=T,
+            tile_rows=tile_rows,
+            n_valid=coords.shape[0],
+        )
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, directory: str) -> str:
+        """Persist the index as a versioned snapshot (atomic publish).
+
+        Only the *live* members are written (tombstones and grow-by-tile
+        slack are dropped — a save is implicitly a repack), together with the
+        quantizer, as canonical host arrays with no device layout. The same
+        snapshot loads as a single-host index (:meth:`load`) or resharded
+        onto any device count (``ShardedIVFZenIndex.load``).
+        """
+        return index_io.save_state(
+            directory, *snapshot_payload(self), kind=IVF_SNAPSHOT_KIND)
+
+    @classmethod
+    def load(
+        cls, directory: str, *, tile_rows: Optional[int] = None
+    ) -> "IVFZenIndex":
+        """Load a snapshot written by :meth:`save` (either variant).
+
+        Args:
+          directory: snapshot directory.
+          tile_rows: override the stored tile geometry (e.g. retune for a
+                     different accelerator); defaults to the saved value.
+
+        Raises ``checkpoint.CheckpointFormatError`` on a version/kind
+        mismatch.
+        """
+        arrays, meta = index_io.load_state(
+            directory, expect_kind=IVF_SNAPSHOT_KIND)
+        return cls.from_members(
+            arrays["member_coords"],
+            arrays["member_ids"],
+            arrays["member_assign"],
+            jnp.asarray(arrays["centroids"]),
+            int(meta["n_clusters"]),
+            tile_rows or int(meta["tile_rows"]),
         )
 
     # -- search --------------------------------------------------------------
@@ -148,8 +558,12 @@ class IVFZenIndex:
         refer to rows of the original coordinate matrix (valid ids only —
         slots the probed clusters cannot fill come back as (+inf, -1)).
         ``nprobe = n_clusters`` scans every list and matches the flat
-        ``knn_search`` result exactly.
+        ``knn_search`` result exactly. On a fully-emptied index the full
+        (Q, n_neighbors) shape is kept, every slot (+inf, -1).
         """
+        assert n_neighbors > 0, n_neighbors
+        if self.n_valid == 0:
+            return _empty_result(queries.shape[0], n_neighbors)
         n_neighbors = min(n_neighbors, self.n_valid)
         nprobe = max(1, min(nprobe, self.n_clusters))
         return _ivf_search(
@@ -163,6 +577,12 @@ class IVFZenIndex:
         """(Q, nprobe) ids of the clusters nearest each query's coordinates."""
         nprobe = max(1, min(nprobe, self.n_clusters))
         return _probe_clusters(queries, self.centroids, nprobe, mode)
+
+
+def _empty_result(n_queries: int, n_neighbors: int) -> Tuple[Array, Array]:
+    """The all-unfilled search result: (Q, n_neighbors) of (+inf, -1)."""
+    return (jnp.full((n_queries, n_neighbors), jnp.inf, jnp.float32),
+            jnp.full((n_queries, n_neighbors), -1, jnp.int32))
 
 
 def _probe_clusters(
@@ -230,6 +650,54 @@ def exact_rerank(
     return -dd, jnp.take_along_axis(cand_ids, pos, axis=1)
 
 
+def _pack_sharded_tiles(
+    coords: np.ndarray,
+    assign: np.ndarray,
+    ids: np.ndarray,
+    n_clusters: int,
+    n_shards: int,
+    tile_rows: int,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Pack members into per-shard inverted lists with a common T.
+
+    Members are dealt round-robin across shards *within each cluster* (a
+    stable cluster-then-position sort, strided by shard) so every shard
+    holds ~1/S of every inverted list: per-shard max list size — and with
+    it T, hence tile memory S*C*T — stays ~1/S of the global max no matter
+    how the caller ordered the rows. (A contiguous split would hand whole
+    clusters to one shard when members arrive cluster-sorted, e.g. from
+    ``_live_members`` on the checkpoint-restore path, inflating T toward
+    the unsharded value.) Each shard then packs with :func:`_pack_tiles`,
+    padded to the largest shard's tiles-per-cluster so the stacked array
+    row-shards cleanly over a mesh. Returns
+    ``(tile_coords (S*C*T, tile_rows, k), tile_ids (S*C*T, tile_rows), T)``.
+    """
+    n = len(ids)
+    order = np.argsort(assign, kind="stable") if n else np.zeros(0, np.int64)
+    shard_of = np.empty(n, np.int64)
+    shard_of[order] = np.arange(n) % n_shards  # round-robin within cluster
+    T = max(
+        max(1, -(-int(np.bincount(assign[shard_of == s],
+                                  minlength=n_clusters).max()
+                      if (shard_of == s).any() else 0) // tile_rows))
+        for s in range(n_shards)
+    )
+    packed_s, ids_s = [], []
+    for s in range(n_shards):
+        sel = shard_of == s
+        packed, out_ids, _ = _pack_tiles(
+            coords[sel], assign[sel], ids[sel], n_clusters, tile_rows,
+            min_tiles=T)
+        packed_s.append(packed)
+        ids_s.append(out_ids)
+    kdim = coords.shape[1]
+    tile_coords = np.stack(packed_s).reshape(
+        n_shards * n_clusters * T, tile_rows, kdim)
+    tile_ids = np.stack(ids_s).reshape(
+        n_shards * n_clusters * T, tile_rows)
+    return tile_coords, tile_ids, T
+
+
 @dataclasses.dataclass
 class ShardedIVFZenIndex:
     """IVF index row-sharded over a device mesh.
@@ -240,6 +708,11 @@ class ShardedIVFZenIndex:
     query probes the same clusters on every shard (centroids are replicated)
     and the per-shard candidates merge host-side — the same shard_map pattern
     as ``distributed.sharded_knn_search``.
+
+    Mutation is a single-host (control-plane) concern: churn a host
+    ``IVFZenIndex``, ``save`` it, and ``ShardedIVFZenIndex.load`` the
+    snapshot onto the serving mesh — the snapshot format is shared, so a
+    save from S devices reloads onto any other device count.
     """
 
     centroids: Array    # (C, k) — replicated
@@ -257,6 +730,10 @@ class ShardedIVFZenIndex:
     def size(self) -> int:
         return self.n_valid
 
+    @property
+    def dim(self) -> int:
+        return int(self.centroids.shape[1])
+
     @classmethod
     def build(
         cls,
@@ -270,64 +747,105 @@ class ShardedIVFZenIndex:
         chunk: int = 16384,
         key: Optional[Array] = None,
     ) -> "ShardedIVFZenIndex":
+        """Fit the global quantizer and pack per-shard inverted lists.
+
+        Args mirror :meth:`IVFZenIndex.build` plus:
+          mesh: device mesh to row-shard the packed tiles over.
+          axis: mesh axis name(s) carrying the shards (default: all axes).
+        """
+        key = key if key is not None else jax.random.PRNGKey(0)
+        n, _ = coords.shape
+        n_clusters = max(1, min(n_clusters, n))
+        centroids, _ = kmeans_fit(
+            coords, n_clusters, key=key, n_iters=n_iters, chunk=chunk
+        )
+        assign = np.asarray(kmeans_assign(coords, centroids, chunk=chunk))
+        return cls._from_members(
+            np.asarray(coords, np.float32), np.arange(n, dtype=np.int64),
+            assign.astype(np.int64), centroids, n_clusters, tile_rows,
+            mesh=mesh, axis=axis,
+        )
+
+    @classmethod
+    def _from_members(
+        cls,
+        coords: np.ndarray,
+        ids: np.ndarray,
+        assign: np.ndarray,
+        centroids: Array,
+        n_clusters: int,
+        tile_rows: int,
+        *,
+        mesh,
+        axis: Optional[Union[str, Tuple[str, ...]]] = None,
+    ) -> "ShardedIVFZenIndex":
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         from repro.distributed.retrieval import resolve_axis_names
 
         axis_names = resolve_axis_names(mesh, axis)
         n_shards = math.prod(mesh.shape[a] for a in axis_names)
-
-        key = key if key is not None else jax.random.PRNGKey(0)
-        n, kdim = coords.shape
-        n_clusters = max(1, min(n_clusters, n))
-        centroids, _ = kmeans_fit(
-            coords, n_clusters, key=key, n_iters=n_iters, chunk=chunk
-        )
-        assign = np.asarray(kmeans_assign(coords, centroids, chunk=chunk))
-        coords_np = np.asarray(coords, np.float32)
-
-        # contiguous row ranges per shard, packed with *global* ids
-        rows_per = -(-n // n_shards)  # ceil
-        bounds = [
-            (s * rows_per, min((s + 1) * rows_per, n))
-            for s in range(n_shards)
-        ]
-        per_shard_max = max(
-            int(np.bincount(assign[lo:hi], minlength=n_clusters).max())
-            if hi > lo else 0
-            for lo, hi in bounds
-        )
-        per_cluster = max(tile_rows, int(
-            math.ceil(per_shard_max / tile_rows)) * tile_rows)
-        T = per_cluster // tile_rows
-
-        ids = np.full((n_shards, n_clusters, per_cluster), -1, np.int64)
-        packed = np.zeros(
-            (n_shards, n_clusters, per_cluster, kdim), np.float32)
-        for s, (lo, hi) in enumerate(bounds):
-            a = assign[lo:hi]
-            counts = np.bincount(a, minlength=n_clusters)
-            order = np.argsort(a, kind="stable")
-            starts = np.cumsum(counts) - counts
-            pos = np.arange(hi - lo) - np.repeat(starts, counts)
-            ids[s, a[order], pos] = order + lo
-            valid = ids[s] >= 0
-            packed[s][valid] = coords_np[ids[s][valid]]
-
-        tile_coords = jnp.asarray(
-            packed.reshape(n_shards * n_clusters * T, tile_rows, kdim))
-        tile_ids = jnp.asarray(
-            ids.reshape(n_shards * n_clusters * T, tile_rows)
-            .astype(np.int32))
+        tile_coords, tile_ids, T = _pack_sharded_tiles(
+            coords, assign, ids, n_clusters, n_shards, tile_rows)
         rows = axis_names if len(axis_names) > 1 else axis_names[0]
         tile_coords = jax.device_put(
-            tile_coords, NamedSharding(mesh, P(rows, None, None)))
+            jnp.asarray(tile_coords), NamedSharding(mesh, P(rows, None, None)))
         tile_ids = jax.device_put(
-            tile_ids, NamedSharding(mesh, P(rows, None)))
+            jnp.asarray(tile_ids), NamedSharding(mesh, P(rows, None)))
         return cls(
-            centroids=centroids, tile_coords=tile_coords, tile_ids=tile_ids,
-            n_clusters=n_clusters, tiles_per_cluster=T, tile_rows=tile_rows,
-            n_valid=n, n_shards=n_shards, mesh=mesh, axis_names=axis_names,
+            centroids=jnp.asarray(centroids), tile_coords=tile_coords,
+            tile_ids=tile_ids, n_clusters=n_clusters, tiles_per_cluster=T,
+            tile_rows=tile_rows, n_valid=len(ids), n_shards=n_shards,
+            mesh=mesh, axis_names=axis_names,
+        )
+
+    # -- persistence ---------------------------------------------------------
+    def _live_members(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Gather the live rows of every shard to host (global ids)."""
+        tids = np.asarray(self.tile_ids)          # (S*C*T, rows)
+        valid = tids >= 0
+        ct = self.n_clusters * self.tiles_per_cluster
+        block_cluster = (np.arange(tids.shape[0]) % ct) // \
+            self.tiles_per_cluster
+        assign = np.broadcast_to(block_cluster[:, None], tids.shape)[valid]
+        coords = np.asarray(self.tile_coords)[valid]
+        return (coords.astype(np.float32), tids[valid].astype(np.int64),
+                assign.astype(np.int64))
+
+    def save(self, directory: str) -> str:
+        """Persist the sharded index: gather every shard's live rows to host
+        and write the same canonical snapshot as ``IVFZenIndex.save`` —
+        device count is a *load-time* choice, not baked into the files."""
+        return index_io.save_state(
+            directory, *snapshot_payload(self), kind=IVF_SNAPSHOT_KIND)
+
+    @classmethod
+    def load(
+        cls,
+        directory: str,
+        *,
+        mesh,
+        axis: Optional[Union[str, Tuple[str, ...]]] = None,
+        tile_rows: Optional[int] = None,
+    ) -> "ShardedIVFZenIndex":
+        """Load an IVF snapshot and reshard it onto ``mesh``.
+
+        The snapshot carries no device layout, so the target mesh may have a
+        different device count than the saver (elastic restore: scale the
+        serving fleet up or down across restarts). Members are re-split into
+        per-shard inverted lists here; search results are identical to the
+        single-host load up to equal-distance tie order.
+        """
+        arrays, meta = index_io.load_state(
+            directory, expect_kind=IVF_SNAPSHOT_KIND)
+        return cls._from_members(
+            arrays["member_coords"],
+            arrays["member_ids"].astype(np.int64),
+            arrays["member_assign"].astype(np.int64),
+            jnp.asarray(arrays["centroids"]),
+            int(meta["n_clusters"]),
+            tile_rows or int(meta["tile_rows"]),
+            mesh=mesh, axis=axis,
         )
 
     def search(
@@ -342,6 +860,9 @@ class ShardedIVFZenIndex:
         """Per-shard IVF probe + host-side candidate merge (global ids)."""
         from repro.distributed import retrieval as retrieval_lib
 
+        assert n_neighbors > 0, n_neighbors
+        if self.n_valid == 0:
+            return _empty_result(queries.shape[0], n_neighbors)
         n_neighbors = min(n_neighbors, self.n_valid)
         nprobe = max(1, min(nprobe, self.n_clusters))
         probes = _probe_clusters(queries, self.centroids, nprobe, mode)

@@ -17,7 +17,9 @@ tiles from HBM — un-probed clusters are never touched, which is what makes
 the probe sublinear in index size. Each grid step fuses the Zen/Lwb/Upb
 estimator over one tile (``kernels.scoring.estimate_tile`` — shared with the
 brute-force ``zen_topk`` kernel) with the concat + ``top_k`` merge into VMEM
-scratch; padding rows (id == -1) are masked to +inf before the merge. Peak
+scratch; dead rows (id == -1: tile padding *and* tombstoned deletes — the
+mutable-index path reuses the same encoding, ``kernels.scoring.mask_invalid``)
+are masked to +inf before the merge. Peak
 per-query state is O(kw + tile_rows), independent of both index size and
 cluster-size skew.
 
@@ -36,7 +38,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import compiler_params
-from .scoring import MODE_IDS, estimate_rows, estimate_tile, merge_topk
+from .scoring import (
+    MODE_IDS, estimate_rows, estimate_tile, mask_invalid, merge_topk,
+)
 
 Array = jax.Array
 
@@ -67,7 +71,7 @@ def _probe_kernel(
     x = x_ref[0].astype(jnp.float32)            # (tile_rows, kp)
     ids = id_ref[...]                           # (1, tile_rows)
     d = estimate_tile(q, x, true_k=true_k, mode=mode)  # (1, tile_rows)
-    d = jnp.where(ids >= 0, d, jnp.inf)         # mask padding rows
+    d = mask_invalid(d, ids)                    # padding + tombstones
 
     kw = bd_ref.shape[1]
     bd_ref[...], bi_ref[...] = merge_topk(bd_ref[...], bi_ref[...], d, ids, kw)
@@ -197,7 +201,7 @@ def ivf_probe_scan(
         blk = tile_coords[b].astype(acc)            # (Q, tile_rows, k)
         ids = tile_ids[b]                           # (Q, tile_rows)
         d = estimate_rows(queries, blk, mode=mode_i)
-        d = jnp.where(ids >= 0, d, jnp.inf)         # mask padding rows
+        d = mask_invalid(d, ids)                    # padding + tombstones
         return merge_topk(best_d, best_i, d, ids, n_neighbors)
 
     init = (

@@ -61,11 +61,27 @@ def zen_topk(
 ):
     """Streaming top-k retrieval under an estimator; kernel-accelerated.
 
-    Dispatch: fused Pallas kernel on TPU (or under ``force_kernel`` via
-    interpret mode); otherwise the lax.scan fallback with the same
-    O(chunk)-per-query memory bound. All paths return
-    (distances, indices), each (Q, n_neighbors), without ever materialising
-    the (Q, N) estimator matrix.
+    Args:
+      queries:     (Q, k) projected query coordinates.
+      index:       (N, k) projected index coordinates.
+      n_neighbors: results per query (clamped to N).
+      mode:        estimator: "zen", "lwb" or "upb".
+      force_kernel: run the Pallas kernel in interpret mode off-TPU.
+      chunk:       row tile of the scan fallback (its memory bound).
+
+    Returns (distances f32, indices int32), each (Q, n_neighbors),
+    ascending by distance, without ever materialising the (Q, N) estimator
+    matrix. Dispatch: fused Pallas kernel on TPU (or under ``force_kernel``
+    via interpret mode); otherwise the lax.scan fallback with the same
+    O(chunk)-per-query memory bound.
+
+    >>> import jax, jax.numpy as jnp
+    >>> X = jax.random.normal(jax.random.PRNGKey(0), (100, 8), jnp.float32)
+    >>> d, ids = zen_topk(X[:2], X, n_neighbors=3)
+    >>> d.shape, ids.shape
+    ((2, 3), (2, 3))
+    >>> bool((ids >= 0).all())   # only real rows are returned
+    True
     """
     if _on_tpu():
         return _zen_topk.zen_topk(queries, index, n_neighbors, mode, **block_kw)

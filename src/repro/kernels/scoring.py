@@ -79,6 +79,19 @@ def estimate_rows(q: Array, blk: Array, *, mode: int) -> Array:
     return jnp.sqrt(jnp.maximum(z2, 0.0))
 
 
+def mask_invalid(d: Array, ids: Array) -> Array:
+    """+inf out candidate slots whose id is negative.
+
+    One predicate covers every kind of dead slot in the retrieval layouts —
+    never-used tile padding, shard padding, *and* tombstoned (deleted) rows —
+    because all of them are encoded as id ``-1``. Keeping the mask here means
+    the Pallas kernels, the scan fallbacks, and the host-side id remapping in
+    serving all agree on what "not a real candidate" means. Broadcasts:
+    ``d`` (Q, r) against ``ids`` (Q, r) or (1, r).
+    """
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
 def merge_topk(
     best_d: Array, best_i: Array, d: Array, ids: Array, k: int
 ) -> Tuple[Array, Array]:

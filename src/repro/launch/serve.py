@@ -22,8 +22,24 @@ plus padded inverted-list tiles, so each query scores only its ``nprobe``
 nearest clusters — sublinear in N — at a recall knob the server exposes as
 ``ZenServer(nprobe=...)``. ``nprobe = n_clusters`` recovers the flat result.
 
+Mutable corpus + persistence
+----------------------------
+The corpus is not frozen at build time. ``ZenServer.upsert(ids, vectors)``
+projects new objects with the *already-fitted* transform (the paper's core
+property: projection needs only distances to the k references, so it extends
+to unseen data indefinitely) and inserts them into the live index;
+``ZenServer.delete(ids)`` tombstones rows. Flat indexes tombstone by
+rewriting the row's external id to ``-1`` and its coordinates to a far
+sentinel (the row can never win a top-k slot); IVF indexes tombstone through
+the inverted-list id padding (``repro.index.ivf``). ``maybe_compact`` checks
+the churn thresholds and repacks when crossed. ``ZenServer.save``/``load``
+persist the whole serving state — transform, coordinates/inverted lists, id
+map, corpus — as a versioned snapshot (``repro.checkpoint.index_io``) that
+restores bit-identically, including onto a different device count.
+
 CLI (CPU demo):  PYTHONPATH=src python -m repro.launch.serve --n 20000 --dim \
-                 256 --k 16 --queries 64 [--index ivf --nprobe 8]
+                 256 --k 16 --queries 64 [--index ivf --nprobe 8] \
+                 [--checkpoint /tmp/zen.ckpt]
 """
 from __future__ import annotations
 
@@ -31,35 +47,220 @@ import argparse
 import dataclasses
 import functools
 import time
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.checkpoint import index_io
 from repro.core import metrics as metrics_lib
 from repro.core import zen as zen_lib
 from repro.core.projection import NSimplexTransform, select_references
+from repro.core.simplex import BaseSimplex
 from repro.distributed import retrieval as retrieval_lib
-from repro.kernels import ops as kernel_ops
+from repro.kernels.scoring import mask_invalid
 
 Array = jax.Array
+
+#: snapshot kind tag for full serving state (transform + index + corpus)
+SERVER_SNAPSHOT_KIND = "zen-server"
+#: coordinate sentinel written into tombstoned flat rows — far enough that a
+#: dead row can never win a top-k slot, small enough that f32 squared norms
+#: stay finite (1e15^2 * k << f32 max)
+_DEAD_COORD = 1.0e15
+#: flat capacity growth quantum — amortises jit recompiles of the search
+_GROW_ROWS = 4096
 
 
 @dataclasses.dataclass
 class ZenIndex:
+    """Serving-side index state: fitted transform + searchable coordinates.
+
+    Attributes:
+      transform: fitted ``NSimplexTransform`` (projects corpus and queries).
+      coords:    (cap, k) apex coordinates (possibly row-sharded). For a
+                 mutable flat index, rows beyond the live set (tombstones,
+                 growth slack) hold a far sentinel and never win a search.
+                 ``None`` for IVF indexes restored from a checkpoint (the
+                 inverted lists are the source of truth).
+      corpus:    original vectors for exact re-ranking, indexed by external
+                 id (row ``i`` holds the vector of id ``i``); optional.
+      mesh:      device mesh when the index is row-sharded.
+      n_valid:   number of live rows; ``None`` means every row of ``coords``
+                 is live (immutable fast path).
+      ivf:       ``IVFZenIndex`` / ``ShardedIVFZenIndex`` when built with
+                 ``index="ivf"``.
+      row_ids:   (cap,) int32 external id per flat row, ``-1`` for dead rows;
+                 ``None`` while the flat index is untouched (ids == row
+                 positions). Materialised by the first upsert/delete.
+      n_deleted: flat tombstones accumulated since the last build/compact —
+                 drives ``needs_compact`` (growth slack is *not* counted:
+                 compacting it away would defeat the grow-in-quanta
+                 recompile amortisation).
+    """
+
     transform: NSimplexTransform
-    coords: Array            # (N, k) apex coordinates (possibly sharded)
+    coords: Optional[Array]  # (cap, k) apex coordinates (possibly sharded)
     corpus: Optional[Array]  # original vectors for re-ranking (optional)
     mesh: Optional[object] = None  # device mesh when coords are row-sharded
-    n_valid: Optional[int] = None  # real rows when coords are shard-padded
+    n_valid: Optional[int] = None  # live rows when coords hold dead slots
     ivf: Optional[object] = None   # IVFZenIndex / ShardedIVFZenIndex
+    row_ids: Optional[Array] = None  # (cap,) int32 external ids, -1 = dead
+    n_deleted: int = 0  # flat tombstones since the last build/compact
 
     @property
     def size(self) -> int:
-        return self.n_valid if self.n_valid is not None else self.coords.shape[0]
+        """Number of live (searchable) rows."""
+        if self.ivf is not None:
+            return self.ivf.size
+        if self.n_valid is not None:
+            return self.n_valid
+        return self.coords.shape[0]
+
+    # -- mutation (control plane; returns a new ZenIndex) -------------------
+    def delete(self, ids: Sequence[int]) -> "ZenIndex":
+        """Tombstone the given external ids; unknown ids are ignored."""
+        self._check_not_sharded()
+        if self.ivf is not None:
+            return dataclasses.replace(self, ivf=self.ivf.delete(ids))
+        self._check_mutable()
+        row_ids = self._host_row_ids()
+        coords = np.asarray(self.coords).copy()
+        mask = (row_ids >= 0) & np.isin(row_ids, np.asarray(ids, np.int64))
+        if not mask.any():
+            return self
+        row_ids[mask] = -1
+        coords[mask] = _DEAD_COORD
+        return dataclasses.replace(
+            self,
+            coords=jnp.asarray(coords),
+            row_ids=jnp.asarray(row_ids.astype(np.int32)),
+            n_valid=self.size - int(mask.sum()),
+            n_deleted=self.n_deleted + int(mask.sum()),
+        )
+
+    def upsert(self, ids: Sequence[int], coords_new: Array) -> "ZenIndex":
+        """Insert (or replace) projected rows keyed by external id.
+
+        Args:
+          ids:        (B,) non-negative external ids; existing ids are
+                      replaced in place, duplicate ids in the batch keep the
+                      last occurrence.
+          coords_new: (B, k) apex coordinates of the new rows.
+
+        New rows reuse tombstoned slots first; when the capacity is
+        exhausted the flat array grows by multiples of ``_GROW_ROWS``
+        (growth slack rows are dead until used, so searches between growths
+        compile once).
+        """
+        self._check_not_sharded()
+        if self.ivf is not None:
+            return dataclasses.replace(
+                self, ivf=self.ivf.upsert(ids, coords_new))
+        self._check_mutable()
+        from repro.index.ivf import _check_ids, _dedupe_last_wins
+
+        ids_np = np.asarray(ids, np.int64).ravel()
+        _check_ids(ids_np)
+        new = np.asarray(coords_new, np.float32).reshape(ids_np.size, -1)
+        if ids_np.size == 0:
+            return self
+        ids_np, new = _dedupe_last_wins(ids_np, new)
+
+        row_ids = self._host_row_ids()
+        coords = np.asarray(self.coords).copy()
+        # replace rows whose external id already exists
+        sorter = np.argsort(row_ids, kind="stable")
+        pos = np.searchsorted(row_ids, ids_np, sorter=sorter)
+        pos = np.clip(pos, 0, row_ids.size - 1)
+        hit = row_ids[sorter[pos]] == ids_np
+        coords[sorter[pos[hit]]] = new[hit]
+        ids_np, new = ids_np[~hit], new[~hit]
+        n_live = self.size + int(ids_np.size)
+        reclaimed = 0
+        if ids_np.size:
+            free = np.flatnonzero(row_ids < 0)[: ids_np.size]
+            reclaimed = int(free.size)  # dead slots this batch refills
+            if free.size < ids_np.size:  # grow capacity in fixed quanta
+                deficit = int(ids_np.size - free.size)
+                grow = -(-deficit // _GROW_ROWS) * _GROW_ROWS
+                cap = row_ids.size
+                row_ids = np.concatenate(
+                    [row_ids, np.full(grow, -1, np.int64)])
+                coords = np.concatenate(
+                    [coords,
+                     np.full((grow, coords.shape[1]), _DEAD_COORD,
+                             np.float32)])
+                free = np.concatenate([free, cap + np.arange(deficit)])
+            row_ids[free] = ids_np
+            coords[free] = new
+        return dataclasses.replace(
+            self,
+            coords=jnp.asarray(coords),
+            row_ids=jnp.asarray(row_ids.astype(np.int32)),
+            n_valid=n_live,
+            n_deleted=max(0, self.n_deleted - reclaimed),
+        )
+
+    def compact(self, **kw) -> "ZenIndex":
+        """Repack the live rows, dropping tombstones and growth slack.
+
+        For IVF indexes this forwards to ``IVFZenIndex.compact`` (pass
+        ``recluster=True`` to refit the quantizer); for flat indexes it
+        rewrites ``coords``/``row_ids`` to the live rows only.
+        """
+        self._check_not_sharded()
+        if self.ivf is not None:
+            return dataclasses.replace(self, ivf=self.ivf.compact(**kw))
+        self._check_mutable()
+        if self.row_ids is None:
+            return self
+        row_ids = self._host_row_ids()
+        live = row_ids >= 0
+        return dataclasses.replace(
+            self,
+            coords=jnp.asarray(np.asarray(self.coords)[live]),
+            row_ids=jnp.asarray(row_ids[live].astype(np.int32)),
+            n_valid=int(live.sum()),
+            n_deleted=0,
+        )
+
+    def needs_compact(self, **kw) -> bool:
+        """True when churn degraded the layout enough to repack.
+
+        Flat indexes compare *tombstones* (deletes since the last
+        build/compact) against the once-live rows — the same
+        ``max_tombstone_ratio`` knob as ``IVFZenIndex.needs_compact``.
+        Growth slack from upserts is deliberately not counted: it is what
+        amortises search recompiles between capacity growths.
+        """
+        if self.mesh is not None:
+            return False  # sharded indexes are immutable: nothing to compact
+        if self.ivf is not None:
+            return self.ivf.needs_compact(**kw)
+        max_ratio = kw.get("max_tombstone_ratio", 0.2)
+        return (self.n_deleted / max(self.size + self.n_deleted, 1)
+                > max_ratio)
+
+    def _host_row_ids(self) -> np.ndarray:
+        if self.row_ids is None:
+            return np.arange(self.coords.shape[0], dtype=np.int64)
+        return np.asarray(self.row_ids).astype(np.int64).copy()
+
+    def _check_not_sharded(self):
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "mutating a mesh-sharded index in place is not supported: "
+                "churn the single-host index, save(), and reload onto the "
+                "mesh (resharding happens at load)"
+            )
+
+    def _check_mutable(self):
+        self._check_not_sharded()
+        if self.coords is None:
+            raise ValueError("index has no flat coordinates to mutate")
 
 
 def build_index(
@@ -107,15 +308,7 @@ def build_index(
     if mesh is not None and ivf is None:
         # pad once to a shard-divisible row count so every query batch skips
         # the O(N) re-pad; the search masks rows >= n_valid
-        n_valid = coords.shape[0]
-        n_shards = 1
-        for a in mesh.axis_names:
-            n_shards *= mesh.shape[a]
-        pad = (-n_valid) % n_shards
-        if pad:
-            coords = jnp.pad(coords, ((0, pad), (0, 0)))
-        rows = tuple(mesh.axis_names)  # shard rows over the whole mesh
-        coords = jax.device_put(coords, NamedSharding(mesh, P(rows, None)))
+        coords, n_valid = retrieval_lib.shard_rows(coords, mesh=mesh)
     return ZenIndex(transform=tr, coords=coords,
                     corpus=corpus if keep_corpus else None, mesh=mesh,
                     n_valid=n_valid, ivf=ivf)
@@ -142,12 +335,30 @@ class ZenServer:
         self.chunk = chunk
         self.nprobe = nprobe
         self.force_kernel = force_kernel
-        self._stats = {"queries": 0, "batches": 0, "latency_s": []}
+        self._stats = {"queries": 0, "batches": 0, "latency_s": [],
+                       "upserts": 0, "deletes": 0}
 
     def query(self, queries: Array, n_neighbors: int = 10
               ) -> Tuple[Array, Array]:
-        """(Q, m) raw queries -> (distances, ids), each (Q, n_neighbors)."""
+        """Serve one batch: (Q, m) raw queries -> (distances, ids).
+
+        Args:
+          queries:     (Q, m) raw (un-projected) query vectors.
+          n_neighbors: neighbours to return per query.
+
+        Returns (distances, ids), each (Q, n_neighbors), ascending distance.
+        Ids are *external* ids (stable across churn and checkpoint reload);
+        slots the index cannot fill come back as (+inf, -1).
+        """
         t0 = time.time()
+        if self.index.size == 0:  # fully-deleted index: all slots unfilled
+            d = jnp.full((queries.shape[0], n_neighbors), jnp.inf,
+                         jnp.float32)
+            ids = jnp.full((queries.shape[0], n_neighbors), -1, jnp.int32)
+            self._stats["queries"] += int(queries.shape[0])
+            self._stats["batches"] += 1
+            self._stats["latency_s"].append(time.time() - t0)
+            return d, ids
         qp = self.index.transform.transform(queries)
         n_fetch = n_neighbors * max(self.rerank_factor, 1)
         if self.index.ivf is not None:
@@ -163,21 +374,114 @@ class ZenServer:
                 mesh=self.index.mesh, chunk=self.chunk,
                 force_kernel=self.force_kernel, n_valid=self.index.n_valid,
             )
+            d, ids = self._map_row_ids(d, ids)
         else:
             d, ids = zen_lib.knn_search(
                 qp, self.index.coords,
                 n_neighbors=min(n_fetch, self.index.size), mode=self.mode,
-                chunk=self.chunk if self.index.size > self.chunk else 0,
+                chunk=self.chunk if self.index.coords.shape[0] > self.chunk
+                else 0,
                 force_kernel=self.force_kernel,
             )
+            d, ids = self._map_row_ids(d, ids)
         if self.rerank_factor and self.index.corpus is not None:
             d, ids = self._rerank(queries, ids, n_neighbors)
         else:
             d, ids = d[:, :n_neighbors], ids[:, :n_neighbors]
+        if d.shape[1] < n_neighbors:
+            # fewer live rows than requested: pad to the promised shape
+            pad = n_neighbors - d.shape[1]
+            d = jnp.pad(d, ((0, 0), (0, pad)), constant_values=jnp.inf)
+            ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
         self._stats["queries"] += int(queries.shape[0])
         self._stats["batches"] += 1
         self._stats["latency_s"].append(time.time() - t0)
         return d, ids
+
+    def _map_row_ids(self, d: Array, ids: Array) -> Tuple[Array, Array]:
+        """Map flat row positions to external ids (churned/reloaded index).
+
+        With ``row_ids`` unset the two id spaces coincide and this is a
+        no-op. Tombstoned rows cannot win a slot (their coordinates are a
+        far sentinel), but any dead id that sneaks into an under-filled
+        result is masked to (+inf, -1) — the same contract as the IVF path.
+        """
+        if self.index.row_ids is None:
+            return d, ids
+        ext = jnp.take(self.index.row_ids, jnp.maximum(ids, 0), axis=0)
+        ext = jnp.where(ids >= 0, ext, -1)
+        return mask_invalid(d, ext), ext
+
+    # -- mutable corpus lifecycle -------------------------------------------
+    def upsert(self, ids: Sequence[int], vectors: Array) -> None:
+        """Project and insert (or replace) raw vectors under external ids.
+
+        The fitted transform projects the (B, m) batch — no refit, the
+        paper's out-of-sample property — and the index absorbs the rows
+        (``ZenIndex.upsert``). When the server keeps a re-rank corpus it is
+        grown/overwritten at the same ids so exact re-ranking stays
+        consistent with the reduced index.
+        """
+        ids_np = np.asarray(ids, np.int64).ravel()
+        vectors = jnp.asarray(vectors)
+        qp = self.index.transform.transform(vectors)
+        new_index = self.index.upsert(ids_np, qp)
+        corpus = self.index.corpus
+        if corpus is not None:
+            host = np.asarray(corpus)
+            hi = int(ids_np.max()) + 1 if ids_np.size else 0
+            if hi > host.shape[0]:
+                # the re-rank corpus is indexed *densely* by external id;
+                # refuse growth a sparse huge id would turn into a silent
+                # multi-GB allocation (use dense-ish ids, or
+                # keep_corpus=False / rerank_factor=0 for sparse id spaces)
+                limit = max(2 * host.shape[0], host.shape[0] + 1_000_000)
+                if hi > limit:
+                    raise ValueError(
+                        f"upsert id {hi - 1} would grow the dense re-rank "
+                        f"corpus from {host.shape[0]} to {hi} rows; ids "
+                        "index the corpus by position — use dense ids or "
+                        "drop the corpus (keep_corpus=False)"
+                    )
+                host = np.concatenate([
+                    host,
+                    np.zeros((hi - host.shape[0], host.shape[1]), host.dtype),
+                ])
+            else:
+                host = host.copy()
+            host[ids_np] = np.asarray(vectors, host.dtype)
+            new_index = dataclasses.replace(
+                new_index, corpus=jnp.asarray(host))
+        self.index = new_index
+        self._stats["upserts"] += int(ids_np.size)
+
+    def delete(self, ids: Sequence[int]) -> None:
+        """Tombstone external ids (flat and IVF; unknown ids are ignored)."""
+        before = self.index.size
+        self.index = self.index.delete(ids)
+        self._stats["deletes"] += before - self.index.size
+
+    def compact(self, **kw) -> None:
+        """Repack the index now (see ``ZenIndex.compact``)."""
+        self.index = self.index.compact(**kw)
+
+    def maybe_compact(self, **thresholds) -> bool:
+        """Compact iff churn crossed the thresholds; True when it ran.
+
+        When the ``max_imbalance`` threshold is what tripped (IVF only),
+        the compaction refits the quantizer (``recluster=True``) — a plain
+        repack keeps the same assignments and cannot reduce imbalance, so
+        it would trigger again on every call.
+        """
+        if not self.index.needs_compact(**thresholds):
+            return False
+        mi = thresholds.get("max_imbalance")
+        if (mi is not None and self.index.ivf is not None
+                and self.index.ivf.imbalance > mi):
+            self.compact(recluster=True)
+        else:
+            self.compact()
+        return True
 
     def _rerank(self, queries: Array, cand_ids: Array, n_neighbors: int
                 ) -> Tuple[Array, Array]:
@@ -190,13 +494,139 @@ class ZenServer:
         )
 
     def stats(self) -> dict:
+        """Serving counters: query/batch totals, latency percentiles, churn."""
         lat = np.asarray(self._stats["latency_s"] or [0.0])
         return {
             "queries": self._stats["queries"],
             "batches": self._stats["batches"],
+            "upserts": self._stats["upserts"],
+            "deletes": self._stats["deletes"],
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
         }
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, directory: str) -> str:
+        """Persist the full serving state as one versioned atomic snapshot.
+
+        Everything needed to answer queries identically after a restart is
+        written: the fitted transform (references + base simplex), the flat
+        coordinates + external-id map *or* the IVF members + quantizer, and
+        the re-rank corpus if kept. The snapshot is canonical host data —
+        a server saved from a sharded mesh reloads onto any device count
+        (``load(mesh=...)`` re-shards).
+        """
+        index = self.index
+        tr = index.transform
+        if tr.refs is None:
+            raise ValueError(
+                "distance-only transforms hold no reference coordinates and "
+                "cannot serve raw-vector queries after reload; checkpointing "
+                "them is unsupported"
+            )
+        arrays = {
+            "refs": np.asarray(tr.refs, np.float32),
+            "base_chol": np.asarray(tr.base.chol, np.float32),
+            "base_diag_g": np.asarray(tr.base.diag_g, np.float32),
+            "base_d0": np.asarray(tr.base.d0, np.float32),
+        }
+        meta = {
+            "k": tr.k,
+            "metric": tr.metric,
+            "jitter": tr.jitter,
+            "index": "ivf" if index.ivf is not None else "flat",
+            "server": {
+                "mode": self.mode,
+                "rerank_factor": self.rerank_factor,
+                "chunk": self.chunk,
+                "nprobe": self.nprobe,
+            },
+        }
+        if index.ivf is not None:
+            from repro.index.ivf import snapshot_payload
+
+            ivf_arrays, ivf_meta = snapshot_payload(index.ivf)
+            arrays.update({f"ivf_{k}": v for k, v in ivf_arrays.items()})
+            meta.update(ivf_meta)
+        else:
+            coords = retrieval_lib.host_rows(index.coords, index.n_valid) \
+                if index.mesh is not None else np.asarray(index.coords)
+            row_ids = index._host_row_ids()[: coords.shape[0]]
+            live = row_ids >= 0
+            arrays.update(
+                coords=coords[live].astype(np.float32),
+                row_ids=row_ids[live].astype(np.int32),
+            )
+        if index.corpus is not None:
+            arrays["corpus"] = np.asarray(index.corpus)
+        return index_io.save_state(
+            directory, arrays, meta, kind=SERVER_SNAPSHOT_KIND)
+
+    @classmethod
+    def load(cls, directory: str, *, mesh=None, **server_kw) -> "ZenServer":
+        """Restore a server from :meth:`save` — bit-identical search results.
+
+        Args:
+          directory: snapshot directory.
+          mesh:      optional device mesh to reshard onto; may have a
+                     different device count than the saving process (flat
+                     coordinates are re-padded and re-sharded, IVF inverted
+                     lists re-packed per shard).
+          server_kw: overrides for the saved server config (``mode``,
+                     ``rerank_factor``, ``chunk``, ``nprobe``,
+                     ``force_kernel``).
+
+        Raises ``checkpoint.CheckpointFormatError`` for snapshots written by
+        an incompatible format version or of a different kind.
+        """
+        arrays, meta = index_io.load_state(
+            directory, expect_kind=SERVER_SNAPSHOT_KIND)
+        base = BaseSimplex(
+            chol=jnp.asarray(arrays["base_chol"]),
+            diag_g=jnp.asarray(arrays["base_diag_g"]),
+            d0=jnp.asarray(arrays["base_d0"]),
+        )
+        tr = NSimplexTransform(
+            k=int(meta["k"]), metric=meta["metric"],
+            jitter=float(meta["jitter"]), refs=jnp.asarray(arrays["refs"]),
+            base=base,
+        )
+        corpus = (jnp.asarray(arrays["corpus"])
+                  if "corpus" in arrays else None)
+        if meta["index"] == "ivf":
+            from repro.index import IVFZenIndex, ShardedIVFZenIndex
+
+            members = (arrays["ivf_member_coords"],
+                       arrays["ivf_member_ids"].astype(np.int64),
+                       arrays["ivf_member_assign"].astype(np.int64))
+            if mesh is not None:
+                ivf = ShardedIVFZenIndex._from_members(
+                    *members, jnp.asarray(arrays["ivf_centroids"]),
+                    int(meta["n_clusters"]), int(meta["tile_rows"]),
+                    mesh=mesh)
+            else:
+                coords_m, mids, massign = members
+                ivf = IVFZenIndex.from_members(
+                    coords_m, mids, massign,
+                    jnp.asarray(arrays["ivf_centroids"]),
+                    int(meta["n_clusters"]), int(meta["tile_rows"]))
+            index = ZenIndex(transform=tr, coords=None, corpus=corpus,
+                             mesh=mesh, ivf=ivf)
+        else:
+            coords = jnp.asarray(arrays["coords"])
+            row_ids = jnp.asarray(arrays["row_ids"].astype(np.int32))
+            n_valid = None
+            if mesh is not None:
+                coords, n_valid = retrieval_lib.shard_rows(coords, mesh=mesh)
+                pad = coords.shape[0] - row_ids.shape[0]
+                if pad:  # shard-padding positions map to the dead id
+                    row_ids = jnp.concatenate(
+                        [row_ids, jnp.full((pad,), -1, jnp.int32)])
+            index = ZenIndex(transform=tr, coords=coords, corpus=corpus,
+                             mesh=mesh, n_valid=n_valid, row_ids=row_ids)
+        kw = dict(meta.get("server", {}))
+        kw.update(server_kw)
+        return cls(index, **kw)
 
 
 def main() -> None:
@@ -213,16 +643,38 @@ def main() -> None:
     p.add_argument("--clusters", type=int, default=0,
                    help="IVF cluster count (0 = ~4*sqrt(N))")
     p.add_argument("--nprobe", type=int, default=8)
+    p.add_argument("--checkpoint", default=None, metavar="DIR",
+                   help="restore the server from DIR if a snapshot exists "
+                        "there, else build and save one (versioned, atomic)")
     args = p.parse_args()
+
+    import os
 
     from repro.core import quality
     from repro.data import synthetic as syn
 
     key = jax.random.PRNGKey(0)
     corpus = syn.manifold_space(key, args.n, args.dim, args.dim // 8)
-    index = build_index(corpus, args.k, metric=args.metric, index=args.index,
-                        n_clusters=args.clusters or None)
-    server = ZenServer(index, rerank_factor=args.rerank, nprobe=args.nprobe)
+    if args.checkpoint and os.path.exists(
+            os.path.join(args.checkpoint, "manifest.json")):
+        server = ZenServer.load(args.checkpoint,
+                                rerank_factor=args.rerank,
+                                nprobe=args.nprobe)
+        index = server.index
+        ref_dim = int(index.transform.refs.shape[1])
+        if ref_dim != args.dim:
+            raise SystemExit(
+                f"checkpoint {args.checkpoint} serves {ref_dim}-d vectors "
+                f"but --dim is {args.dim}; pass --dim {ref_dim}")
+        print(f"restored server from {args.checkpoint}")
+    else:
+        index = build_index(corpus, args.k, metric=args.metric,
+                            index=args.index,
+                            n_clusters=args.clusters or None)
+        server = ZenServer(index, rerank_factor=args.rerank,
+                           nprobe=args.nprobe)
+        if args.checkpoint:
+            print(f"saved snapshot to {server.save(args.checkpoint)}")
     print(f"index: {index.size} x {args.k} (from dim {args.dim})"
           + (f"; ivf: {index.ivf.n_clusters} clusters, nprobe={args.nprobe}"
              if index.ivf is not None else ""))

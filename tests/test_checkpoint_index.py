@@ -1,0 +1,229 @@
+"""Persisted Zen indexes: versioned save/load round-trips.
+
+Covers the generic ``checkpoint.index_io`` store (atomicity, version and
+kind rejection, corruption detection), bit-identical ``ZenServer`` search
+parity through a save/load cycle for flat and IVF indexes (fresh and
+churned), ``IVFZenIndex`` snapshots, and elastic resharding: a snapshot
+saved from a 4-device mesh reloading onto 2 devices, 1 host, and back.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (
+    CheckpointFormatError, INDEX_FORMAT_VERSION, load_state, save_state,
+)
+from repro.data import synthetic as syn
+from repro.index import IVFZenIndex
+from repro.launch.serve import ZenServer, build_index
+
+
+# ------------------------------------------------------------ generic store
+
+def test_index_io_roundtrip_and_atomic_overwrite(tmp_path):
+    d = str(tmp_path / "snap")
+    arrays = {"a": np.arange(6, dtype=np.int32).reshape(2, 3),
+              "b.x-1": np.ones(4, np.float32)}
+    save_state(d, arrays, {"note": "v1"}, kind="test")
+    back, meta = load_state(d, expect_kind="test")
+    assert meta == {"note": "v1"}
+    assert np.array_equal(back["a"], arrays["a"])
+    assert np.array_equal(back["b.x-1"], arrays["b.x-1"])
+    # overwrite in place is atomic (tmp dir renamed over the old snapshot)
+    save_state(d, {"a": np.zeros(1, np.int8)}, {"note": "v2"}, kind="test")
+    back, meta = load_state(d)
+    assert meta == {"note": "v2"} and list(back) == ["a"]
+    # neither the write staging dir nor the crash-window backup survive
+    assert not any(p.startswith(("tmp.", "old.")) for p in
+                   os.listdir(tmp_path))
+
+
+def test_index_io_rejects_unsafe_names_and_missing(tmp_path):
+    with pytest.raises(ValueError):
+        save_state(str(tmp_path / "s"), {"../evil": np.zeros(1)}, {},
+                   kind="test")
+    with pytest.raises(FileNotFoundError):
+        load_state(str(tmp_path / "nothing"))
+
+
+def _tamper(directory, **updates):
+    path = os.path.join(directory, "manifest.json")
+    with open(path) as f:
+        m = json.load(f)
+    m.update(updates)
+    with open(path, "w") as f:
+        json.dump(m, f)
+
+
+def test_index_io_version_and_kind_rejection(tmp_path):
+    d = str(tmp_path / "snap")
+    save_state(d, {"a": np.zeros(2)}, {}, kind="test")
+    _tamper(d, version=INDEX_FORMAT_VERSION + 1)
+    with pytest.raises(CheckpointFormatError, match="version"):
+        load_state(d)
+    _tamper(d, version=INDEX_FORMAT_VERSION, format="something-else")
+    with pytest.raises(CheckpointFormatError, match="format"):
+        load_state(d)
+    _tamper(d, format="zen-index")
+    with pytest.raises(CheckpointFormatError, match="kind"):
+        load_state(d, expect_kind="other-kind")
+
+
+def test_index_io_detects_corrupt_array(tmp_path):
+    d = str(tmp_path / "snap")
+    save_state(d, {"a": np.zeros((3, 3), np.float32)}, {}, kind="test")
+    np.save(os.path.join(d, "a.npy"), np.zeros(2, np.int16))
+    with pytest.raises(CheckpointFormatError, match="'a'"):
+        load_state(d)
+
+
+# ----------------------------------------------------------- index snapshots
+
+def _coords(key, n, k=8):
+    x = jax.random.normal(key, (n, k), jnp.float32)
+    return x.at[:, -1].set(jnp.abs(x[:, -1]))
+
+
+def test_ivf_index_save_load_bit_identical(tmp_path):
+    key = jax.random.PRNGKey(0)
+    X = _coords(key, 1500)
+    idx = IVFZenIndex.build(X, 12, key=key)
+    Q = _coords(jax.random.fold_in(key, 1), 8)
+    d0, i0 = idx.search(Q, 10, nprobe=5)
+    idx.save(str(tmp_path / "ivf"))
+    back = IVFZenIndex.load(str(tmp_path / "ivf"))
+    assert back.n_valid == idx.n_valid
+    d1, i1 = back.search(Q, 10, nprobe=5)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+    assert np.array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_ivf_index_save_drops_tombstones(tmp_path):
+    key = jax.random.PRNGKey(1)
+    X = _coords(key, 1000)
+    idx = IVFZenIndex.build(X, 8, key=key).delete(np.arange(0, 1000, 3))
+    Q = _coords(jax.random.fold_in(key, 1), 6)
+    d0, i0 = idx.search(Q, 10, nprobe=idx.n_clusters)
+    idx.save(str(tmp_path / "ivf"))
+    back = IVFZenIndex.load(str(tmp_path / "ivf"))
+    assert back.n_deleted == 0 and back.n_valid == idx.n_valid
+    assert back.tiles_per_cluster <= idx.tiles_per_cluster
+    d1, i1 = back.search(Q, 10, nprobe=back.n_clusters)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_ivf_wrong_kind_rejected(tmp_path):
+    key = jax.random.PRNGKey(2)
+    idx = IVFZenIndex.build(_coords(key, 300), 4, key=key)
+    idx.save(str(tmp_path / "ivf"))
+    with pytest.raises(CheckpointFormatError, match="kind"):
+        ZenServer.load(str(tmp_path / "ivf"))
+
+
+# ------------------------------------------------------------ server parity
+
+@pytest.mark.parametrize("kind", ["flat", "ivf"])
+def test_server_save_load_bit_identical(tmp_path, kind):
+    key = jax.random.PRNGKey(3)
+    corpus = syn.manifold_space(key, 2500, 64, 8)
+    q = syn.manifold_space(jax.random.fold_in(key, 1), 8, 64, 8)
+    srv = ZenServer(build_index(corpus, 8, index=kind, n_clusters=16),
+                    rerank_factor=2, nprobe=16)
+    d0, i0 = srv.query(q, 5)
+    srv.save(str(tmp_path / "srv"))
+    back = ZenServer.load(str(tmp_path / "srv"))
+    assert back.nprobe == 16 and back.rerank_factor == 2  # config restored
+    d1, i1 = back.query(q, 5)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+    assert np.array_equal(np.asarray(d0), np.asarray(d1))
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf"])
+def test_server_save_load_after_churn(tmp_path, kind):
+    key = jax.random.PRNGKey(4)
+    corpus = syn.manifold_space(key, 2000, 64, 8)
+    q = syn.manifold_space(jax.random.fold_in(key, 1), 8, 64, 8)
+    srv = ZenServer(build_index(corpus, 8, index=kind, n_clusters=16),
+                    rerank_factor=2, nprobe=16)
+    srv.delete(np.arange(0, 2000, 5))
+    extra = syn.manifold_space(jax.random.fold_in(key, 2), 300, 64, 8)
+    srv.upsert(np.arange(3000, 3300), extra)
+    d0, i0 = srv.query(q, 5)
+    srv.save(str(tmp_path / "srv"))
+    back = ZenServer.load(str(tmp_path / "srv"))
+    d1, i1 = back.query(q, 5)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+    assert np.array_equal(np.asarray(d0), np.asarray(d1))
+    # churn continues after restore: external ids stay stable
+    back.delete([int(np.asarray(i1)[0, 0])])
+    _, i2 = back.query(q, 5)
+    assert int(np.asarray(i1)[0, 0]) not in np.asarray(i2).ravel().tolist()
+
+
+def test_server_load_config_overrides(tmp_path):
+    key = jax.random.PRNGKey(5)
+    corpus = syn.manifold_space(key, 600, 32, 8)
+    ZenServer(build_index(corpus, 8), rerank_factor=3,
+              chunk=1234).save(str(tmp_path / "srv"))
+    back = ZenServer.load(str(tmp_path / "srv"), rerank_factor=0)
+    assert back.rerank_factor == 0 and back.chunk == 1234
+
+
+# ------------------------------------------------- elastic reshard (4 dev)
+
+_RESHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.data import synthetic as syn
+    from repro.launch.serve import ZenServer, build_index
+
+    key = jax.random.PRNGKey(0)
+    corpus = syn.manifold_space(key, 3001, 64, 8)   # odd N: pad path
+    q = syn.manifold_space(jax.random.fold_in(key, 1), 8, 64, 8)
+    devs = jax.devices()
+    mesh4 = Mesh(np.asarray(devs), ("shard",))
+    mesh2 = Mesh(np.asarray(devs[:2]), ("shard",))
+
+    for kind in ("flat", "ivf"):
+        srv = ZenServer(
+            build_index(corpus, 8, index=kind, n_clusters=16, mesh=mesh4),
+            rerank_factor=2, nprobe=16)
+        d0, i0 = srv.query(q, 5)
+        path = os.path.join(os.environ["SNAP_DIR"], kind)
+        srv.save(path)
+        # saved from 4 shards; reload onto 2 shards, 1 host, and 4 again
+        for m, label in ((mesh2, "2dev"), (None, "host"), (mesh4, "4dev")):
+            back = ZenServer.load(path, mesh=m)
+            d1, i1 = back.query(q, 5)
+            assert np.array_equal(np.asarray(i0), np.asarray(i1)), (
+                kind, label)
+            assert np.allclose(np.asarray(d0), np.asarray(d1),
+                               atol=1e-5), (kind, label)
+    print("RESHARD_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_save_reshard_on_load(tmp_path):
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"),
+        SNAP_DIR=str(tmp_path),
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", _RESHARD_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "RESHARD_OK" in r.stdout

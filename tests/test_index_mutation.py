@@ -1,0 +1,363 @@
+"""Mutable corpus lifecycle: upsert / delete / compact on the IVF and flat
+retrieval paths.
+
+The invariants under test: tombstoned ids are never returned; upserted points
+are immediately searchable and exact at nprobe = n_clusters; replacing an id
+moves it (old coordinates gone, new ones found); a full inverted list grows
+by whole tiles without disturbing existing members; compact drops tombstones
+and tile slack without changing results; and — the acceptance bar — recall
+after heavy churn stays within 0.02 of a freshly built index.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quality import recall_at_k
+from repro.data import synthetic as syn
+from repro.index import IVFZenIndex
+from repro.kernels import zen_topk as zt
+from repro.launch.serve import ZenServer, build_index
+
+
+def _coords(key, n, k=8):
+    """Synthetic apex-like coordinates (non-negative altitude column)."""
+    x = jax.random.normal(key, (n, k), jnp.float32)
+    return x.at[:, -1].set(jnp.abs(x[:, -1]))
+
+
+def _ids(res):
+    return np.asarray(res[1])
+
+
+# ---------------------------------------------------------------- IVF index
+
+def test_ivf_delete_tombstones_never_returned():
+    key = jax.random.PRNGKey(0)
+    X = _coords(key, 1500)
+    idx = IVFZenIndex.build(X, 12, key=key)
+    Q = X[:6] + 0.01
+    victims = _ids(idx.search(Q, 3, nprobe=idx.n_clusters))[:, 0]
+    idx2 = idx.delete(victims)
+    assert idx2.n_valid == 1500 - len(np.unique(victims))
+    assert idx2.n_deleted == len(np.unique(victims))
+    got = _ids(idx2.search(Q, 10, nprobe=idx2.n_clusters))
+    assert not (set(victims.tolist()) & set(got.ravel().tolist()))
+    # the original index is untouched (functional update)
+    assert idx.n_valid == 1500
+
+
+def test_ivf_delete_unknown_ids_is_noop():
+    key = jax.random.PRNGKey(1)
+    X = _coords(key, 400)
+    idx = IVFZenIndex.build(X, 8, key=key)
+    idx2 = idx.delete([10_000, 20_000])
+    assert idx2 is idx  # nothing matched, no copy
+
+
+def test_ivf_upsert_matches_fresh_build_exactly():
+    key = jax.random.PRNGKey(2)
+    X = _coords(key, 1200)
+    idx = IVFZenIndex.build(X, 10, key=key)
+    Xnew = _coords(jax.random.fold_in(key, 1), 300)
+    idx2 = idx.upsert(np.arange(1200, 1500), Xnew)
+    assert idx2.n_valid == 1500
+
+    # nprobe = C scans everything: parity with a flat scan over the union
+    allX = jnp.concatenate([X, Xnew])
+    Q = _coords(jax.random.fold_in(key, 2), 8)
+    d_ref, i_ref = zt.zen_topk_scan(Q, allX, 10, "zen")
+    d_got, i_got = idx2.search(Q, 10, nprobe=idx2.n_clusters)
+    np.testing.assert_allclose(
+        np.asarray(d_got), np.asarray(d_ref), atol=1e-5)
+    assert np.array_equal(np.asarray(i_got), np.asarray(i_ref))
+
+
+def test_ivf_upsert_existing_id_replaces_and_can_move_cluster():
+    key = jax.random.PRNGKey(3)
+    X = _coords(key, 600)
+    idx = IVFZenIndex.build(X, 8, key=key)
+    # move id 5 to the far side of the space: its old location must stop
+    # matching and its new location must match
+    target = X[500]
+    idx2 = idx.upsert([5], target[None] + 1e-4)
+    assert idx2.n_valid == 600  # replaced, not added
+    near_new = _ids(idx2.search(target[None], 2, nprobe=idx2.n_clusters))[0]
+    assert 5 in near_new.tolist()
+    near_old = _ids(idx2.search(X[5][None], 1, nprobe=idx2.n_clusters))[0]
+    assert near_old[0] != 5
+
+
+def test_ivf_upsert_duplicate_ids_last_write_wins():
+    key = jax.random.PRNGKey(4)
+    X = _coords(key, 300)
+    idx = IVFZenIndex.build(X, 4, key=key)
+    a, b = np.asarray(X[100]), np.asarray(X[200])
+    idx2 = idx.upsert([900, 900], np.stack([a, b]))
+    assert idx2.n_valid == 301
+    got = _ids(idx2.search(b[None], 2, nprobe=idx2.n_clusters))[0]
+    assert 900 in got.tolist()
+
+
+def test_ivf_upsert_into_full_tile_grows_by_tile():
+    key = jax.random.PRNGKey(5)
+    X = _coords(key, 64)
+    idx = IVFZenIndex.build(X, 2, tile_rows=32, key=key)
+    T0 = idx.tiles_per_cluster
+    # force one cluster past capacity: upsert many copies of one point
+    base = np.asarray(X[0])
+    n_new = idx.tiles_per_cluster * idx.tile_rows + 5
+    new = base[None] + 0.001 * np.random.default_rng(0).normal(
+        size=(n_new, X.shape[1])).astype(np.float32)
+    new[:, -1] = np.abs(new[:, -1])
+    idx2 = idx.upsert(np.arange(100, 100 + n_new), new)
+    assert idx2.tiles_per_cluster > T0
+    assert idx2.n_valid == 64 + n_new
+    # layout invariants: shapes consistent, every id present exactly once
+    C, T, R = idx2.n_clusters, idx2.tiles_per_cluster, idx2.tile_rows
+    assert idx2.tile_ids.shape == (C * T, R)
+    assert idx2.tile_coords.shape == (C * T, R, X.shape[1])
+    tids = np.asarray(idx2.tile_ids)
+    live = tids[tids >= 0]
+    assert len(live) == len(np.unique(live)) == idx2.n_valid
+    # old members (away from the inserted cloud around X[0]) survived
+    got = _ids(idx2.search(X[1:5], 1, nprobe=C))[:, 0]
+    assert np.array_equal(got, np.arange(1, 5))
+
+
+def test_ivf_delete_all_in_cell_still_searches():
+    key = jax.random.PRNGKey(6)
+    X = _coords(key, 500)
+    idx = IVFZenIndex.build(X, 6, key=key)
+    sizes = idx.cluster_sizes()
+    cell = int(np.argmax(sizes))
+    tids = np.asarray(idx.tile_ids).reshape(
+        idx.n_clusters, idx.tiles_per_cluster * idx.tile_rows)
+    members = tids[cell][tids[cell] >= 0]
+    idx2 = idx.delete(members)
+    assert idx2.cluster_sizes()[cell] == 0
+    assert idx2.n_valid == 500 - len(members)
+    # probing every cluster (including the empty one) stays correct
+    Q = X[:8] + 0.01
+    live = np.setdiff1d(np.arange(500), members)
+    d_ref, i_ref = zt.zen_topk_scan(Q, X[live], 5, "zen")
+    d_got, i_got = idx2.search(Q, 5, nprobe=idx2.n_clusters)
+    np.testing.assert_allclose(
+        np.asarray(d_got), np.asarray(d_ref), atol=1e-5)
+    assert np.array_equal(live[np.asarray(i_ref)], np.asarray(i_got))
+
+
+def test_ivf_delete_everything_returns_empty_slots():
+    key = jax.random.PRNGKey(7)
+    X = _coords(key, 200)
+    idx = IVFZenIndex.build(X, 4, key=key).delete(np.arange(200))
+    assert idx.n_valid == 0
+    d, ids = idx.search(X[:3], 5, nprobe=idx.n_clusters)
+    assert d.shape == (3, 5) and ids.shape == (3, 5)  # full width kept
+    assert (np.asarray(ids) == -1).all()
+    assert np.isinf(np.asarray(d)).all()
+
+
+def test_ivf_in_place_refresh_does_not_trip_compaction():
+    # replacing existing ids reuses the freed slots immediately: a pure
+    # refresh must not accumulate tombstone pressure
+    key = jax.random.PRNGKey(15)
+    X = _coords(key, 1000)
+    idx = IVFZenIndex.build(X, 8, key=key)
+    refresh_ids = np.arange(300)
+    for r in range(3):
+        new = _coords(jax.random.fold_in(key, 20 + r), 300)
+        idx = idx.upsert(refresh_ids, new)
+    assert idx.n_valid == 1000
+    assert idx.n_deleted == 0
+    assert not idx.needs_compact()
+
+
+def test_ivf_compact_drops_tombstones_and_slack():
+    key = jax.random.PRNGKey(8)
+    X = _coords(key, 1000)
+    idx = IVFZenIndex.build(X, 8, key=key)
+    idx = idx.delete(np.arange(0, 1000, 2))  # 50% tombstones
+    assert idx.needs_compact()
+    Q = _coords(jax.random.fold_in(key, 1), 6)
+    before = idx.search(Q, 10, nprobe=idx.n_clusters)
+    packed = idx.compact()
+    assert packed.n_deleted == 0 and packed.n_valid == idx.n_valid
+    assert packed.tiles_per_cluster <= idx.tiles_per_cluster
+    after = packed.search(Q, 10, nprobe=packed.n_clusters)
+    assert np.array_equal(_ids(before), _ids(after))
+    # recluster variant rebalances but returns the same neighbours
+    refit = idx.compact(recluster=True, key=key)
+    again = refit.search(Q, 10, nprobe=refit.n_clusters)
+    assert np.array_equal(_ids(before), _ids(again))
+
+
+def test_ivf_needs_compact_tile_slack_trigger():
+    key = jax.random.PRNGKey(9)
+    X = _coords(key, 64)
+    idx = IVFZenIndex.build(X, 2, tile_rows=16, key=key)
+    # inflate T by packing one cluster, then delete the overflow again
+    base = np.asarray(X[0])
+    n_new = 4 * idx.tile_rows
+    new = base[None] + 0.001 * np.random.default_rng(1).normal(
+        size=(n_new, X.shape[1])).astype(np.float32)
+    new[:, -1] = np.abs(new[:, -1])
+    grown = idx.upsert(np.arange(1000, 1000 + n_new), new)
+    churned = grown.delete(np.arange(1000, 1000 + n_new))
+    assert churned.tiles_per_cluster == grown.tiles_per_cluster
+    assert churned.needs_compact()  # tile slack alone must trigger
+    packed = churned.compact()
+    assert packed.tiles_per_cluster < churned.tiles_per_cluster
+
+
+# ------------------------------------------------------------- flat serving
+
+def test_flat_server_delete_and_upsert():
+    key = jax.random.PRNGKey(10)
+    corpus = syn.manifold_space(key, 2000, 64, 8)
+    q = syn.manifold_space(jax.random.fold_in(key, 1), 8, 64, 8)
+    srv = ZenServer(build_index(corpus, 8), rerank_factor=2)
+    d0, i0 = srv.query(q, 5)
+    victim = int(np.asarray(i0)[0, 0])
+    srv.delete([victim])
+    assert srv.index.size == 1999
+    _, i1 = srv.query(q, 5)
+    assert victim not in set(np.asarray(i1).ravel().tolist())
+    # new id becomes searchable; rerank corpus follows
+    srv.upsert([5000], corpus[victim][None])
+    _, i2 = srv.query(q, 5)
+    assert 5000 in set(np.asarray(i2)[0].tolist())
+    stats = srv.stats()
+    assert stats["upserts"] == 1 and stats["deletes"] == 1
+
+
+def test_flat_upsert_existing_id_replaces_in_place():
+    key = jax.random.PRNGKey(11)
+    corpus = syn.manifold_space(key, 800, 32, 8)
+    srv = ZenServer(build_index(corpus, 8), rerank_factor=4)
+    cap_before = srv.index.coords.shape[0]
+    srv.upsert([3], corpus[700][None])
+    assert srv.index.coords.shape[0] == cap_before  # replaced, no growth
+    assert srv.index.size == 800
+    # ids 3 and 700 now hold identical vectors; with exact re-rank both are
+    # at true distance 0 from the query and must fill the top-2
+    _, ids = srv.query(corpus[700][None], 2)
+    assert set(np.asarray(ids)[0].tolist()) == {3, 700}
+
+
+def test_flat_upsert_growth_and_compact():
+    key = jax.random.PRNGKey(12)
+    corpus = syn.manifold_space(key, 500, 32, 8)
+    srv = ZenServer(build_index(corpus, 8), rerank_factor=0)
+    extra = syn.manifold_space(jax.random.fold_in(key, 2), 700, 32, 8)
+    srv.upsert(np.arange(500, 1200), extra)  # exceeds capacity -> grow
+    assert srv.index.size == 1200
+    assert srv.index.coords.shape[0] >= 1200
+    q = syn.manifold_space(jax.random.fold_in(key, 3), 6, 32, 8)
+    d0, i0 = srv.query(q, 10)
+    # heavy delete then compact: same answers on the survivors
+    srv.delete(np.arange(0, 500))
+    assert srv.index.needs_compact()
+    assert srv.maybe_compact()
+    assert srv.index.size == 700 == srv.index.coords.shape[0]
+    d1, i1 = srv.query(q, 10)
+    assert (np.asarray(i1) >= 500).all()
+    # the flat scan is exact over the reduced coords: the churned index must
+    # agree bit-for-bit with a direct scan of the survivors under the SAME
+    # fitted transform (ids are positions + 500)
+    tr = srv.index.transform
+    d_ref, i_ref = zt.zen_topk_scan(tr.transform(q), tr.transform(extra), 10,
+                                    "zen")
+    assert np.array_equal(np.asarray(i1), np.asarray(i_ref) + 500)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d_ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf"])
+def test_sharded_index_mutation_rejected(kind):
+    import math
+
+    key = jax.random.PRNGKey(13)
+    corpus = syn.manifold_space(key, 512, 32, 8)
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()), ("shard",))
+    srv = ZenServer(build_index(corpus, 8, mesh=mesh, index=kind,
+                                n_clusters=8), rerank_factor=0)
+    with pytest.raises(NotImplementedError):
+        srv.delete([0])
+    with pytest.raises(NotImplementedError):
+        srv.upsert([1000], corpus[:1])
+    with pytest.raises(NotImplementedError):
+        srv.compact()
+    assert srv.maybe_compact() is False  # read-only probe must not raise
+    assert math.isfinite(srv.stats()["p50_ms"])
+
+
+def test_server_query_on_emptied_index_keeps_shape_contract():
+    key = jax.random.PRNGKey(14)
+    corpus = syn.manifold_space(key, 300, 32, 8)
+    q = syn.manifold_space(jax.random.fold_in(key, 1), 4, 32, 8)
+    for kind in ("flat", "ivf"):
+        srv = ZenServer(build_index(corpus, 8, index=kind, n_clusters=4),
+                        rerank_factor=2)
+        srv.delete(np.arange(300))
+        d, ids = srv.query(q, 5)
+        assert d.shape == (4, 5) and ids.shape == (4, 5)
+        assert (np.asarray(ids) == -1).all()
+        assert np.isinf(np.asarray(d)).all()
+
+
+def test_server_query_partially_filled_pads_to_requested_width():
+    # fewer live rows than n_neighbors: the promised (Q, n) shape holds,
+    # unfillable slots are (+inf, -1)
+    key = jax.random.PRNGKey(16)
+    corpus = syn.manifold_space(key, 300, 32, 8)
+    q = syn.manifold_space(jax.random.fold_in(key, 1), 3, 32, 8)
+    for kind in ("flat", "ivf"):
+        srv = ZenServer(build_index(corpus, 8, index=kind, n_clusters=4),
+                        rerank_factor=2)
+        srv.delete(np.arange(295))  # 5 live rows left
+        d, ids = srv.query(q, 10)
+        assert d.shape == (3, 10) and ids.shape == (3, 10)
+        ids_np = np.asarray(ids)
+        assert ((ids_np >= 295) | (ids_np == -1)).all()
+        assert (ids_np[:, 5:] == -1).all()
+        assert np.isinf(np.asarray(d)[:, 5:]).all()
+
+
+# -------------------------------------------------- churn acceptance (slow)
+
+@pytest.mark.slow
+def test_recall_after_20pct_churn_within_0p02_of_fresh():
+    """Acceptance: 20% random churn on N=1e5, recall@10 of the churned IVF
+    index within 0.02 of a freshly built index at the same nprobe."""
+    key = jax.random.PRNGKey(42)
+    n, kdim, n_churn = 100_000, 16, 20_000
+    X = _coords(key, n, kdim)
+    n_clusters = int(round(4 * n ** 0.5))
+    idx = IVFZenIndex.build(X, n_clusters, n_iters=8, key=key)
+
+    rng = np.random.default_rng(0)
+    dead = rng.choice(n, size=n_churn, replace=False)
+    Xnew = _coords(jax.random.fold_in(key, 1), n_churn, kdim)
+    idx = idx.delete(dead).upsert(np.arange(n, n + n_churn), Xnew)
+    if idx.needs_compact():
+        idx = idx.compact()
+
+    # live corpus after churn, with global ids
+    live = np.setdiff1d(np.arange(n), dead)
+    all_coords = jnp.concatenate([jnp.asarray(np.asarray(X)[live]), Xnew])
+    all_ids = np.concatenate([live, np.arange(n, n + n_churn)])
+    fresh = IVFZenIndex.build(
+        all_coords, n_clusters, ids=all_ids, n_iters=8,
+        key=jax.random.fold_in(key, 2))
+
+    Q = _coords(jax.random.fold_in(key, 3), 64, kdim)
+    _, truth_pos = zt.zen_topk_scan(Q, all_coords, 10, "zen")
+    truth = all_ids[np.asarray(truth_pos)]
+
+    nprobe = 16
+    rec_churned = recall_at_k(truth, _ids(idx.search(Q, 10, nprobe=nprobe)))
+    rec_fresh = recall_at_k(truth, _ids(fresh.search(Q, 10, nprobe=nprobe)))
+    assert abs(rec_churned - rec_fresh) <= 0.02, (rec_churned, rec_fresh)

@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Check markdown docs for broken repo-relative links and code anchors.
+
+Validates, over README.md and docs/*.md:
+
+  * relative markdown links ``[text](path)`` / ``[text](path#fragment)``
+    point at files that exist (external http(s)/mailto links are skipped);
+  * `` `path::symbol` `` code anchors (the docs/paper_map.md convention)
+    name an existing file that actually contains ``symbol``.
+
+Exit code 0 when everything resolves, 1 otherwise (one line per problem).
+Run from the repo root:  python tools/linkcheck_docs.py
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+ANCHOR_RE = re.compile(r"`([A-Za-z0-9_./-]+\.(?:py|md))::([A-Za-z0-9_.]+)`")
+
+
+def check_file(path: str) -> list[str]:
+    problems = []
+    text = open(path, encoding="utf-8").read()
+    base = os.path.dirname(path)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not os.path.exists(os.path.join(base, rel)):
+            problems.append(f"{path}: broken link -> {target}")
+    for fname, symbol in ANCHOR_RE.findall(text):
+        fpath = os.path.join(REPO, fname)
+        if not os.path.exists(fpath):
+            problems.append(f"{path}: anchor file missing -> {fname}")
+            continue
+        # the symbol is the last dotted component (Class.method -> method)
+        leaf = symbol.split(".")[-1]
+        body = open(fpath, encoding="utf-8").read()
+        if not re.search(
+                rf"(?:def|class)\s+{re.escape(leaf)}\b|^{re.escape(leaf)}\s*=",
+                body, re.MULTILINE):
+            problems.append(f"{path}: anchor not found -> {fname}::{symbol}")
+    return problems
+
+
+def main() -> int:
+    targets = [os.path.join(REPO, "README.md")]
+    targets += sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
+    problems = []
+    for t in targets:
+        problems += check_file(t)
+    for p in problems:
+        print(p)
+    print(f"checked {len(targets)} files: "
+          f"{'OK' if not problems else f'{len(problems)} problem(s)'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
