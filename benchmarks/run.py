@@ -459,6 +459,86 @@ def bench_retrieval_churn(smoke: bool = False) -> None:
          f"save_s={t_save:.2f};load_s={t_load:.2f};roundtrip_identical={same}")
 
 
+def bench_retrieval_quantized(smoke: bool = False) -> None:
+    """Quantised index storage (bf16 / int8) vs fp32 on the serving hot
+    path: the paper pipeline (manifold corpus -> apex coordinates), one IVF
+    geometry per storage mode built from the *same* quantizer key, probed at
+    matched nprobe. Reports, per storage mode:
+
+      * resident tile bytes (tile_coords + scales) — int8 must come in at
+        >= 2x below fp32 (the acceptance bar; with k=16 it is ~4x);
+      * recall@10 against exact fp32 flat-scan ground truth — the delta to
+        the fp32 index at the same nprobe must stay within 0.02;
+      * QPS of the probe.
+
+    The flat streaming scan gets the same treatment (per-row scales) at one
+    index size, so both retrieval layouts are covered.
+    """
+    from repro.core.projection import select_references
+    from repro.core.quality import recall_at_k
+    from repro.data import synthetic as syn
+    from repro.index import IVFZenIndex
+    from repro.kernels import quantize as quant
+    from repro.kernels import zen_topk as zt
+
+    q, dim, kdim, nn = 32, 128, 16, 10
+    n = 20_000 if smoke else 200_000
+    n_clusters = max(64, int(round(4 * n**0.5)))
+    key = jax.random.PRNGKey(0)
+    corpus = syn.manifold_space(key, n, dim, 8)
+    tr = select_references(corpus, kdim, jax.random.fold_in(key, 1))
+    X = tr.transform(corpus).astype(jnp.float32)
+    Qb = tr.transform(
+        syn.manifold_space(jax.random.fold_in(key, 3), q, dim, 8)
+    ).astype(jnp.float32)
+
+    # exact estimator ground truth over the f32 coordinates
+    truth = np.asarray(zt.zen_topk_scan(Qb, X, nn, "zen")[1])
+
+    # flat streaming scan: per-row scales
+    for storage in ("float32", "bfloat16", "int8"):
+        vals, scales = quant.encode_rows(np.asarray(X), storage)
+        vj = jnp.asarray(vals)
+        sj = None if scales is None else jnp.asarray(scales)
+        fn = lambda: zt.zen_topk_scan(Qb, vj, nn, "zen", scales=sj)
+        rec = recall_at_k(truth, np.asarray(fn()[1]))  # also compiles
+        t = _timeit(lambda: fn()[0], repeat=2)
+        nbytes = vals.nbytes + (scales.nbytes if scales is not None else 0)
+        _row(
+            f"retrieval_quant_flat_{storage}_n{n}", t,
+            f"qps={q / (t * 1e-6):.0f};recall10={rec:.3f};"
+            f"index_mb={nbytes / 2**20:.2f}",
+        )
+
+    # clustered IVF probe: per-cluster scales, matched nprobe sweep
+    indexes = {}
+    for storage in ("float32", "bfloat16", "int8"):
+        t0 = time.perf_counter()
+        index = IVFZenIndex.build(
+            X, n_clusters, key=jax.random.fold_in(key, 2),
+            n_iters=8 if smoke else 10, storage=storage,
+        )
+        dt = (time.perf_counter() - t0) * 1e6
+        indexes[storage] = index
+        nbytes = index.tile_coords.nbytes + (
+            index.tile_scales.nbytes if index.tile_scales is not None else 0)
+        _row(f"retrieval_quant_ivf_build_{storage}_n{n}", dt,
+             f"tile_mb={nbytes / 2**20:.2f};clusters={index.n_clusters};"
+             f"tiles_per_cluster={index.tiles_per_cluster}")
+
+    for nprobe in (8, 16):
+        recalls = {}
+        for storage, index in indexes.items():
+            fn = lambda: index.search(Qb, nn, nprobe=nprobe)
+            recalls[storage] = recall_at_k(truth, np.asarray(fn()[1]))
+            t = _timeit(lambda: fn()[0], repeat=2)
+            _row(
+                f"retrieval_quant_ivf_{storage}_nprobe{nprobe}_n{n}", t,
+                f"qps={q / (t * 1e-6):.0f};recall10={recalls[storage]:.3f};"
+                f"delta_vs_f32={recalls[storage] - recalls['float32']:+.3f}",
+            )
+
+
 def bench_serving() -> None:
     from repro.data import synthetic as syn
     from repro.launch.serve import ZenServer, build_index
@@ -485,6 +565,7 @@ _WORKLOADS = {
     "retrieval_topk": lambda a: bench_retrieval_topk(smoke=a.smoke),
     "retrieval_ivf": lambda a: bench_retrieval_ivf(smoke=a.smoke),
     "retrieval_churn": lambda a: bench_retrieval_churn(smoke=a.smoke),
+    "retrieval_quantized": lambda a: bench_retrieval_quantized(smoke=a.smoke),
 }
 
 
@@ -512,11 +593,19 @@ def main() -> None:
         _WORKLOADS[args.workload](args)
 
     if args.json:
+        # backend/device/dtype context makes a snapshot comparable across
+        # machines: the same workload on a TPU pod or under x64 is a
+        # different experiment and must not diff silently against a CPU run
+        dev = jax.devices()[0]
         snap = {
             "workload": args.workload,
             "smoke": args.smoke,
             "backend": jax.default_backend(),
             "device_count": jax.device_count(),
+            "device_kind": getattr(dev, "device_kind", str(dev)),
+            "x64_enabled": bool(jax.config.jax_enable_x64),
+            "default_matmul_precision":
+                str(jax.config.jax_default_matmul_precision),
             "platform": platform.platform(),
             "jax": jax.__version__,
             "rows": _ROWS,

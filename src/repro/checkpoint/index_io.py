@@ -33,10 +33,23 @@ from typing import Any, Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
+# bf16 numpy dtype (None when ml_dtypes is unavailable) — one resolution,
+# shared with the storage subsystem, so the dtype the encoder writes is by
+# construction the one this store decodes
+from repro.kernels.quantize import BFLOAT16 as _BF16
+
 #: on-disk format name; never reuse for a different layout
 INDEX_FORMAT = "zen-index"
-#: bump on any incompatible change to the manifest or array contract
-INDEX_FORMAT_VERSION = 1
+#: bump on any incompatible change to the manifest or array contract.
+#: v2: quantised index storage — member coords may be int8 (with
+#: ``cluster_scales``/``coord_scales`` arrays and a ``storage`` meta key)
+#: or bf16 (stored as a uint16 view); a v1 reader would misinterpret the
+#: raw quantised values as coordinates, so v2 snapshots must be rejected
+#: by it loudly, which the version bump guarantees
+INDEX_FORMAT_VERSION = 2
+#: versions this build can still load; v1 snapshots are a strict subset of
+#: v2 (f32 arrays only, no storage meta — loaders default it to "float32")
+READABLE_VERSIONS = (1, 2)
 
 
 class CheckpointFormatError(ValueError):
@@ -80,13 +93,19 @@ def save_state(
         if not all(c.isalnum() or c in "_.-" for c in name):
             raise ValueError(f"unsafe array name {name!r}")
         arr = np.asarray(arr)
+        dtype_name = str(arr.dtype)
+        if _BF16 is not None and arr.dtype == _BF16:
+            # .npy has no bf16 dtype tag (it round-trips as a raw 2-byte
+            # void): store the bits as uint16 and view them back at load,
+            # keyed off the manifest's dtype entry
+            arr = arr.view(np.uint16)
         fname = f"{name}.npy"
         with open(os.path.join(tmp, fname), "wb") as f:
             np.save(f, arr)
             f.flush()
             os.fsync(f.fileno())
         manifest["arrays"][name] = {
-            "file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "file": fname, "dtype": dtype_name, "shape": list(arr.shape),
         }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
@@ -134,10 +153,10 @@ def load_state(
             f"{directory}: format {manifest.get('format')!r}, "
             f"expected {INDEX_FORMAT!r}"
         )
-    if manifest.get("version") != INDEX_FORMAT_VERSION:
+    if manifest.get("version") not in READABLE_VERSIONS:
         raise CheckpointFormatError(
             f"{directory}: format version {manifest.get('version')!r} not "
-            f"readable by this build (wants {INDEX_FORMAT_VERSION})"
+            f"readable by this build (reads {READABLE_VERSIONS})"
         )
     if expect_kind is not None and manifest.get("kind") != expect_kind:
         raise CheckpointFormatError(
@@ -147,6 +166,16 @@ def load_state(
     arrays: Dict[str, np.ndarray] = {}
     for name, entry in manifest["arrays"].items():
         arr = np.load(os.path.join(directory, entry["file"]))
+        if entry["dtype"] == "bfloat16":
+            if _BF16 is None:  # pragma: no cover - ml_dtypes ships with jax
+                raise CheckpointFormatError(
+                    f"{directory}: array {name!r} is bfloat16 but ml_dtypes "
+                    "is not available to decode it")
+            if str(arr.dtype) != "uint16":
+                raise CheckpointFormatError(
+                    f"{directory}: array {name!r} is {arr.dtype}{arr.shape}, "
+                    f"expected the uint16 bit-pattern of a bfloat16 array")
+            arr = arr.view(_BF16)
         if (str(arr.dtype) != entry["dtype"]
                 or list(arr.shape) != entry["shape"]):
             raise CheckpointFormatError(

@@ -106,12 +106,38 @@ def qform_pdist(X: Array, Y: Array, M: Array) -> Array:
     """
     acc = _acc_dtype(X)
     XM = jnp.matmul(X, M, preferred_element_type=acc)
-    YM = jnp.matmul(Y, M, preferred_element_type=acc)
+    YM = XM if Y is X else jnp.matmul(Y, M, preferred_element_type=acc)
     xmx = jnp.sum(XM * X, axis=-1)
-    ymy = jnp.sum(YM * Y, axis=-1)
+    ymy = xmx if Y is X else jnp.sum(YM * Y, axis=-1)
     xmy = jnp.matmul(XM, Y.T, preferred_element_type=acc)
     d2 = xmx[:, None] + ymy[None, :] - 2.0 * xmy
+    if Y is X:  # exact-zero self distances (cf. sqeuclidean_pdist)
+        d2 = d2 * (1.0 - jnp.eye(d2.shape[0], dtype=d2.dtype))
     return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class _DefaultQformMatrix:
+    """Deterministic PSD matrix for the registry ``qform`` metric.
+
+    The registry needs a parameter-free pairwise function, so the form
+    matrix is fixed per input dimension: the Kac-Murdock-Szego correlation
+    matrix ``M[i, j] = rho^|i - j|`` — strictly positive definite for
+    ``|rho| < 1``, so the distance is a true Hilbert-embeddable metric
+    (it is the Euclidean distance of the ``chol(M)``-transformed vectors).
+    Neighbouring axes correlate, which is the textbook quadratic-form use
+    case (e.g. colour-histogram bins). Callers with a domain matrix should
+    use :func:`qform_pdist` directly.
+    """
+
+    rho: float = 0.5
+
+    def __call__(self, m: int) -> Array:
+        idx = jnp.arange(m)
+        return self.rho ** jnp.abs(idx[:, None] - idx[None, :])
+
+
+default_qform_matrix = _DefaultQformMatrix()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +173,14 @@ def _make_registry() -> dict:
             l1_normalize,
             True,
             False,
+        ),
+        "qform": Metric(
+            "qform",
+            lambda X, Y: qform_pdist(
+                X, Y, default_qform_matrix(X.shape[-1])),
+            None,
+            True,
+            True,
         ),
     }
 

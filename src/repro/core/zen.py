@@ -95,6 +95,7 @@ def knn_search(
     mode: str = "zen",
     chunk: int = 0,
     *,
+    scales: Array = None,
     stream: bool = None,
     force_kernel: bool = False,
 ) -> Tuple[Array, Array]:
@@ -102,9 +103,13 @@ def knn_search(
 
     Args:
       queries: (Q, k) projected queries.
-      index:   (N, k) projected index.
+      index:   (N, k) projected index, stored f32, bf16 or int8
+               (``kernels.quantize``).
       chunk:   if > 0, stream the index in blocks of this many rows (bounded
                memory: keeps a running top-k instead of the full (Q, N) matrix).
+      scales:  (N, 1) f32 per-row symmetric scales when ``index`` is int8;
+               the streaming paths fuse the dequant into the estimator, the
+               dense path reconstructs the f32 index once.
       stream:  force the streaming path on (True) or off (False); by default
                it is chosen automatically — always on TPU (fused Pallas
                kernel), and on other backends whenever ``chunk`` is set and
@@ -132,7 +137,10 @@ def knn_search(
             index,
             n_neighbors,
             mode,
+            scales=scales,
             force_kernel=force_kernel,
             chunk=chunk or 4096,
         )
+    if scales is not None:  # dense reference path: dequantise once
+        index = index.astype(jnp.float32) * scales.astype(jnp.float32)
     return _dense_topk(queries, index, n_neighbors, mode)

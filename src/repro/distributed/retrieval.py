@@ -47,12 +47,14 @@ def sharded_knn_search(
     chunk: int = 4096,
     force_kernel: bool = False,
     n_valid: Optional[int] = None,
+    scales: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
     """Top-k of ``queries`` in a row-sharded ``index`` over ``mesh``.
 
     Args:
       queries: (Q, k) projected queries, replicated to every device.
-      index:   (N, k) projected index, row-sharded over ``axis``.
+      index:   (N, k) projected index, row-sharded over ``axis``; stored
+               f32, bf16 or int8 (``kernels.quantize``).
       mesh:    the device mesh.
       axis:    mesh axis name (or tuple of names) the rows are sharded over;
                defaults to all mesh axes.
@@ -61,6 +63,9 @@ def sharded_knn_search(
       n_valid: number of real index rows when ``index`` was pre-padded to a
                shard-divisible length (e.g. by ``build_index``); trailing
                rows are treated as padding. Defaults to all rows.
+      scales:  (N, 1) f32 per-row dequant scales when ``index`` is int8,
+               sharded like the index rows; each shard dequantises its own
+               tiles inside the streaming kernel.
 
     Returns:
       (distances, indices), each (Q, n_neighbors), ascending distance, with
@@ -73,9 +78,12 @@ def sharded_knn_search(
     n_neighbors = min(n_neighbors, n)
     if index.shape[0] % n_shards:
         shard_rows = -(-index.shape[0] // n_shards)  # ceil
+        pad = shard_rows * n_shards - index.shape[0]
         index = jnp.pad(
-            index, ((0, shard_rows * n_shards - index.shape[0]), (0, 0))
+            index, ((0, pad), (0, 0))
         )  # zero rows, never returned (see k_fetch below)
+        if scales is not None:
+            scales = jnp.pad(scales, ((0, pad), (0, 0)))
     else:  # pre-padded (or evenly divisible) index: no O(N) copy per call
         shard_rows = index.shape[0] // n_shards
     # Padding rows sit at the estimator distance of the origin, so they can
@@ -85,7 +93,7 @@ def sharded_knn_search(
     n_pad = shard_rows * n_shards - n
     k_fetch = min(shard_rows, n_neighbors + min(n_pad, shard_rows))
     return _sharded_topk(
-        queries, index, n=n, shard_rows=shard_rows, k_fetch=k_fetch,
+        queries, index, scales, n=n, shard_rows=shard_rows, k_fetch=k_fetch,
         n_neighbors=n_neighbors, mode=mode, mesh=mesh,
         axis_names=axis_names, chunk=chunk, force_kernel=force_kernel,
     )
@@ -101,6 +109,7 @@ def sharded_knn_search(
 def _sharded_topk(
     queries: Array,
     index: Array,
+    scales: Optional[Array],
     *,
     n: int,
     shard_rows: int,
@@ -112,25 +121,31 @@ def _sharded_topk(
     chunk: int,
     force_kernel: bool,
 ) -> Tuple[Array, Array]:
-    def local_topk(q, x):
-        # x: (shard_rows, kdim) — this device's shard
+    def local_topk(q, x, *s):
+        # x: (shard_rows, kdim) — this device's shard; s: its scale rows
         off = jnp.int32(0)
         for a in axis_names:  # linearised shard position on the (sub)mesh
             off = off * mesh.shape[a] + jax.lax.axis_index(a)
         d, ids = kernel_ops.zen_topk(
-            q, x, k_fetch, mode, force_kernel=force_kernel, chunk=chunk
+            q, x, k_fetch, mode, scales=s[0] if s else None,
+            force_kernel=force_kernel, chunk=chunk
         )
         gids = ids + off * shard_rows
         d = jnp.where(gids < n, d, jnp.inf)  # mask padded tail rows
         return d, gids
 
     shard_axes = axis_names if len(axis_names) > 1 else axis_names[0]
+    in_specs = [P(), P(shard_axes, None)]
+    operands = [queries, index]
+    if scales is not None:
+        in_specs.append(P(shard_axes, None))
+        operands.append(scales)
     d, gids = shard_map(
         local_topk,
         mesh=mesh,
-        in_specs=(P(), P(shard_axes, None)),
+        in_specs=tuple(in_specs),
         out_specs=(P(None, shard_axes), P(None, shard_axes)),
-    )(queries, index)
+    )(*operands)
     # (Q, n_shards * k_local) candidate pool -> final host-side merge
     neg, pos = jax.lax.top_k(-d, n_neighbors)
     return -neg, jnp.take_along_axis(gids, pos, axis=1)
@@ -199,6 +214,7 @@ def sharded_ivf_probe(
     mesh,
     axis: Optional[Union[str, Tuple[str, ...]]] = None,
     tiles_per_cluster: int,
+    tile_scales: Optional[Array] = None,
     force_kernel: bool = False,
 ) -> Tuple[Array, Array]:
     """Clustered top-k of ``queries`` in mesh-sharded inverted-list tiles.
@@ -207,18 +223,22 @@ def sharded_ivf_probe(
       queries:     (Q, k) projected queries, replicated to every device.
       tile_coords: (S*C*T, tile_rows, k) packed tiles, row-sharded over
                    ``axis`` — each device holds its own shard's (C*T, ...)
-                   inverted lists (see ``index.ivf.ShardedIVFZenIndex``).
+                   inverted lists (see ``index.ivf.ShardedIVFZenIndex``);
+                   stored f32, bf16 or int8.
       tile_ids:    (S*C*T, tile_rows) int32 *global* row ids, -1 = padding.
       probes:      (Q, nprobe) int32 cluster ids, replicated (one global
                    coarse quantizer).
       tiles_per_cluster: T of the packed layout.
+      tile_scales: (C, 1) f32 per-cluster int8 dequant scales, replicated
+                   (the scales follow the *global* assignment, like the
+                   centroids — every shard sees the same values).
 
     Returns (distances, indices), each (Q, n_neighbors), ascending, with
     global indices; slots the probed clusters cannot fill are (+inf, -1).
     """
     axis_names = resolve_axis_names(mesh, axis)
     return _sharded_ivf_topk(
-        queries, tile_coords, tile_ids, probes,
+        queries, tile_coords, tile_ids, probes, tile_scales,
         n_neighbors=n_neighbors, mode=mode, mesh=mesh,
         axis_names=axis_names, tiles_per_cluster=tiles_per_cluster,
         force_kernel=force_kernel,
@@ -237,6 +257,7 @@ def _sharded_ivf_topk(
     tile_coords: Array,
     tile_ids: Array,
     probes: Array,
+    tile_scales: Optional[Array],
     *,
     n_neighbors: int,
     mode: str,
@@ -245,20 +266,26 @@ def _sharded_ivf_topk(
     tiles_per_cluster: int,
     force_kernel: bool,
 ) -> Tuple[Array, Array]:
-    def local_probe(q, tc, ti, pr):
+    def local_probe(q, tc, ti, pr, *ts):
         # tc: (C*T, tile_rows, k) — this device's inverted lists, global ids
         return kernel_ops.ivf_probe(
             q, tc, ti, pr, n_neighbors, mode,
-            tiles_per_cluster=tiles_per_cluster, force_kernel=force_kernel,
+            tiles_per_cluster=tiles_per_cluster,
+            tile_scales=ts[0] if ts else None, force_kernel=force_kernel,
         )
 
     shard_axes = axis_names if len(axis_names) > 1 else axis_names[0]
+    in_specs = [P(), P(shard_axes, None, None), P(shard_axes, None), P()]
+    operands = [queries, tile_coords, tile_ids, probes]
+    if tile_scales is not None:
+        in_specs.append(P())  # replicated, like the probes
+        operands.append(tile_scales)
     d, gids = shard_map(
         local_probe,
         mesh=mesh,
-        in_specs=(P(), P(shard_axes, None, None), P(shard_axes, None), P()),
+        in_specs=tuple(in_specs),
         out_specs=(P(None, shard_axes), P(None, shard_axes)),
-    )(queries, tile_coords, tile_ids, probes)
+    )(*operands)
     # (Q, n_shards * k) candidate pool -> final host-side merge; local
     # padding already carries (+inf, -1) so no compensation is needed
     neg, pos = jax.lax.top_k(-d, n_neighbors)

@@ -59,6 +59,7 @@ from repro.checkpoint import index_io
 from repro.core import metrics as metrics_lib
 from repro.core import zen as zen_lib
 from repro.kernels import ops as kernel_ops
+from repro.kernels import quantize as quant
 
 from .kmeans import kmeans_assign, kmeans_fit
 
@@ -105,16 +106,82 @@ def snapshot_payload(index) -> Tuple[dict, dict]:
     plus the quantizer and geometry — shared by ``IVFZenIndex.save``,
     ``ShardedIVFZenIndex.save`` and ``launch.serve.ZenServer.save`` so the
     three save paths cannot drift.
+
+    Quantised indexes persist their *raw* stored values (bf16/int8 member
+    coords) plus, for int8, the per-cluster scales: load packs them back
+    without a dequantise/requantise cycle, so a snapshot restores
+    bit-identically onto any device count.
     """
-    coords, ids, assign = index._live_members()
+    coords, ids, assign = index._live_members(raw=True)
     arrays = {
         "centroids": np.asarray(index.centroids, np.float32),
         "member_coords": coords,
         "member_ids": ids.astype(np.int32),
         "member_assign": assign.astype(np.int32),
     }
-    meta = {"n_clusters": index.n_clusters, "tile_rows": index.tile_rows}
+    if index.tile_scales is not None:
+        arrays["cluster_scales"] = np.asarray(index.tile_scales, np.float32)
+    meta = {"n_clusters": index.n_clusters, "tile_rows": index.tile_rows,
+            "storage": index.storage}
     return arrays, meta
+
+
+def _packed_scales(packed: np.ndarray) -> np.ndarray:
+    """(C, 1) per-cluster int8 scales from a packed f32 (C, rows, k) layout.
+
+    Equals ``quant.cluster_scales`` over the members (padding rows are zero
+    and cannot carry the absmax); stale tombstone coords left behind by
+    churn can only keep a scale larger than the live rows need — never
+    wrong, at worst a little conservative until the next compact.
+    """
+    return quant.symmetric_scales(
+        np.abs(np.asarray(packed, np.float32)).max(axis=(1, 2)))[:, None]
+
+
+def _encode_packed(
+    packed: np.ndarray, storage: str
+) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Encode a packed f32 (C, rows, k) layout into its storage dtype.
+
+    Returns ``(values, (C, 1) per-cluster scales or None)``.
+    """
+    quant.check_storage(storage)
+    packed = np.asarray(packed, np.float32)
+    if storage == "float32":
+        return packed, None
+    if storage == "bfloat16":
+        return packed.astype(quant.np_dtype("bfloat16")), None
+    scales = _packed_scales(packed)
+    return quant.quantize(packed, scales[:, :, None]), scales
+
+
+def _coerce_member_storage(
+    coords: np.ndarray,
+    assign: np.ndarray,
+    n_clusters: int,
+    storage: str,
+    scales: Optional[np.ndarray],
+) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Member coords as restored-or-fresh -> (storage-dtype values, scales).
+
+    Shared by the single-host (:meth:`IVFZenIndex.from_members`) and sharded
+    (:meth:`ShardedIVFZenIndex._from_members`) restore paths so the
+    bit-identity contract cannot drift between them: already-quantised int8
+    values pass through with their persisted per-cluster ``scales`` (no
+    dequantise/requantise cycle); f32 input under a narrow ``storage`` is
+    encoded here, with scales derived from the *global* assignment before
+    any shard split or tile packing.
+    """
+    quant.check_storage(storage)
+    coords = np.asarray(coords)
+    if coords.dtype == np.int8:
+        if scales is None:
+            raise ValueError("int8 member coords need per-cluster scales")
+        return coords, np.asarray(scales, np.float32)
+    if storage == "int8":
+        scales = quant.cluster_scales(coords, assign, n_clusters)
+        return quant.quantize(coords, scales[assign]), scales
+    return coords.astype(quant.np_dtype(storage)), None
 
 
 def _pack_tiles(
@@ -129,7 +196,9 @@ def _pack_tiles(
     """Pack member rows into the padded inverted-list tile layout (host-side).
 
     Args:
-      coords:  (n, k) member apex coordinates.
+      coords:  (n, k) member apex coordinates, in any storage dtype
+               (f32 / bf16 / int8 values are packed as-is — quantisation is
+               the caller's concern).
       assign:  (n,) cluster id per member.
       ids:     (n,) global row ids to store (any non-negative int32 values).
       n_clusters: number of clusters C.
@@ -137,9 +206,10 @@ def _pack_tiles(
       min_tiles:  lower bound on tiles per cluster T (used to align shard /
                   growth layouts).
 
-    Returns ``(packed (C, T*tile_rows, k) f32, out_ids (C, T*tile_rows)
-    int32 with -1 padding, T)``.
+    Returns ``(packed (C, T*tile_rows, k) in ``coords.dtype``, out_ids
+    (C, T*tile_rows) int32 with -1 padding, T)``.
     """
+    coords = np.asarray(coords)
     n, kdim = coords.shape
     counts = np.bincount(assign, minlength=n_clusters) if n else np.zeros(
         n_clusters, np.int64)
@@ -150,13 +220,13 @@ def _pack_tiles(
     )
     T = per_cluster // tile_rows
     out_ids = np.full((n_clusters, per_cluster), -1, np.int64)
-    packed = np.zeros((n_clusters, per_cluster, kdim), np.float32)
+    packed = np.zeros((n_clusters, per_cluster, kdim), coords.dtype)
     if n:
         order = np.argsort(assign, kind="stable")
         starts = np.cumsum(counts) - counts
         pos = np.arange(n) - np.repeat(starts, counts)
         out_ids[assign[order], pos] = ids[order]
-        packed[assign[order], pos] = np.asarray(coords, np.float32)[order]
+        packed[assign[order], pos] = coords[order]
     return packed, out_ids.astype(np.int32), T
 
 
@@ -166,9 +236,11 @@ class IVFZenIndex:
     """Clustered Zen index: k-means centroids + padded inverted-list tiles.
 
     Attributes:
-      centroids:   (C, k) f32 coarse-quantizer centroids.
-      tile_coords: (C*T, tile_rows, k) packed member apex coordinates;
-                   cluster ``c`` owns blocks ``c*T .. c*T+T-1``.
+      centroids:   (C, k) f32 coarse-quantizer centroids (always full
+                   precision: the coarse ranking is O(Q*C), not the hot loop).
+      tile_coords: (C*T, tile_rows, k) packed member apex coordinates, in
+                   the ``storage`` dtype; cluster ``c`` owns blocks
+                   ``c*T .. c*T+T-1``.
       tile_ids:    (C*T, tile_rows) int32 global row ids; ``-1`` marks both
                    never-used padding and tombstoned (deleted) rows — the
                    probe kernels mask the two identically.
@@ -178,6 +250,14 @@ class IVFZenIndex:
       n_valid:     number of live (searchable) rows.
       n_deleted:   tombstones accumulated since the last build/compact —
                    drives the ``needs_compact`` trigger.
+      storage:     resident dtype of ``tile_coords``: "float32", "bfloat16"
+                   or "int8" (``kernels.quantize``). Estimator accumulation
+                   is f32 regardless; the probe kernels dequantise in
+                   register.
+      tile_scales: (C, 1) f32 per-cluster symmetric int8 scales, or ``None``
+                   for f32/bf16 storage. Per *cluster* — not per tile — so
+                   the quantised values depend only on the global assignment,
+                   never on tile packing or shard count.
     """
 
     centroids: Array    # (C, k) f32 coarse-quantizer centroids
@@ -188,17 +268,22 @@ class IVFZenIndex:
     tile_rows: int
     n_valid: int        # number of live (un-padded, un-deleted) index rows
     n_deleted: int = 0  # tombstones since the last build/compact
+    storage: str = "float32"        # resident dtype of tile_coords
+    tile_scales: Optional[Array] = None  # (C, 1) int8 dequant scales
 
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
-        children = (self.centroids, self.tile_coords, self.tile_ids)
+        children = (self.centroids, self.tile_coords, self.tile_ids,
+                    self.tile_scales)
         aux = (self.n_clusters, self.tiles_per_cluster, self.tile_rows,
-               self.n_valid, self.n_deleted)
+               self.n_valid, self.n_deleted, self.storage)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        centroids, tile_coords, tile_ids, tile_scales = children
+        return cls(centroids, tile_coords, tile_ids, *aux[:5],
+                   storage=aux[5], tile_scales=tile_scales)
 
     @property
     def size(self) -> int:
@@ -220,6 +305,7 @@ class IVFZenIndex:
         n_iters: int = 15,
         chunk: int = 16384,
         key: Optional[Array] = None,
+        storage: str = "float32",
     ) -> "IVFZenIndex":
         """Cluster (N, k) apex coordinates and pack the inverted lists.
 
@@ -235,6 +321,10 @@ class IVFZenIndex:
           n_iters:    Lloyd iterations for the quantizer fit.
           chunk:      row chunk of the k-means assignment passes.
           key:        PRNG key for the k-means++ seeding.
+          storage:    resident dtype of the packed tiles — "float32",
+                      "bfloat16" or "int8" (per-cluster symmetric scales,
+                      ``kernels.quantize``). The quantizer fit always runs
+                      on the f32 coordinates.
 
         Returns a fresh index with ``n_valid == N`` and no tombstones. The
         quantizer fit and assignment run jit-compiled and chunked
@@ -253,16 +343,19 @@ class IVFZenIndex:
         packed, out_ids, T = _pack_tiles(
             np.asarray(coords, np.float32), assign, ids_np, n_clusters,
             tile_rows)
+        values, scales = _encode_packed(packed, storage)
         return cls(
             centroids=centroids,
             tile_coords=jnp.asarray(
-                packed.reshape(n_clusters * T, tile_rows, kdim)),
+                values.reshape(n_clusters * T, tile_rows, kdim)),
             tile_ids=jnp.asarray(
                 out_ids.reshape(n_clusters * T, tile_rows)),
             n_clusters=n_clusters,
             tiles_per_cluster=T,
             tile_rows=tile_rows,
             n_valid=n,
+            storage=storage,
+            tile_scales=None if scales is None else jnp.asarray(scales),
         )
 
     # -- mutation (control plane: host-side, returns a new index) -----------
@@ -325,8 +418,12 @@ class IVFZenIndex:
         C, T, rows, kdim = (self.n_clusters, base.tiles_per_cluster,
                             self.tile_rows, self.dim)
         tids = np.asarray(base.tile_ids).reshape(C, T * rows).copy()
-        tcoords = np.asarray(base.tile_coords).reshape(
-            C, T * rows, kdim).copy()
+        # mutate the *stored* bytes in place and touch only the clusters
+        # the batch lands in: untouched clusters keep their exact tiles and
+        # scales, and the host work stays O(batch clusters), not O(N)
+        tvals = np.asarray(base.tile_coords).reshape(C, T * rows, kdim).copy()
+        scl = (None if base.tile_scales is None
+               else np.asarray(base.tile_scales, np.float32).copy())
 
         assign = np.asarray(
             kmeans_assign(jnp.asarray(coords_np), self.centroids))
@@ -336,26 +433,37 @@ class IVFZenIndex:
             grow = int(math.ceil(deficit.max() / rows))
             tids = np.concatenate(
                 [tids, np.full((C, grow * rows), -1, np.int32)], axis=1)
-            tcoords = np.concatenate(
-                [tcoords, np.zeros((C, grow * rows, kdim), np.float32)],
+            tvals = np.concatenate(
+                [tvals, np.zeros((C, grow * rows, kdim), tvals.dtype)],
                 axis=1)
             T += grow
         for c in np.unique(assign):
             sel = np.flatnonzero(assign == c)
             slots = np.flatnonzero(tids[c] < 0)[: sel.size]
             tids[c, slots] = ids_np[sel]
-            tcoords[c, slots] = coords_np[sel]
+            if scl is None:  # f32 / bf16: a plain (casting) write
+                tvals[c, slots] = coords_np[sel]
+            else:
+                # int8: dequantise this cluster's block, write the rows,
+                # re-derive its scale from the full block content (same
+                # absmax rule as _encode_packed) and requantise — the
+                # absmax pinning makes this lossless when the scale holds
+                blk = quant.dequantize(tvals[c], scl[c, 0])
+                blk[slots] = coords_np[sel]
+                scl[c, 0] = quant.symmetric_scales(np.abs(blk).max())
+                tvals[c] = quant.quantize(blk, scl[c, 0])
         # every insert lands in a previously-dead slot, so the batch
         # reclaims up to `inserted` tombstones — without the credit, a pure
         # in-place refresh (replace existing ids) would inflate n_deleted
         # and trip needs_compact with nothing reclaimable
         return dataclasses.replace(
             base,
-            tile_coords=jnp.asarray(tcoords.reshape(C * T, rows, kdim)),
+            tile_coords=jnp.asarray(tvals.reshape(C * T, rows, kdim)),
             tile_ids=jnp.asarray(tids.reshape(C * T, rows).astype(np.int32)),
             tiles_per_cluster=T,
             n_valid=base.n_valid + ids_np.size,
             n_deleted=max(0, base.n_deleted - int(ids_np.size)),
+            tile_scales=None if scl is None else jnp.asarray(scl),
         )
 
     @property
@@ -447,9 +555,10 @@ class IVFZenIndex:
             centroids = self.centroids
         packed, out_ids, T = _pack_tiles(
             coords, assign, ids, n_clusters, self.tile_rows)
+        values, scales = _encode_packed(packed, self.storage)
         return IVFZenIndex(
             centroids=centroids,
-            tile_coords=jnp.asarray(packed.reshape(
+            tile_coords=jnp.asarray(values.reshape(
                 n_clusters * T, self.tile_rows, self.dim)),
             tile_ids=jnp.asarray(out_ids.reshape(
                 n_clusters * T, self.tile_rows)),
@@ -457,18 +566,36 @@ class IVFZenIndex:
             tiles_per_cluster=T,
             tile_rows=self.tile_rows,
             n_valid=len(ids),
+            storage=self.storage,
+            tile_scales=None if scales is None else jnp.asarray(scales),
         )
 
-    def _live_members(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def _host_tiles_f32(self) -> np.ndarray:
+        """(C*T, rows, k) dequantised f32 host copy of the packed tiles."""
+        vals = np.asarray(self.tile_coords)
+        if self.tile_scales is not None:
+            per_block = np.repeat(  # cluster scale of every tile block
+                np.asarray(self.tile_scales, np.float32)[:, 0],
+                self.tiles_per_cluster)
+            return quant.dequantize(vals, per_block[:, None, None])
+        return np.asarray(vals, np.float32)
+
+    def _live_members(
+        self, *, raw: bool = False
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Host copies of the live rows: (coords (n, k), ids (n,),
-        assign (n,)), ordered by cluster then slot."""
+        assign (n,)), ordered by cluster then slot. ``raw`` keeps the
+        coords in the storage dtype (snapshot path); the default
+        dequantises to f32 (compact / recluster path)."""
         tids = np.asarray(self.tile_ids)          # (C*T, rows)
         valid = tids >= 0
         block_cluster = np.arange(tids.shape[0]) // self.tiles_per_cluster
         assign = np.broadcast_to(
             block_cluster[:, None], tids.shape)[valid]
-        coords = np.asarray(self.tile_coords)[valid]
-        return (coords.astype(np.float32), tids[valid].astype(np.int64),
+        tiles = (np.asarray(self.tile_coords) if raw
+                 else self._host_tiles_f32())
+        coords = tiles[valid]
+        return (coords, tids[valid].astype(np.int64),
                 assign.astype(np.int64))
 
     @classmethod
@@ -480,6 +607,9 @@ class IVFZenIndex:
         centroids: Array,
         n_clusters: int,
         tile_rows: int,
+        *,
+        storage: str = "float32",
+        scales: Optional[np.ndarray] = None,
     ) -> "IVFZenIndex":
         """Pack canonical host member arrays into a fresh index.
 
@@ -487,12 +617,20 @@ class IVFZenIndex:
         the live members ``(coords (n, k), ids (n,), assign (n,))`` and an
         already-fitted quantizer, rebuild the padded tile layout with no
         tombstones and minimal tiles-per-cluster.
+
+        ``coords`` may arrive already in the storage dtype (a quantised
+        snapshot, with its persisted per-cluster ``scales``) — the values
+        are packed as-is, no dequantise/requantise cycle, which is what
+        makes reloads bit-identical. f32 ``coords`` with a narrow
+        ``storage`` are encoded here instead (fresh scales).
         """
-        coords = np.asarray(coords, np.float32)
+        assign64 = np.asarray(assign, np.int64)
+        values, scales = _coerce_member_storage(
+            coords, assign64, n_clusters, storage, scales)
         packed, out_ids, T = _pack_tiles(
-            coords, np.asarray(assign, np.int64), np.asarray(ids, np.int64),
+            values, assign64, np.asarray(ids, np.int64),
             n_clusters, tile_rows)
-        kdim = coords.shape[1]
+        kdim = values.shape[1]
         return cls(
             centroids=jnp.asarray(centroids),
             tile_coords=jnp.asarray(
@@ -501,7 +639,9 @@ class IVFZenIndex:
             n_clusters=n_clusters,
             tiles_per_cluster=T,
             tile_rows=tile_rows,
-            n_valid=coords.shape[0],
+            n_valid=values.shape[0],
+            storage=storage,
+            tile_scales=None if scales is None else jnp.asarray(scales),
         )
 
     # -- persistence ---------------------------------------------------------
@@ -540,6 +680,8 @@ class IVFZenIndex:
             jnp.asarray(arrays["centroids"]),
             int(meta["n_clusters"]),
             tile_rows or int(meta["tile_rows"]),
+            storage=meta.get("storage", "float32"),
+            scales=arrays.get("cluster_scales"),
         )
 
     # -- search --------------------------------------------------------------
@@ -617,7 +759,7 @@ def _ivf_search(
     return kernel_ops.ivf_probe(
         queries, index.tile_coords, index.tile_ids, probes, n_neighbors,
         mode, tiles_per_cluster=index.tiles_per_cluster,
-        force_kernel=force_kernel,
+        tile_scales=index.tile_scales, force_kernel=force_kernel,
     )
 
 
@@ -632,18 +774,20 @@ def exact_rerank(
     """Refine a (Q, C) candidate pool with true distances (serving pattern).
 
     Gathers the candidates' original vectors, scores them exactly under
-    ``metric``'s normalisation, and returns the best ``n_neighbors``.
-    Padding candidates (id == -1) are masked out, never returned (unless the
-    pool holds fewer than ``n_neighbors`` valid candidates).
+    ``metric`` — the registry's pairwise function, evaluated per query over
+    its own candidate pool, so non-Euclidean metrics (jsd, qform, ...)
+    re-rank with their true distance, not a Euclidean surrogate — and
+    returns the best ``n_neighbors``. Padding candidates (id == -1) are
+    masked out, never returned (unless the pool holds fewer than
+    ``n_neighbors`` valid candidates).
     """
     m = metrics_lib.get_metric(metric)
     safe_ids = jnp.maximum(cand_ids, 0)
     cands = corpus[safe_ids]                         # (Q, C, m)
     qn = m.normalize(queries) if m.normalize is not None else queries
     cn = m.normalize(cands) if m.normalize is not None else cands
-    d = jnp.linalg.norm(
-        qn[:, None, :].astype(jnp.float32) - cn.astype(jnp.float32), axis=-1
-    )
+    d = jax.vmap(lambda qr, cr: m.pdist(qr[None, :], cr)[0])(
+        qn.astype(jnp.float32), cn.astype(jnp.float32))  # (Q, C)
     d = jnp.where(cand_ids >= 0, d, jnp.inf)
     n_neighbors = min(n_neighbors, cand_ids.shape[1])
     dd, pos = jax.lax.top_k(-d, n_neighbors)
@@ -725,6 +869,8 @@ class ShardedIVFZenIndex:
     n_shards: int
     mesh: object
     axis_names: Tuple[str, ...]
+    storage: str = "float32"        # resident dtype of tile_coords
+    tile_scales: Optional[Array] = None  # (C, 1) — replicated, like centroids
 
     @property
     def size(self) -> int:
@@ -746,6 +892,7 @@ class ShardedIVFZenIndex:
         n_iters: int = 15,
         chunk: int = 16384,
         key: Optional[Array] = None,
+        storage: str = "float32",
     ) -> "ShardedIVFZenIndex":
         """Fit the global quantizer and pack per-shard inverted lists.
 
@@ -763,7 +910,7 @@ class ShardedIVFZenIndex:
         return cls._from_members(
             np.asarray(coords, np.float32), np.arange(n, dtype=np.int64),
             assign.astype(np.int64), centroids, n_clusters, tile_rows,
-            mesh=mesh, axis=axis,
+            mesh=mesh, axis=axis, storage=storage,
         )
 
     @classmethod
@@ -778,15 +925,25 @@ class ShardedIVFZenIndex:
         *,
         mesh,
         axis: Optional[Union[str, Tuple[str, ...]]] = None,
+        storage: str = "float32",
+        scales: Optional[np.ndarray] = None,
     ) -> "ShardedIVFZenIndex":
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         from repro.distributed.retrieval import resolve_axis_names
 
+        # quantise *before* the shard split, with per-cluster scales from
+        # the global assignment: the stored bytes are then independent of
+        # the shard count, so a snapshot reloads bit-identically onto any
+        # mesh (scales are replicated, like the centroids)
+        assign64 = np.asarray(assign, np.int64)
+        coords, scales = _coerce_member_storage(
+            coords, assign64, n_clusters, storage, scales)
+
         axis_names = resolve_axis_names(mesh, axis)
         n_shards = math.prod(mesh.shape[a] for a in axis_names)
         tile_coords, tile_ids, T = _pack_sharded_tiles(
-            coords, assign, ids, n_clusters, n_shards, tile_rows)
+            coords, assign64, ids, n_clusters, n_shards, tile_rows)
         rows = axis_names if len(axis_names) > 1 else axis_names[0]
         tile_coords = jax.device_put(
             jnp.asarray(tile_coords), NamedSharding(mesh, P(rows, None, None)))
@@ -796,20 +953,34 @@ class ShardedIVFZenIndex:
             centroids=jnp.asarray(centroids), tile_coords=tile_coords,
             tile_ids=tile_ids, n_clusters=n_clusters, tiles_per_cluster=T,
             tile_rows=tile_rows, n_valid=len(ids), n_shards=n_shards,
-            mesh=mesh, axis_names=axis_names,
+            mesh=mesh, axis_names=axis_names, storage=storage,
+            tile_scales=None if scales is None else jnp.asarray(scales),
         )
 
     # -- persistence ---------------------------------------------------------
-    def _live_members(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Gather the live rows of every shard to host (global ids)."""
+    def _live_members(
+        self, *, raw: bool = False
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Gather the live rows of every shard to host (global ids).
+
+        ``raw`` keeps coords in the storage dtype (snapshot path); the
+        default dequantises to f32."""
         tids = np.asarray(self.tile_ids)          # (S*C*T, rows)
         valid = tids >= 0
         ct = self.n_clusters * self.tiles_per_cluster
         block_cluster = (np.arange(tids.shape[0]) % ct) // \
             self.tiles_per_cluster
         assign = np.broadcast_to(block_cluster[:, None], tids.shape)[valid]
-        coords = np.asarray(self.tile_coords)[valid]
-        return (coords.astype(np.float32), tids[valid].astype(np.int64),
+        tiles = np.asarray(self.tile_coords)
+        if not raw:
+            if self.tile_scales is not None:
+                per_block = np.asarray(
+                    self.tile_scales, np.float32)[:, 0][block_cluster]
+                tiles = quant.dequantize(tiles, per_block[:, None, None])
+            else:
+                tiles = tiles.astype(np.float32)
+        coords = tiles[valid]
+        return (coords, tids[valid].astype(np.int64),
                 assign.astype(np.int64))
 
     def save(self, directory: str) -> str:
@@ -846,6 +1017,8 @@ class ShardedIVFZenIndex:
             int(meta["n_clusters"]),
             tile_rows or int(meta["tile_rows"]),
             mesh=mesh, axis=axis,
+            storage=meta.get("storage", "float32"),
+            scales=arrays.get("cluster_scales"),
         )
 
     def search(
@@ -870,5 +1043,5 @@ class ShardedIVFZenIndex:
             queries, self.tile_coords, self.tile_ids, probes, n_neighbors,
             mode, mesh=self.mesh, axis=self.axis_names,
             tiles_per_cluster=self.tiles_per_cluster,
-            force_kernel=force_kernel,
+            tile_scales=self.tile_scales, force_kernel=force_kernel,
         )

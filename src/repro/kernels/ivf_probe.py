@@ -30,7 +30,7 @@ cluster-size skew.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,16 +50,18 @@ def _probe_kernel(
     q_ref,       # (1, kp)
     x_ref,       # (1, tile_rows, kp) — the probed tile
     id_ref,      # (1, tile_rows)
-    od_ref,      # (1, kw)
-    oi_ref,      # (1, kw)
-    bd_ref,      # VMEM scratch (1, kw)
-    bi_ref,      # VMEM scratch (1, kw)
-    *,
+    *rest,       # [s_ref (1, 1)] od_ref oi_ref + scratch bd_ref bi_ref
     true_k: int,
     n_steps: int,
     mode: int,
+    has_scale: bool,
 ):
     del probes_ref  # only the index maps need it
+    if has_scale:  # the probed cluster's dequant scale rides along
+        s_ref, od_ref, oi_ref, bd_ref, bi_ref = rest
+    else:
+        od_ref, oi_ref, bd_ref, bi_ref = rest
+        s_ref = None
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -70,7 +72,9 @@ def _probe_kernel(
     q = q_ref[...].astype(jnp.float32)          # (1, kp)
     x = x_ref[0].astype(jnp.float32)            # (tile_rows, kp)
     ids = id_ref[...]                           # (1, tile_rows)
-    d = estimate_tile(q, x, true_k=true_k, mode=mode)  # (1, tile_rows)
+    scale = s_ref[0, 0] if has_scale else None
+    d = estimate_tile(
+        q, x, true_k=true_k, mode=mode, scale=scale)  # (1, tile_rows)
     d = mask_invalid(d, ids)                    # padding + tombstones
 
     kw = bd_ref.shape[1]
@@ -95,16 +99,22 @@ def ivf_probe(
     mode: str = "zen",
     *,
     tiles_per_cluster: int,
+    tile_scales: Optional[Array] = None,
     interpret: bool = False,
 ) -> Tuple[Array, Array]:
     """Clustered top-k probe: score only the tiles of the probed clusters.
 
     Args:
       queries:     (Q, k) projected queries.
-      tile_coords: (C*T, tile_rows, k) packed cluster tiles.
+      tile_coords: (C*T, tile_rows, k) packed cluster tiles — stored f32,
+                   bf16 or int8 (``kernels.quantize``).
       tile_ids:    (C*T, tile_rows) int32 global row ids, -1 = padding.
       probes:      (Q, P) int32 cluster ids to visit per query.
       tiles_per_cluster: T — tiles per cluster in the packed layout.
+      tile_scales: (C, 1) f32 per-cluster symmetric scales when
+                   ``tile_coords`` is int8; the probed cluster's scale is
+                   DMA'd through the same prefetched index map as its tiles
+                   and the dequant fuses into the estimator.
 
     Returns (distances f32, indices int32), each (Q, n_neighbors), rows
     ascending by distance; slots beyond the number of valid candidates in the
@@ -124,20 +134,29 @@ def ivf_probe(
     Qpad = jnp.pad(queries, ((0, 0), (0, Kp - kdim)))
     Xpad = jnp.pad(tile_coords, ((0, 0), (0, 0), (0, Kp - kdim)))
 
+    in_specs = [
+        pl.BlockSpec((1, Kp), lambda i, j, pref: (i, 0)),
+        pl.BlockSpec(
+            (1, tile_rows, Kp),
+            lambda i, j, pref: (pref[i, j // T] * T + j % T, 0, 0),
+        ),
+        pl.BlockSpec(
+            (1, tile_rows),
+            lambda i, j, pref: (pref[i, j // T] * T + j % T, 0),
+        ),
+    ]
+    operands = [Qpad, Xpad, tile_ids]
+    if tile_scales is not None:
+        assert tile_scales.shape == (ct // T, 1), (tile_scales.shape, ct, T)
+        # the probed *cluster* id indexes the scales directly
+        in_specs.append(pl.BlockSpec(
+            (1, 1), lambda i, j, pref: (pref[i, j // T], 0)))
+        operands.append(tile_scales.astype(jnp.float32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(q, n_steps),
-        in_specs=[
-            pl.BlockSpec((1, Kp), lambda i, j, pref: (i, 0)),
-            pl.BlockSpec(
-                (1, tile_rows, Kp),
-                lambda i, j, pref: (pref[i, j // T] * T + j % T, 0, 0),
-            ),
-            pl.BlockSpec(
-                (1, tile_rows),
-                lambda i, j, pref: (pref[i, j // T] * T + j % T, 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, kw), lambda i, j, pref: (i, 0)),
             pl.BlockSpec((1, kw), lambda i, j, pref: (i, 0)),
@@ -149,7 +168,8 @@ def ivf_probe(
     )
     out_d, out_i = pl.pallas_call(
         functools.partial(
-            _probe_kernel, true_k=kdim, n_steps=n_steps, mode=MODE_IDS[mode]
+            _probe_kernel, true_k=kdim, n_steps=n_steps, mode=MODE_IDS[mode],
+            has_scale=tile_scales is not None,
         ),
         grid_spec=grid_spec,
         out_shape=[
@@ -161,7 +181,7 @@ def ivf_probe(
         ),
         interpret=interpret,
         name="nsimplex_ivf_probe",
-    )(probes.astype(jnp.int32), Qpad, Xpad, tile_ids)
+    )(probes.astype(jnp.int32), *operands)
     return out_d[:, :n_neighbors], out_i[:, :n_neighbors]
 
 
@@ -177,12 +197,15 @@ def ivf_probe_scan(
     mode: str = "zen",
     *,
     tiles_per_cluster: int,
+    tile_scales: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
     """Bounded-memory jnp fallback: fori_loop over (probe, tile) steps.
 
     Each step gathers one (Q, tile_rows, k) block of the probed clusters'
     tiles and merges into the running (Q, n_neighbors) best — peak temp
     memory is one tile per query, flat in index size and in cluster count.
+    ``tile_scales`` (C, 1) dequantises int8 tiles one gathered block at a
+    time (same contract as :func:`ivf_probe`).
     """
     q, kdim = queries.shape
     ct, tile_rows, _ = tile_coords.shape
@@ -200,7 +223,10 @@ def ivf_probe_scan(
         b = c.astype(jnp.int32) * T + t             # (Q,) tile block ids
         blk = tile_coords[b].astype(acc)            # (Q, tile_rows, k)
         ids = tile_ids[b]                           # (Q, tile_rows)
-        d = estimate_rows(queries, blk, mode=mode_i)
+        scale = None
+        if tile_scales is not None:  # per-query probed-cluster scales
+            scale = tile_scales[c.astype(jnp.int32)].astype(acc)[:, :, None]
+        d = estimate_rows(queries, blk, mode=mode_i, scale=scale)
         d = mask_invalid(d, ids)                    # padding + tombstones
         return merge_topk(best_d, best_i, d, ids, n_neighbors)
 

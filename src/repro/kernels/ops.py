@@ -55,6 +55,7 @@ def zen_topk(
     n_neighbors: int = 10,
     mode: str = "zen",
     *,
+    scales: Array = None,
     force_kernel: bool = False,
     chunk: int = 4096,
     **block_kw,
@@ -63,9 +64,13 @@ def zen_topk(
 
     Args:
       queries:     (Q, k) projected query coordinates.
-      index:       (N, k) projected index coordinates.
+      index:       (N, k) projected index coordinates, stored f32, bf16 or
+                   int8 (``kernels.quantize``); dequantisation fuses into
+                   the estimator on every path.
       n_neighbors: results per query (clamped to N).
       mode:        estimator: "zen", "lwb" or "upb".
+      scales:      (N, 1) f32 per-row symmetric scales when ``index`` is
+                   int8; None otherwise.
       force_kernel: run the Pallas kernel in interpret mode off-TPU.
       chunk:       row tile of the scan fallback (its memory bound).
 
@@ -84,13 +89,16 @@ def zen_topk(
     True
     """
     if _on_tpu():
-        return _zen_topk.zen_topk(queries, index, n_neighbors, mode, **block_kw)
+        return _zen_topk.zen_topk(
+            queries, index, n_neighbors, mode, scales=scales, **block_kw
+        )
     if force_kernel:
         return _zen_topk.zen_topk(
-            queries, index, n_neighbors, mode, interpret=True, **block_kw
+            queries, index, n_neighbors, mode, scales=scales,
+            interpret=True, **block_kw
         )
     return _zen_topk.zen_topk_scan(
-        queries, index, n_neighbors, mode, chunk=chunk
+        queries, index, n_neighbors, mode, scales=scales, chunk=chunk
     )
 
 
@@ -103,6 +111,7 @@ def ivf_probe(
     mode: str = "zen",
     *,
     tiles_per_cluster: int,
+    tile_scales: Array = None,
     force_kernel: bool = False,
 ):
     """Clustered IVF top-k probe over packed cluster tiles; kernel-accelerated.
@@ -110,22 +119,26 @@ def ivf_probe(
     Dispatch: scalar-prefetch Pallas kernel on TPU (or under ``force_kernel``
     via interpret mode) — only the probed clusters' tiles are ever DMA'd;
     otherwise a fori_loop gather fallback with the same one-tile-per-step
-    memory bound. Returns (distances, indices), each (Q, n_neighbors);
-    unfilled slots are (+inf, -1).
+    memory bound. ``tile_coords`` may be stored bf16 or int8
+    (``kernels.quantize``); int8 tiles carry (C, 1) per-cluster
+    ``tile_scales`` and are dequantised inside the estimator on every path.
+    Returns (distances, indices), each (Q, n_neighbors); unfilled slots are
+    (+inf, -1).
     """
     if _on_tpu():
         return _ivf_probe.ivf_probe(
             queries, tile_coords, tile_ids, probes, n_neighbors, mode,
-            tiles_per_cluster=tiles_per_cluster,
+            tiles_per_cluster=tiles_per_cluster, tile_scales=tile_scales,
         )
     if force_kernel:
         return _ivf_probe.ivf_probe(
             queries, tile_coords, tile_ids, probes, n_neighbors, mode,
-            tiles_per_cluster=tiles_per_cluster, interpret=True,
+            tiles_per_cluster=tiles_per_cluster, tile_scales=tile_scales,
+            interpret=True,
         )
     return _ivf_probe.ivf_probe_scan(
         queries, tile_coords, tile_ids, probes, n_neighbors, mode,
-        tiles_per_cluster=tiles_per_cluster,
+        tiles_per_cluster=tiles_per_cluster, tile_scales=tile_scales,
     )
 
 

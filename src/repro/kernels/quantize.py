@@ -1,0 +1,129 @@
+"""Storage-dtype subsystem for index tiles: bf16 casts and symmetric int8.
+
+The paper's point that apex coordinates carry little information per axis at
+low target dimension k is exactly why the *serving index* is the right place
+to spend fewer bits per coordinate: the (N, k) / (C*T, tile_rows, k) resident
+arrays dominate index memory and scan bandwidth, while the estimator math
+(``kernels.scoring``) keeps accumulating in float32 regardless of how the
+tiles are stored. Three storage modes:
+
+  float32   the identity — what every index used before this subsystem;
+  bfloat16  a plain cast (same exponent range as f32, 8-bit mantissa): half
+            the bytes, no scale state, exact for values that are already
+            bf16-representable;
+  int8      symmetric linear quantisation ``v ~= q * s`` with ``q`` in
+            [-127, 127] and a shared positive scale ``s = absmax / 127``
+            per *group* — per index row for the flat layout (robust to the
+            far-sentinel dead rows of the mutable flat index), per cluster
+            for the IVF tile layout (cluster membership is decided by the
+            *global* coarse quantizer, so the scales — and with them the
+            quantised values — are identical for any shard count or tile
+            repacking; that is what keeps quantised snapshots bit-identical
+            across device counts).
+
+Dequantisation is fused into the probe kernels (``scoring.estimate_tile`` /
+``estimate_rows`` multiply the tile by its scale in-register right after the
+VMEM load), so the f32 form of a tile never exists outside the compute units
+and DMA traffic drops with the storage width.
+
+Everything here is host-side numpy: quantisation happens on the control
+plane (build / upsert / compact / checkpoint load), never on the query path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+try:  # the bf16 numpy dtype ships with jax via ml_dtypes
+    import ml_dtypes
+
+    BFLOAT16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes is a jax dependency
+    BFLOAT16 = None
+
+#: accepted values of the ``storage=`` knob, in decreasing width
+STORAGE_DTYPES = ("float32", "bfloat16", "int8")
+
+#: symmetric int8 quantisation range (-128 is never produced)
+INT8_MAX = 127.0
+
+#: scale floor — an all-zero group quantises to zeros with a harmless
+#: positive scale instead of dividing by zero
+_SCALE_FLOOR = 1e-30
+
+
+def check_storage(storage: str) -> str:
+    if storage not in STORAGE_DTYPES:
+        raise ValueError(
+            f"storage must be one of {STORAGE_DTYPES}, got {storage!r}")
+    if storage == "bfloat16" and BFLOAT16 is None:  # pragma: no cover
+        raise ValueError("bfloat16 storage needs the ml_dtypes package")
+    return storage
+
+
+def np_dtype(storage: str):
+    """The numpy dtype index values are resident in under ``storage``."""
+    check_storage(storage)
+    return {"float32": np.dtype(np.float32), "bfloat16": BFLOAT16,
+            "int8": np.dtype(np.int8)}[storage]
+
+
+def symmetric_scales(absmax: np.ndarray) -> np.ndarray:
+    """Per-group scales ``s = max(absmax, floor) / 127`` as float32."""
+    return (np.maximum(np.asarray(absmax, np.float32), _SCALE_FLOOR)
+            / INT8_MAX).astype(np.float32)
+
+
+def quantize(x: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    """Symmetric int8 quantisation of ``x`` with broadcastable ``scales``.
+
+    The group's absmax element lands exactly on +-127 (round of exactly
+    127.0), which pins the scale: re-deriving scales from the dequantised
+    values reproduces them, so dequantise -> requantise round-trips are
+    lossless for untouched groups.
+    """
+    q = np.rint(np.asarray(x, np.float32) / np.asarray(scales, np.float32))
+    return np.clip(q, -INT8_MAX, INT8_MAX).astype(np.int8)
+
+
+def dequantize(values: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    """f32 reconstruction ``q * s`` (broadcastable scales)."""
+    return (np.asarray(values, np.float32)
+            * np.asarray(scales, np.float32)).astype(np.float32)
+
+
+def row_scales(x: np.ndarray) -> np.ndarray:
+    """(N, 1) per-row scales of a flat (N, k) coordinate array."""
+    return symmetric_scales(np.abs(np.asarray(x, np.float32)).max(
+        axis=-1, keepdims=True))
+
+
+def cluster_scales(
+    coords: np.ndarray, assign: np.ndarray, n_clusters: int
+) -> np.ndarray:
+    """(C, 1) per-cluster scales from member coords and their assignment.
+
+    Computed over *all* members of each cluster before any shard split or
+    tile packing — the scale depends only on the (global) assignment, never
+    on layout, which is the invariant the reshard-on-load path relies on.
+    """
+    absmax = np.zeros(n_clusters, np.float32)
+    if len(assign):
+        per_row = np.abs(np.asarray(coords, np.float32)).max(axis=-1)
+        np.maximum.at(absmax, np.asarray(assign, np.int64), per_row)
+    return symmetric_scales(absmax)[:, None]
+
+
+def encode_rows(
+    x: np.ndarray, storage: str
+) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Encode a flat (N, k) f32 array: ``(values, row scales or None)``."""
+    check_storage(storage)
+    x = np.asarray(x, np.float32)
+    if storage == "float32":
+        return x, None
+    if storage == "bfloat16":
+        return x.astype(BFLOAT16), None
+    s = row_scales(x)
+    return quantize(x, s), s

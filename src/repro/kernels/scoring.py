@@ -14,10 +14,17 @@ their jnp scan fallbacks) cannot drift apart numerically. ``estimate_tile``
 operates on lane-padded 2D tiles as seen inside a Pallas kernel body;
 ``estimate_rows`` is the batched-gather variant used by the IVF scan fallback
 where every query gathers its *own* (rows, k) tile.
+
+Both accept an optional ``scale`` for quantised index tiles
+(``kernels.quantize``): the tile is multiplied by its symmetric int8 scale
+in-register, immediately after the cast to f32 — the dequantised tile never
+exists outside the kernel body, so VMEM/DMA traffic stays at the storage
+width while every norm/matmul keeps accumulating in float32. bf16 tiles need
+no scale at all: the existing ``astype(float32)`` is their dequantisation.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,13 +35,20 @@ Array = jax.Array
 MODE_IDS = {"zen": 0, "lwb": 1, "upb": 2}
 
 
-def estimate_tile(q: Array, x: Array, *, true_k: int, mode: int) -> Array:
+def estimate_tile(
+    q: Array, x: Array, *, true_k: int, mode: int,
+    scale: Optional[Array] = None,
+) -> Array:
     """Fused estimator distances for one (bq, kp) x (bn, kp) tile, f32.
 
     ``kp`` may be lane-padded beyond the true coordinate width ``true_k``;
     padding columns and the altitude column are masked in-register. ``mode``
-    is the static id from :data:`MODE_IDS`.
+    is the static id from :data:`MODE_IDS`. ``scale`` (scalar or (bn, 1),
+    broadcastable over ``x``) dequantises an int8 tile on the fly; ``x``
+    must already be cast to f32 by the caller in that case.
     """
+    if scale is not None:
+        x = x * scale
     kp = q.shape[1]
     col = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1)
     keep = (col < true_k - 1).astype(jnp.float32)  # mask altitude + padding
@@ -59,13 +73,19 @@ def estimate_tile(q: Array, x: Array, *, true_k: int, mode: int) -> Array:
     return jnp.sqrt(jnp.maximum(z2, 0.0))
 
 
-def estimate_rows(q: Array, blk: Array, *, mode: int) -> Array:
+def estimate_rows(
+    q: Array, blk: Array, *, mode: int, scale: Optional[Array] = None
+) -> Array:
     """Estimator distances between queries (Q, k) and per-query row tiles
     (Q, R, k) — the gathered-inverted-list shape of the IVF scan fallback.
 
     Unpadded widths (no lane masking); returns (Q, R) in the accumulation
-    dtype of ``q``.
+    dtype of ``q``. ``scale`` (broadcastable over ``blk``, e.g. the
+    (Q, 1, 1) per-cluster scales of the gathered tiles) dequantises int8
+    tiles in place; ``blk`` must already be in the dtype of ``q`` then.
     """
+    if scale is not None:
+        blk = blk * scale
     qn = jnp.sum(q * q, axis=1, keepdims=True)  # (Q, 1)
     xn = jnp.sum(blk * blk, axis=-1)  # (Q, R)
     dot = jnp.einsum(

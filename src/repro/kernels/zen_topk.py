@@ -26,7 +26,7 @@ only one chunk of distances live, giving the same O(chunk) memory bound.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,16 +44,19 @@ Array = jax.Array
 def _topk_kernel(
     q_ref,
     x_ref,
-    od_ref,
-    oi_ref,
-    bd_ref,
-    bi_ref,
-    *,
+    *rest,
     true_k: int,
     n_index: int,
     n_index_blocks: int,
     mode: int,
+    has_scale: bool,
 ):
+    # with quantised storage a (bn, 1) per-row scale block rides along
+    if has_scale:
+        s_ref, od_ref, oi_ref, bd_ref, bi_ref = rest
+    else:
+        od_ref, oi_ref, bd_ref, bi_ref = rest
+        s_ref = None
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -63,7 +66,9 @@ def _topk_kernel(
 
     q = q_ref[...].astype(jnp.float32)  # (bq, kp)
     x = x_ref[...].astype(jnp.float32)  # (bn, kp)
-    d = _estimate_tile(q, x, true_k=true_k, mode=mode)  # (bq, bn)
+    scale = s_ref[...] if has_scale else None  # (bn, 1) dequant factors
+    d = _estimate_tile(
+        q, x, true_k=true_k, mode=mode, scale=scale)  # (bq, bn)
 
     bn = x.shape[0]
     ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
@@ -90,11 +95,17 @@ def zen_topk(
     n_neighbors: int = 10,
     mode: str = "zen",
     *,
+    scales: Optional[Array] = None,
     block_q: int = 256,
     block_n: int = 512,
     interpret: bool = False,
 ) -> Tuple[Array, Array]:
     """Streaming top-k under an estimator: (Q, k) x (N, k) -> (Q, n), (Q, n).
+
+    ``index`` may be stored quantised (bf16: just pass the narrow array;
+    int8: also pass the (N, 1) per-row ``scales``) — the tile is dequantised
+    in-register right after the VMEM load, so the f32 index never exists and
+    DMA traffic stays at the storage width.
 
     Returns (distances f32, indices int32), each (Q, n_neighbors), rows sorted
     ascending by distance. Never materialises a (Q, N) matrix.
@@ -112,6 +123,19 @@ def zen_topk(
     Xpad = jnp.pad(index, ((0, Np - n), (0, Kp - kdim)))
     n_index_blocks = Np // bn
 
+    in_specs = [
+        pl.BlockSpec((bq, Kp), lambda i, j: (i, 0)),
+        pl.BlockSpec((bn, Kp), lambda i, j: (j, 0)),
+    ]
+    operands = [Qpad, Xpad]
+    if scales is not None:
+        assert scales.shape == (n, 1), (scales.shape, n)
+        # padded rows get scale 0: they dequantise to the origin and are
+        # masked by the id bound below anyway
+        operands.append(jnp.pad(scales.astype(jnp.float32),
+                                ((0, Np - n), (0, 0))))
+        in_specs.append(pl.BlockSpec((bn, 1), lambda i, j: (j, 0)))
+
     out_d, out_i = pl.pallas_call(
         functools.partial(
             _topk_kernel,
@@ -119,12 +143,10 @@ def zen_topk(
             n_index=n,
             n_index_blocks=n_index_blocks,
             mode=_MODE[mode],
+            has_scale=scales is not None,
         ),
         grid=(Qp // bq, n_index_blocks),
-        in_specs=[
-            pl.BlockSpec((bq, Kp), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, Kp), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bq, kw), lambda i, j: (i, 0)),
             pl.BlockSpec((bq, kw), lambda i, j: (i, 0)),
@@ -142,7 +164,7 @@ def zen_topk(
         ),
         interpret=interpret,
         name="nsimplex_zen_topk",
-    )(Qpad, Xpad)
+    )(*operands)
     return out_d[:q, :n_neighbors], out_i[:q, :n_neighbors]
 
 
@@ -155,6 +177,7 @@ def zen_topk_scan(
     n_neighbors: int = 10,
     mode: str = "zen",
     *,
+    scales: Optional[Array] = None,
     chunk: int = 4096,
 ) -> Tuple[Array, Array]:
     """Bounded-memory jnp fallback: fori_loop of dynamic index slices.
@@ -163,7 +186,8 @@ def zen_topk_scan(
     running best — flat in index size, matching the kernel's memory bound.
     The index is sliced in place (no padded copy): the final chunk is clamped
     back to ``n - chunk`` and its already-visited rows masked out, so no
-    O(N) temporary is ever allocated.
+    O(N) temporary is ever allocated. ``scales`` (N, 1) dequantises an int8
+    index chunk-by-chunk (same contract as :func:`zen_topk`).
     """
     q, kdim = queries.shape
     n = index.shape[0]
@@ -183,6 +207,9 @@ def zen_topk_scan(
         start = jnp.minimum(i * chunk, n - chunk)  # clamp the tail chunk
         blk = jax.lax.dynamic_slice_in_dim(index, start, chunk, axis=0)
         blk = blk.astype(acc)
+        if scales is not None:  # dequantise one chunk at a time
+            blk = blk * jax.lax.dynamic_slice_in_dim(
+                scales, start, chunk, axis=0).astype(acc)
         xn = jnp.sum(blk * blk, axis=1)  # (chunk,)
         dot = jnp.matmul(
             queries[:, :-1], blk[:, :-1].T, preferred_element_type=acc

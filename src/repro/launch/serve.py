@@ -60,6 +60,7 @@ from repro.core import zen as zen_lib
 from repro.core.projection import NSimplexTransform, select_references
 from repro.core.simplex import BaseSimplex
 from repro.distributed import retrieval as retrieval_lib
+from repro.kernels import quantize as quant
 from repro.kernels.scoring import mask_invalid
 
 Array = jax.Array
@@ -99,6 +100,15 @@ class ZenIndex:
                  drives ``needs_compact`` (growth slack is *not* counted:
                  compacting it away would defeat the grow-in-quanta
                  recompile amortisation).
+      storage:   resident dtype of the flat ``coords``: "float32",
+                 "bfloat16" or "int8" (``kernels.quantize``); the search
+                 kernels dequantise in register, accumulation stays f32.
+      coord_scales: (cap, 1) f32 per-row symmetric int8 scales, or ``None``
+                 for f32/bf16 storage. Per *row* — a scale rides with its
+                 row through mutation, compaction and resharding, so
+                 untouched rows are never requantised, and the far-sentinel
+                 dead rows get their own (huge) scale without poisoning
+                 live neighbours.
     """
 
     transform: NSimplexTransform
@@ -109,6 +119,8 @@ class ZenIndex:
     ivf: Optional[object] = None   # IVFZenIndex / ShardedIVFZenIndex
     row_ids: Optional[Array] = None  # (cap,) int32 external ids, -1 = dead
     n_deleted: int = 0  # flat tombstones since the last build/compact
+    storage: str = "float32"  # resident dtype of the flat coords
+    coord_scales: Optional[Array] = None  # (cap, 1) int8 dequant scales
 
     @property
     def size(self) -> int:
@@ -119,6 +131,38 @@ class ZenIndex:
             return self.n_valid
         return self.coords.shape[0]
 
+    # -- storage helpers (flat path) ----------------------------------------
+    def _host_coord_state(self):
+        """Host copies of the raw coord values (+ per-row scales or None)."""
+        vals = np.asarray(self.coords).copy()
+        scl = (None if self.coord_scales is None
+               else np.asarray(self.coord_scales, np.float32).copy())
+        return vals, scl
+
+    @staticmethod
+    def _write_rows(vals, scl, where, new_f32):
+        """Write f32 rows into the raw storage arrays at ``where``.
+
+        int8 rows are quantised with their own fresh per-row scales;
+        f32/bf16 rows are plain (casting) assignments. Only the written
+        rows change — every other row keeps its exact stored bytes.
+        """
+        if scl is None:
+            vals[where] = new_f32
+        else:
+            v, s = quant.encode_rows(new_f32, "int8")
+            vals[where] = v
+            scl[where] = s
+
+    @staticmethod
+    def _kill_rows(vals, scl, where):
+        """Stamp the far-sentinel dead-row pattern at ``where``."""
+        if scl is None:
+            vals[where] = _DEAD_COORD
+        else:  # 127 * (sentinel / 127) dequantises to the exact sentinel
+            vals[where] = np.int8(127)
+            scl[where] = np.float32(_DEAD_COORD / 127.0)
+
     # -- mutation (control plane; returns a new ZenIndex) -------------------
     def delete(self, ids: Sequence[int]) -> "ZenIndex":
         """Tombstone the given external ids; unknown ids are ignored."""
@@ -127,18 +171,19 @@ class ZenIndex:
             return dataclasses.replace(self, ivf=self.ivf.delete(ids))
         self._check_mutable()
         row_ids = self._host_row_ids()
-        coords = np.asarray(self.coords).copy()
+        coords, scl = self._host_coord_state()
         mask = (row_ids >= 0) & np.isin(row_ids, np.asarray(ids, np.int64))
         if not mask.any():
             return self
         row_ids[mask] = -1
-        coords[mask] = _DEAD_COORD
+        self._kill_rows(coords, scl, mask)
         return dataclasses.replace(
             self,
             coords=jnp.asarray(coords),
             row_ids=jnp.asarray(row_ids.astype(np.int32)),
             n_valid=self.size - int(mask.sum()),
             n_deleted=self.n_deleted + int(mask.sum()),
+            coord_scales=None if scl is None else jnp.asarray(scl),
         )
 
     def upsert(self, ids: Sequence[int], coords_new: Array) -> "ZenIndex":
@@ -170,13 +215,13 @@ class ZenIndex:
         ids_np, new = _dedupe_last_wins(ids_np, new)
 
         row_ids = self._host_row_ids()
-        coords = np.asarray(self.coords).copy()
+        coords, scl = self._host_coord_state()
         # replace rows whose external id already exists
         sorter = np.argsort(row_ids, kind="stable")
         pos = np.searchsorted(row_ids, ids_np, sorter=sorter)
         pos = np.clip(pos, 0, row_ids.size - 1)
         hit = row_ids[sorter[pos]] == ids_np
-        coords[sorter[pos[hit]]] = new[hit]
+        self._write_rows(coords, scl, sorter[pos[hit]], new[hit])
         ids_np, new = ids_np[~hit], new[~hit]
         n_live = self.size + int(ids_np.size)
         reclaimed = 0
@@ -189,19 +234,22 @@ class ZenIndex:
                 cap = row_ids.size
                 row_ids = np.concatenate(
                     [row_ids, np.full(grow, -1, np.int64)])
-                coords = np.concatenate(
-                    [coords,
-                     np.full((grow, coords.shape[1]), _DEAD_COORD,
-                             np.float32)])
+                dead = np.empty((grow, coords.shape[1]), coords.dtype)
+                coords = np.concatenate([coords, dead])
+                if scl is not None:
+                    scl = np.concatenate(
+                        [scl, np.empty((grow, 1), np.float32)])
+                self._kill_rows(coords, scl, slice(cap, cap + grow))
                 free = np.concatenate([free, cap + np.arange(deficit)])
             row_ids[free] = ids_np
-            coords[free] = new
+            self._write_rows(coords, scl, free, new)
         return dataclasses.replace(
             self,
             coords=jnp.asarray(coords),
             row_ids=jnp.asarray(row_ids.astype(np.int32)),
             n_valid=n_live,
             n_deleted=max(0, self.n_deleted - reclaimed),
+            coord_scales=None if scl is None else jnp.asarray(scl),
         )
 
     def compact(self, **kw) -> "ZenIndex":
@@ -221,10 +269,14 @@ class ZenIndex:
         live = row_ids >= 0
         return dataclasses.replace(
             self,
+            # per-row scales ride with their rows: slicing is the whole
+            # repack, no dequantise/requantise cycle
             coords=jnp.asarray(np.asarray(self.coords)[live]),
             row_ids=jnp.asarray(row_ids[live].astype(np.int32)),
             n_valid=int(live.sum()),
             n_deleted=0,
+            coord_scales=(None if self.coord_scales is None else
+                          jnp.asarray(np.asarray(self.coord_scales)[live])),
         )
 
     def needs_compact(self, **kw) -> bool:
@@ -275,6 +327,7 @@ def build_index(
     n_clusters: Optional[int] = None,
     tile_rows: int = 128,
     kmeans_iters: int = 15,
+    storage: str = "float32",
 ) -> ZenIndex:
     """Fit on the corpus (witness = corpus sample) and project every row.
 
@@ -284,14 +337,22 @@ def build_index(
     tiles so the server probes only a few clusters per query. With a
     ``mesh``, both variants shard rows (flat coordinates or inverted lists)
     over all mesh axes.
+
+    ``storage`` picks the resident dtype of the searchable coordinates —
+    "float32", "bfloat16" (half the bytes, plain cast) or "int8" (quarter
+    the bytes, symmetric scales: per row for the flat layout, per cluster
+    for IVF tiles). The projection, quantizer fit and query math all stay
+    f32; only what the probe kernels stream gets narrower.
     """
     if index not in ("flat", "ivf"):
         raise ValueError(f"index must be 'flat' or 'ivf', got {index!r}")
+    quant.check_storage(storage)
     key = key if key is not None else jax.random.PRNGKey(0)
     tr = select_references(corpus, k, key, metric=metric)
     coords = tr.transform(corpus)
     n = coords.shape[0]
     ivf = None
+    coord_scales = None
     if index == "ivf":
         from repro.index import IVFZenIndex, ShardedIVFZenIndex
 
@@ -302,16 +363,25 @@ def build_index(
         )
         ivf = builder(
             coords, n_clusters, tile_rows=tile_rows, n_iters=kmeans_iters,
-            key=jax.random.fold_in(key, 7),
+            key=jax.random.fold_in(key, 7), storage=storage,
         )
+    elif storage != "float32":
+        values, scales = quant.encode_rows(
+            np.asarray(coords, np.float32), storage)
+        coords = jnp.asarray(values)
+        coord_scales = None if scales is None else jnp.asarray(scales)
     n_valid = None
     if mesh is not None and ivf is None:
         # pad once to a shard-divisible row count so every query batch skips
         # the O(N) re-pad; the search masks rows >= n_valid
         coords, n_valid = retrieval_lib.shard_rows(coords, mesh=mesh)
+        if coord_scales is not None:
+            coord_scales, _ = retrieval_lib.shard_rows(coord_scales,
+                                                       mesh=mesh)
     return ZenIndex(transform=tr, coords=coords,
                     corpus=corpus if keep_corpus else None, mesh=mesh,
-                    n_valid=n_valid, ivf=ivf)
+                    n_valid=n_valid, ivf=ivf, storage=storage,
+                    coord_scales=coord_scales)
 
 
 class ZenServer:
@@ -373,6 +443,7 @@ class ZenServer:
                 n_neighbors=min(n_fetch, self.index.size), mode=self.mode,
                 mesh=self.index.mesh, chunk=self.chunk,
                 force_kernel=self.force_kernel, n_valid=self.index.n_valid,
+                scales=self.index.coord_scales,
             )
             d, ids = self._map_row_ids(d, ids)
         else:
@@ -381,6 +452,7 @@ class ZenServer:
                 n_neighbors=min(n_fetch, self.index.size), mode=self.mode,
                 chunk=self.chunk if self.index.coords.shape[0] > self.chunk
                 else 0,
+                scales=self.index.coord_scales,
                 force_kernel=self.force_kernel,
             )
             d, ids = self._map_row_ids(d, ids)
@@ -549,14 +621,23 @@ class ZenServer:
             arrays.update({f"ivf_{k}": v for k, v in ivf_arrays.items()})
             meta.update(ivf_meta)
         else:
+            # raw storage-dtype rows + their per-row scales: the quantised
+            # bytes round-trip untouched, any device count
             coords = retrieval_lib.host_rows(index.coords, index.n_valid) \
                 if index.mesh is not None else np.asarray(index.coords)
             row_ids = index._host_row_ids()[: coords.shape[0]]
             live = row_ids >= 0
             arrays.update(
-                coords=coords[live].astype(np.float32),
+                coords=coords[live],
                 row_ids=row_ids[live].astype(np.int32),
             )
+            if index.coord_scales is not None:
+                scales = retrieval_lib.host_rows(
+                    index.coord_scales, index.n_valid) \
+                    if index.mesh is not None \
+                    else np.asarray(index.coord_scales)
+                arrays["coord_scales"] = scales[live].astype(np.float32)
+            meta["storage"] = index.storage
         if index.corpus is not None:
             arrays["corpus"] = np.asarray(index.corpus)
         return index_io.save_state(
@@ -599,22 +680,28 @@ class ZenServer:
             members = (arrays["ivf_member_coords"],
                        arrays["ivf_member_ids"].astype(np.int64),
                        arrays["ivf_member_assign"].astype(np.int64))
+            storage = meta.get("storage", "float32")
+            scales = arrays.get("ivf_cluster_scales")
             if mesh is not None:
                 ivf = ShardedIVFZenIndex._from_members(
                     *members, jnp.asarray(arrays["ivf_centroids"]),
                     int(meta["n_clusters"]), int(meta["tile_rows"]),
-                    mesh=mesh)
+                    mesh=mesh, storage=storage, scales=scales)
             else:
                 coords_m, mids, massign = members
                 ivf = IVFZenIndex.from_members(
                     coords_m, mids, massign,
                     jnp.asarray(arrays["ivf_centroids"]),
-                    int(meta["n_clusters"]), int(meta["tile_rows"]))
+                    int(meta["n_clusters"]), int(meta["tile_rows"]),
+                    storage=storage, scales=scales)
             index = ZenIndex(transform=tr, coords=None, corpus=corpus,
-                             mesh=mesh, ivf=ivf)
+                             mesh=mesh, ivf=ivf, storage=storage)
         else:
             coords = jnp.asarray(arrays["coords"])
             row_ids = jnp.asarray(arrays["row_ids"].astype(np.int32))
+            storage = meta.get("storage", "float32")
+            coord_scales = (jnp.asarray(arrays["coord_scales"])
+                            if "coord_scales" in arrays else None)
             n_valid = None
             if mesh is not None:
                 coords, n_valid = retrieval_lib.shard_rows(coords, mesh=mesh)
@@ -622,8 +709,12 @@ class ZenServer:
                 if pad:  # shard-padding positions map to the dead id
                     row_ids = jnp.concatenate(
                         [row_ids, jnp.full((pad,), -1, jnp.int32)])
+                if coord_scales is not None:
+                    coord_scales, _ = retrieval_lib.shard_rows(
+                        coord_scales, mesh=mesh)
             index = ZenIndex(transform=tr, coords=coords, corpus=corpus,
-                             mesh=mesh, n_valid=n_valid, row_ids=row_ids)
+                             mesh=mesh, n_valid=n_valid, row_ids=row_ids,
+                             storage=storage, coord_scales=coord_scales)
         kw = dict(meta.get("server", {}))
         kw.update(server_kw)
         return cls(index, **kw)
@@ -643,6 +734,11 @@ def main() -> None:
     p.add_argument("--clusters", type=int, default=0,
                    help="IVF cluster count (0 = ~4*sqrt(N))")
     p.add_argument("--nprobe", type=int, default=8)
+    p.add_argument("--storage", default="float32",
+                   choices=list(quant.STORAGE_DTYPES),
+                   help="resident dtype of the searchable index tiles "
+                        "(bf16 halves, int8 quarters the coordinate bytes; "
+                        "estimator accumulation stays f32)")
     p.add_argument("--checkpoint", default=None, metavar="DIR",
                    help="restore the server from DIR if a snapshot exists "
                         "there, else build and save one (versioned, atomic)")
@@ -670,12 +766,14 @@ def main() -> None:
     else:
         index = build_index(corpus, args.k, metric=args.metric,
                             index=args.index,
-                            n_clusters=args.clusters or None)
+                            n_clusters=args.clusters or None,
+                            storage=args.storage)
         server = ZenServer(index, rerank_factor=args.rerank,
                            nprobe=args.nprobe)
         if args.checkpoint:
             print(f"saved snapshot to {server.save(args.checkpoint)}")
-    print(f"index: {index.size} x {args.k} (from dim {args.dim})"
+    print(f"index: {index.size} x {args.k} (from dim {args.dim}, "
+          f"storage={index.storage})"
           + (f"; ivf: {index.ivf.n_clusters} clusters, nprobe={args.nprobe}"
              if index.ivf is not None else ""))
 

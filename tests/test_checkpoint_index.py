@@ -69,6 +69,11 @@ def test_index_io_version_and_kind_rejection(tmp_path):
     _tamper(d, version=INDEX_FORMAT_VERSION + 1)
     with pytest.raises(CheckpointFormatError, match="version"):
         load_state(d)
+    # v1 snapshots (pre-quantisation: f32 arrays, no storage meta) are a
+    # strict subset of v2 and must keep loading
+    _tamper(d, version=1)
+    back, _ = load_state(d)
+    assert list(back) == ["a"]
     _tamper(d, version=INDEX_FORMAT_VERSION, format="something-else")
     with pytest.raises(CheckpointFormatError, match="format"):
         load_state(d)

@@ -1,0 +1,140 @@
+"""Property-based metric-law suite over the whole ``core/metrics`` registry.
+
+The entire Zen pipeline rests on one assumption: every registry metric is a
+*metric* on a Hilbert-embeddable space (paper Appendix A) — otherwise the
+base simplex construction, the apex projection and the Lwb <= d <= Upb
+bounds are meaningless. These properties are checked here for every
+registered metric over randomly sampled point sets:
+
+  * non-negativity        d(x, y) >= 0
+  * identity              d(x, x) == 0
+  * symmetry              d(x, y) == d(y, x)
+  * triangle inequality   d(x, z) <= d(x, y) + d(y, z), all sampled triples
+
+``sqeuclidean`` is registered as a convenience kernel, not a metric (it
+famously violates the triangle inequality); the registry's
+``hilbert_embeddable`` flag gates the triangle check, and a companion test
+pins the violation down so the flag can never silently rot.
+
+Runs under real ``hypothesis`` when installed, else the fixed-seed replay
+fallback (``tests/_hypothesis_fallback``).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: fixed-seed replay keeps the suite green
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import metrics as M
+
+jax.config.update("jax_enable_x64", True)
+
+#: every name the registry exposes — new metrics are covered automatically
+ALL_METRICS = sorted(M._REGISTRY)
+
+#: names whose pairwise fn satisfies the triangle inequality (true metrics)
+TRUE_METRICS = [n for n in ALL_METRICS if M.get_metric(n).hilbert_embeddable]
+
+
+def _sample_points(name: str, seed: int, n: int, m: int) -> jnp.ndarray:
+    """Points in the metric's natural domain (f64 for tight tolerances)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, m))
+    if M.get_metric(name).normalize is M.l1_normalize:
+        # probability-simplex metrics: non-negative with a few exact zeros,
+        # exercising the 0 log 0 / 0-over-0 conventions; every row keeps at
+        # least one positive mass (the all-zero vector is out of domain)
+        X = np.abs(X)
+        X[rng.random(X.shape) < 0.1] = 0.0
+        X[np.arange(n), rng.integers(0, m, size=n)] = 1.0
+    return jnp.asarray(X, jnp.float64)
+
+
+def _pairwise(name: str, X: jnp.ndarray) -> np.ndarray:
+    return np.asarray(M.self_pairwise(name, X), np.float64)
+
+
+@pytest.mark.parametrize("name", ALL_METRICS)
+def test_non_negativity_and_identity(name):
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 24),
+           m=st.integers(2, 48))
+    def prop(seed, n, m):
+        D = _pairwise(name, _sample_points(name, seed, n, m))
+        assert np.isfinite(D).all(), f"{name}: non-finite distances"
+        assert (D >= 0.0).all(), f"{name}: negative distance {D.min()}"
+        assert np.abs(np.diag(D)).max() < 1e-7, (
+            f"{name}: d(x, x) = {np.abs(np.diag(D)).max()}")
+
+    prop()
+
+
+@pytest.mark.parametrize("name", ALL_METRICS)
+def test_symmetry(name):
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 24),
+           m=st.integers(2, 48))
+    def prop(seed, n, m):
+        D = _pairwise(name, _sample_points(name, seed, n, m))
+        assert np.abs(D - D.T).max() < 1e-9, (
+            f"{name}: asymmetry {np.abs(D - D.T).max()}")
+
+    prop()
+
+
+@pytest.mark.parametrize("name", TRUE_METRICS)
+def test_triangle_inequality(name):
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 20),
+           m=st.integers(2, 48))
+    def prop(seed, n, m):
+        D = _pairwise(name, _sample_points(name, seed, n, m))
+        # all (i, j, k) triples at once: D[i, k] <= D[i, j] + D[j, k]
+        lhs = D[:, None, :]                      # (i, 1, k)
+        rhs = D[:, :, None] + D[None, :, :]      # (i, j) + (j, k)
+        slack = (lhs - rhs).max()
+        tol = 1e-9 * max(1.0, float(D.max()))
+        assert slack <= tol, (
+            f"{name}: triangle violated by {slack} (tol {tol})")
+
+    prop()
+
+
+def test_sqeuclidean_is_flagged_non_metric():
+    """The registry's one non-metric really does break the triangle law —
+    if this stops failing, the ``hilbert_embeddable`` gate above is stale."""
+    m = M.get_metric("sqeuclidean")
+    assert not m.hilbert_embeddable
+    X = jnp.asarray([[0.0], [1.0], [2.0]], jnp.float64)  # collinear
+    D = np.asarray(m.pdist(X, X))
+    # d(0, 2) = 4 > d(0, 1) + d(1, 2) = 2
+    assert D[0, 2] > D[0, 1] + D[1, 2]
+
+
+@pytest.mark.parametrize("name", TRUE_METRICS)
+def test_distinct_points_have_positive_distance(name):
+    """d(x, y) > 0 for clearly distinct points (no metric collapses)."""
+    X = _sample_points(name, 7, 12, 16)
+    D = _pairwise(name, X)
+    off = D.copy()
+    np.fill_diagonal(off, np.inf)
+    assert off.min() > 0.0, f"{name}: distinct points at distance 0"
+
+
+def test_qform_matches_cholesky_euclidean():
+    """The registry qform metric is Euclidean after the chol(M) transform —
+    the constructive proof of its Hilbert embeddability."""
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.normal(size=(20, 12)), jnp.float64)
+    Mmat = M.default_qform_matrix(12).astype(jnp.float64)
+    L = np.linalg.cholesky(np.asarray(Mmat))
+    want = np.asarray(M.euclidean_pdist(X @ L, X @ L))
+    got = np.asarray(M.self_pairwise("qform", X))
+    # sqrt amplifies the d^2 cancellation noise of either formula to
+    # ~sqrt(eps * ||x||^2) — compare at that scale, not machine eps
+    np.testing.assert_allclose(got, want, atol=1e-6)

@@ -1,0 +1,360 @@
+"""Quantised index storage (bf16 / int8): parity vs fp32 across every
+retrieval path, scale round-trips, and the checkpoint contract.
+
+Protocol: ground truth is the exact f32 streaming scan over the same
+estimator; a quantised path must land within 0.02 recall@10 of the f32 path
+at matched settings (the ISSUE acceptance bar). bf16 round-trips of tiles
+that are already bf16-representable must be *exact* — a plain cast cannot
+lose bits it can represent. int8 per-row / per-cluster scales must survive
+save -> load byte-for-byte.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quality import recall_at_k
+from repro.index import IVFZenIndex
+from repro.kernels import ops
+from repro.kernels import quantize as quant
+from repro.kernels.zen_topk import zen_topk, zen_topk_scan
+
+RECALL_BAR = 0.02  # quantised recall@10 within this of fp32, same settings
+
+
+def _coords(seed, n, k):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, k)).astype(np.float32)
+    X[:, -1] = np.abs(X[:, -1])
+    return jnp.asarray(X)
+
+
+def _queries(seed, X, q, noise=0.25):
+    rng = np.random.default_rng(seed)
+    Q = np.asarray(X[:q]) + noise * rng.normal(size=(q, X.shape[1]))
+    return jnp.asarray(Q.astype(np.float32))
+
+
+# -- quantize module unit behaviour -------------------------------------------
+
+
+def test_encode_rows_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64, 16)).astype(np.float32)
+    vals, scales = quant.encode_rows(x, "int8")
+    assert vals.dtype == np.int8 and scales.shape == (64, 1)
+    back = quant.dequantize(vals, scales)
+    # symmetric quantisation error is at most half a step per element
+    assert np.abs(back - x).max() <= (scales / 2 + 1e-7).max()
+    # the absmax element of every row pins +-127, so requantising the
+    # dequantised values with fresh scales is lossless
+    vals2, scales2 = quant.encode_rows(back, "int8")
+    assert np.array_equal(vals, vals2)
+    np.testing.assert_allclose(scales, scales2, rtol=1e-6)
+
+
+def test_encode_rows_zero_and_sentinel_rows():
+    x = np.zeros((3, 8), np.float32)
+    x[1] = 1.0e15  # the flat dead-row sentinel
+    vals, scales = quant.encode_rows(x, "int8")
+    back = quant.dequantize(vals, scales)
+    assert (back[0] == 0).all()  # all-zero row stays exactly zero
+    np.testing.assert_allclose(back[1], 1.0e15, rtol=1e-6)
+
+
+def test_cluster_scales_ignore_layout():
+    rng = np.random.default_rng(1)
+    coords = rng.normal(size=(200, 8)).astype(np.float32)
+    assign = rng.integers(0, 5, size=200)
+    s1 = quant.cluster_scales(coords, assign, 5)
+    perm = rng.permutation(200)  # any member order gives the same scales
+    s2 = quant.cluster_scales(coords[perm], assign[perm], 5)
+    np.testing.assert_array_equal(s1, s2)
+
+
+def test_check_storage_rejects_unknown():
+    with pytest.raises(ValueError, match="storage"):
+        quant.check_storage("float16")
+
+
+# -- flat streaming scan + kernel ---------------------------------------------
+
+
+@pytest.mark.parametrize("storage", ["bfloat16", "int8"])
+def test_flat_scan_recall_parity(storage):
+    X = _coords(0, 2048, 16)
+    Q = _queries(1, X, 16)
+    truth = np.asarray(zen_topk_scan(Q, X, 10, "zen")[1])
+    vals, scales = quant.encode_rows(np.asarray(X), storage)
+    got = zen_topk_scan(
+        Q, jnp.asarray(vals), 10, "zen",
+        scales=None if scales is None else jnp.asarray(scales))[1]
+    rec = recall_at_k(truth, np.asarray(got))
+    assert rec >= 1.0 - RECALL_BAR, f"{storage}: recall {rec}"
+
+
+@pytest.mark.parametrize("storage", ["bfloat16", "int8"])
+@pytest.mark.parametrize("mode", ["zen", "lwb", "upb"])
+def test_flat_kernel_matches_scan_quantized(storage, mode):
+    """The Pallas kernel (interpret) and the fori_loop fallback must agree
+    on the *same* quantised tiles — identical dequant, identical merge."""
+    X = _coords(2, 700, 12)  # padded tail: 700 % 128 != 0
+    Q = _queries(3, X, 9)
+    vals, scales = quant.encode_rows(np.asarray(X), storage)
+    vj = jnp.asarray(vals)
+    sj = None if scales is None else jnp.asarray(scales)
+    d0, i0 = zen_topk_scan(Q, vj, 7, mode, scales=sj)
+    d1, i1 = zen_topk(Q, vj, 7, mode, scales=sj, interpret=True)
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_dispatch_passes_scales():
+    X = _coords(4, 512, 8)
+    Q = _queries(5, X, 4)
+    vals, scales = quant.encode_rows(np.asarray(X), "int8")
+    d0, i0 = ops.zen_topk(Q, jnp.asarray(vals), 5,
+                          scales=jnp.asarray(scales))
+    d1, i1 = ops.zen_topk(Q, jnp.asarray(vals), 5,
+                          scales=jnp.asarray(scales), force_kernel=True)
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- IVF probe ----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("storage", ["bfloat16", "int8"])
+def test_ivf_probe_recall_parity(storage):
+    X = _coords(6, 4096, 16)
+    Q = _queries(7, X, 16)
+    truth = np.asarray(zen_topk_scan(Q, X, 10, "zen")[1])
+    f32 = IVFZenIndex.build(X, 32, key=jax.random.PRNGKey(0))
+    qidx = IVFZenIndex.build(X, 32, key=jax.random.PRNGKey(0),
+                             storage=storage)
+    assert str(qidx.tile_coords.dtype) == storage
+    for nprobe in (4, 8):
+        rec_f32 = recall_at_k(
+            truth, np.asarray(f32.search(Q, 10, nprobe=nprobe)[1]))
+        rec_q = recall_at_k(
+            truth, np.asarray(qidx.search(Q, 10, nprobe=nprobe)[1]))
+        assert abs(rec_f32 - rec_q) <= RECALL_BAR, (
+            f"{storage} nprobe={nprobe}: {rec_q} vs f32 {rec_f32}")
+
+
+@pytest.mark.parametrize("storage", ["bfloat16", "int8"])
+def test_ivf_kernel_matches_scan_quantized(storage):
+    X = _coords(8, 1500, 12)
+    Q = _queries(9, X, 6)
+    qidx = IVFZenIndex.build(X, 12, key=jax.random.PRNGKey(1),
+                             storage=storage)
+    d0, i0 = qidx.search(Q, 8, nprobe=5)
+    d1, i1 = qidx.search(Q, 8, nprobe=5, force_kernel=True)
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ivf_full_probe_int8_near_exact():
+    """nprobe = C scans everything: int8 ids may only differ from f32 where
+    the quantisation step flips a genuine near-tie."""
+    X = _coords(10, 1024, 16)
+    Q = _queries(11, X, 8)
+    f32 = IVFZenIndex.build(X, 8, key=jax.random.PRNGKey(2))
+    q8 = IVFZenIndex.build(X, 8, key=jax.random.PRNGKey(2), storage="int8")
+    i0 = np.asarray(f32.search(Q, 10, nprobe=8)[1])
+    i1 = np.asarray(q8.search(Q, 10, nprobe=8)[1])
+    assert recall_at_k(i0, i1) >= 1.0 - RECALL_BAR
+
+
+# -- bf16 exactness -----------------------------------------------------------
+
+
+def test_bf16_exact_on_representable_tiles():
+    """Tiles whose values are already bf16-representable lose nothing: the
+    bf16 index returns bit-identical distances to the f32 index."""
+    rng = np.random.default_rng(12)
+    X = rng.normal(size=(1024, 12)).astype(np.float32)
+    X[:, -1] = np.abs(X[:, -1])
+    X = X.astype(quant.np_dtype("bfloat16")).astype(np.float32)  # snap
+    Xj = jnp.asarray(X)
+    Q = _queries(13, Xj, 8)
+    d0, i0 = zen_topk_scan(Q, Xj, 10, "zen")
+    vals, _ = quant.encode_rows(X, "bfloat16")
+    assert np.asarray(vals.astype(np.float32) == X).all()
+    d1, i1 = zen_topk_scan(Q, jnp.asarray(vals), 10, "zen")
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+    f32 = IVFZenIndex.build(Xj, 10, key=jax.random.PRNGKey(3))
+    bf = IVFZenIndex.build(Xj, 10, key=jax.random.PRNGKey(3),
+                           storage="bfloat16")
+    d2, i2 = f32.search(Q, 10, nprobe=10)
+    d3, i3 = bf.search(Q, 10, nprobe=10)
+    assert (np.asarray(i2) == np.asarray(i3)).all()
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(d3))
+
+
+# -- persistence --------------------------------------------------------------
+
+
+@pytest.mark.parametrize("storage", ["bfloat16", "int8"])
+def test_ivf_quantized_save_load_bit_identical(storage, tmp_path):
+    X = _coords(14, 2000, 12)
+    Q = _queries(15, X, 6)
+    qidx = IVFZenIndex.build(X, 16, key=jax.random.PRNGKey(4),
+                             storage=storage)
+    d0, i0 = qidx.search(Q, 9, nprobe=6)
+    path = qidx.save(str(tmp_path / "snap"))
+    back = IVFZenIndex.load(path)
+    assert back.storage == storage
+    assert str(back.tile_coords.dtype) == storage
+    if storage == "int8":
+        np.testing.assert_array_equal(
+            np.asarray(back.tile_scales), np.asarray(qidx.tile_scales))
+    np.testing.assert_array_equal(
+        np.asarray(back.tile_coords), np.asarray(qidx.tile_coords))
+    d1, i1 = back.search(Q, 9, nprobe=6)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_int8_scales_survive_churn_and_reload(tmp_path):
+    X = _coords(16, 1500, 10)
+    qidx = IVFZenIndex.build(X, 12, key=jax.random.PRNGKey(5),
+                             storage="int8")
+    qidx = qidx.delete(np.arange(100))
+    qidx = qidx.upsert(np.arange(1500, 1600), _coords(17, 100, 10))
+    assert qidx.tile_scales is not None
+    path = qidx.save(str(tmp_path / "snap"))
+    back = IVFZenIndex.load(path)
+    Q = _queries(18, X, 5)
+    np.testing.assert_array_equal(
+        np.asarray(qidx.search(Q, 8, nprobe=12)[1]),
+        np.asarray(back.search(Q, 8, nprobe=12)[1]))
+
+
+@pytest.mark.parametrize("storage", ["bfloat16", "int8"])
+def test_server_quantized_flat_roundtrip(storage, tmp_path):
+    from repro.data import synthetic as syn
+    from repro.launch.serve import ZenServer, build_index
+
+    key = jax.random.PRNGKey(0)
+    # f32 corpus regardless of ambient x64: snapshots persist the fitted
+    # references as f32, so an f64-fitted transform reloads at reduced
+    # precision (a pre-existing format property, not a storage one)
+    corpus = syn.manifold_space(key, 3000, 64, 8).astype(jnp.float32)
+    index = build_index(corpus, 10, storage=storage)
+    assert str(index.coords.dtype) == storage
+    server = ZenServer(index, chunk=512)
+    q = syn.manifold_space(
+        jax.random.fold_in(key, 1), 8, 64, 8).astype(jnp.float32)
+    server.upsert(np.arange(3000, 3040), corpus[:40])
+    server.delete(np.arange(10))
+    d0, i0 = server.query(q, 10)
+    server.save(str(tmp_path / "srv"))
+    back = ZenServer.load(str(tmp_path / "srv"), chunk=512)
+    assert back.index.storage == storage
+    d1, i1 = back.query(q, 10)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_flat_compact_preserves_quantized_bytes():
+    """Per-row scales ride with their rows: compaction is a pure slice,
+    live rows keep their exact stored bytes."""
+    from repro.data import synthetic as syn
+    from repro.launch.serve import ZenServer, build_index
+
+    key = jax.random.PRNGKey(1)
+    corpus = syn.manifold_space(key, 1000, 32, 4)
+    server = ZenServer(build_index(corpus, 8, storage="int8"), chunk=256)
+    server.delete(np.arange(300))
+    vals_before = np.asarray(server.index.coords)
+    ids_before = np.asarray(server.index.row_ids)
+    server.compact()
+    live = ids_before >= 0
+    np.testing.assert_array_equal(
+        np.asarray(server.index.coords), vals_before[live])
+    q = syn.manifold_space(jax.random.fold_in(key, 2), 4, 32, 4)
+    d, ids = server.query(q, 5)
+    assert (np.asarray(ids) >= 300).all()
+
+
+# -- sharded (4 host devices, subprocess) -------------------------------------
+
+_SHARDED_QUANT_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import tempfile
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core.quality import recall_at_k
+    from repro.distributed.retrieval import sharded_knn_search
+    from repro.index import IVFZenIndex, ShardedIVFZenIndex
+    from repro.kernels import quantize as quant
+    from repro.kernels.zen_topk import zen_topk_scan
+
+    mesh = Mesh(np.array(jax.devices()[:4]), ("shard",))
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(4000, 16)).astype(np.float32)
+    X[:, -1] = np.abs(X[:, -1])
+    Xj = jnp.asarray(X)
+    Q = jnp.asarray(
+        (X[:8] + 0.25 * rng.normal(size=(8, 16))).astype(np.float32))
+    truth = np.asarray(zen_topk_scan(Q, Xj, 10, "zen")[1])
+
+    # flat: sharded int8 search == single-host int8 search, recall within bar
+    vals, scales = quant.encode_rows(X, "int8")
+    vj, sj = jnp.asarray(vals), jnp.asarray(scales)
+    d0, i0 = zen_topk_scan(Q, vj, 10, "zen", scales=sj)
+    d1, i1 = sharded_knn_search(Q, vj, 10, "zen", mesh=mesh, scales=sj)
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+    assert np.allclose(np.asarray(d0), np.asarray(d1), atol=1e-5)
+    assert recall_at_k(truth, np.asarray(i1)) >= 0.98
+
+    # IVF: int8 snapshot reloads onto 4 devices bit-identically, and the
+    # sharded probe stays within the recall bar of sharded f32
+    for storage in ("bfloat16", "int8"):
+        qi = IVFZenIndex.build(Xj, 24, key=jax.random.PRNGKey(0),
+                               storage=storage)
+        want_d, want_i = qi.search(Q, 10, nprobe=8)
+        with tempfile.TemporaryDirectory() as td:
+            qi.save(td + "/snap")
+            sidx = ShardedIVFZenIndex.load(td + "/snap", mesh=mesh)
+            assert sidx.storage == storage, sidx.storage
+            got_d, got_i = sidx.search(Q, 10, nprobe=8)
+        assert (np.asarray(got_i) == np.asarray(want_i)).all(), storage
+        assert np.allclose(np.asarray(got_d), np.asarray(want_d),
+                           atol=1e-5), storage
+        f32 = ShardedIVFZenIndex.build(Xj, 24, mesh=mesh,
+                                       key=jax.random.PRNGKey(0))
+        rec_f32 = recall_at_k(truth, np.asarray(
+            f32.search(Q, 10, nprobe=8)[1]))
+        rec_q = recall_at_k(truth, np.asarray(got_i))
+        assert abs(rec_f32 - rec_q) <= 0.02, (storage, rec_f32, rec_q)
+    print("SHARDED_QUANT_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_quantized_multi_device():
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"),
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARDED_QUANT_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SHARDED_QUANT_OK" in r.stdout
