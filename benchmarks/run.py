@@ -539,6 +539,92 @@ def bench_retrieval_quantized(smoke: bool = False) -> None:
             )
 
 
+def bench_retrieval_frontend(smoke: bool = False) -> None:
+    """Micro-batched serving frontend vs per-caller dispatch: an open-loop
+    load of many single-query callers is served (a) directly — one kernel
+    dispatch per caller, the pre-frontend behaviour — and (b) through the
+    ``repro.serving`` scheduler, which coalesces the backlog into padded
+    power-of-two dispatches of at most ``max_batch`` rows. Reports QPS,
+    the frontend's p50/p99 submit-to-resolve latency, batch occupancy,
+    and the jit-cache pressure (dispatch-shape count + live jit cache
+    entries — the acceptance bar is a jit cache at most the bucket-menu
+    size, with >= 2x the per-caller QPS). A third pass replays a
+    skew-heavy trace against the LRU result cache.
+    """
+    from repro.data import synthetic as syn
+    from repro.index.ivf import _ivf_search
+    from repro.launch.serve import ZenServer, build_index
+
+    n = 20_000 if smoke else 100_000
+    n_callers = 256 if smoke else 512
+    dim, kdim, nn, max_batch = 128, 16, 10, 64
+    key = jax.random.PRNGKey(0)
+    corpus = syn.manifold_space(key, n, dim, 8)
+    index = build_index(corpus, kdim, index="ivf",
+                        key=jax.random.fold_in(key, 2))
+    qs = np.asarray(syn.manifold_space(
+        jax.random.fold_in(key, 3), n_callers, dim, 8), np.float32)
+
+    # (a) per-caller dispatch: every caller pays its own kernel launch
+    direct = ZenServer(index, nprobe=8)
+    direct.query(qs[:1], nn)  # warm the (Q=2 bucket, w) compile
+    t0 = time.perf_counter()
+    for i in range(n_callers):
+        direct.query(qs[i:i + 1], nn)
+    t_direct = time.perf_counter() - t0
+    qps_direct = n_callers / t_direct
+    _row(f"retrieval_frontend_direct_n{n}", t_direct * 1e6 / n_callers,
+         f"qps={qps_direct:.0f};callers={n_callers};per_caller_dispatch")
+
+    # (b) micro-batched frontend: the same open-loop load coalesced
+    fe = ZenServer(index, nprobe=8, frontend=True, max_batch=max_batch,
+                   queue_limit=n_callers)
+    # clear BEFORE warming: the timed region must be as warm as the direct
+    # baseline's, and jit_entries then reports the steady-state cache size
+    _ivf_search._clear_cache()
+    fe.query(qs[:max_batch], nn)  # warm the full-bucket compile
+    t0 = time.perf_counter()
+    handles = [fe.frontend.submit(qs[i], nn) for i in range(n_callers)]
+    fe.frontend.flush()
+    for h in handles:
+        h.result()
+    t_fe = time.perf_counter() - t0
+    qps_fe = n_callers / t_fe
+    st_ = fe.frontend.stats
+    pct = st_.latency_percentiles()
+    _row(
+        f"retrieval_frontend_batched_n{n}", t_fe * 1e6 / n_callers,
+        f"qps={qps_fe:.0f};speedup={qps_fe / qps_direct:.1f}x;"
+        f"p50_ms={pct['p50_ms']:.1f};p99_ms={pct['p99_ms']:.1f};"
+        f"occupancy={st_.occupancy:.2f};compile_count={st_.compile_count};"
+        f"jit_entries={_ivf_search._cache_size()};max_batch={max_batch}",
+    )
+
+    # (c) skew-heavy traffic against the LRU result cache: the same
+    # n_callers requests drawn from a small hot set of unique queries,
+    # arriving in waves (sustained traffic — later waves hit the entries
+    # the first wave filled; one all-at-once burst could never hit)
+    hot = qs[:32]
+    fc = ZenServer(index, nprobe=8, frontend=True, max_batch=max_batch,
+                   queue_limit=n_callers, cache_size=1024)
+    fc.query(hot, nn)  # warm the wave-sized (32, w) compile
+    fc.frontend.cache.clear()
+    t0 = time.perf_counter()
+    handles = []
+    for wave in range(n_callers // 32):
+        handles.extend(fc.frontend.submit(hot[i], nn) for i in range(32))
+        fc.frontend.flush()
+    for h in handles:
+        h.result()
+    t_fc = time.perf_counter() - t0
+    _row(
+        f"retrieval_frontend_cached_n{n}", t_fc * 1e6 / n_callers,
+        f"qps={n_callers / t_fc:.0f};"
+        f"hit_rate={fc.frontend.cache.hit_rate:.2f};"
+        f"unique_queries=32;waves={n_callers // 32};cache_rows=1024",
+    )
+
+
 def bench_serving() -> None:
     from repro.data import synthetic as syn
     from repro.launch.serve import ZenServer, build_index
@@ -566,6 +652,7 @@ _WORKLOADS = {
     "retrieval_ivf": lambda a: bench_retrieval_ivf(smoke=a.smoke),
     "retrieval_churn": lambda a: bench_retrieval_churn(smoke=a.smoke),
     "retrieval_quantized": lambda a: bench_retrieval_quantized(smoke=a.smoke),
+    "retrieval_frontend": lambda a: bench_retrieval_frontend(smoke=a.smoke),
 }
 
 

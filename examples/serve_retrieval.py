@@ -63,6 +63,16 @@ def main():
     p.add_argument("--checkpoint", default=None, metavar="DIR",
                    help="save the server to DIR and verify a load "
                         "round-trip returns identical results")
+    p.add_argument("--frontend", action="store_true",
+                   help="serve through the micro-batching frontend: the "
+                        "query batches are re-played as many single-query "
+                        "callers, coalesced into shape-bucketed dispatches "
+                        "(repro.serving), and checked bit-identical "
+                        "against the direct path")
+    p.add_argument("--max-batch", type=int, default=64,
+                   help="largest coalesced dispatch (frontend mode)")
+    p.add_argument("--cache", type=int, default=0, metavar="ROWS",
+                   help="LRU result-cache rows (frontend mode; 0 disables)")
     args = p.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -122,6 +132,39 @@ def main():
               f"{np.mean(flat_recalls):.3f}, p50 {fs['p50_ms']:.1f} ms "
               f"(ivf p50 {ss['p50_ms']:.1f} ms, nprobe={args.nprobe}/"
               f"{index.ivf.n_clusters})")
+
+    if args.frontend and not args.sharded:
+        # re-play one batch as many single-query callers through the
+        # micro-batching frontend; every coalesced/padded/cached response
+        # must be bit-identical to the direct path
+        fe = ZenServer(index, rerank_factor=8, chunk=args.chunk,
+                       nprobe=args.nprobe, frontend=True,
+                       max_batch=args.max_batch, cache_size=args.cache)
+        q = syn.manifold_space(jax.random.fold_in(key, 400),
+                               args.batch_size, args.dim, args.dim // 16)
+        qn = np.asarray(q, np.float32)
+        t0 = time.time()
+        handles = [fe.frontend.submit(qn[i], args.neighbors)
+                   for i in range(args.batch_size)]
+        fe.frontend.flush()
+        rows = [h.result() for h in handles]
+        t_fe = time.time() - t0
+        d_direct, i_direct = fe.query(q, args.neighbors, direct=True)
+        same = all(
+            np.array_equal(rows[i][0][0], np.asarray(d_direct)[i])
+            and np.array_equal(rows[i][1][0], np.asarray(i_direct)[i])
+            for i in range(args.batch_size))
+        st = fe.frontend.stats
+        print(f"frontend: {args.batch_size} callers coalesced into "
+              f"{st.dispatches} dispatch(es) in {t_fe:.3f}s "
+              f"({args.batch_size / t_fe:.0f} qps), occupancy "
+              f"{st.occupancy:.2f}, compile_count {st.compile_count}, "
+              f"bit-identical to direct: {same}")
+        if args.cache:
+            for i in range(args.batch_size):  # hot replay: all hits
+                fe.frontend.submit(qn[i], args.neighbors)
+            fe.frontend.flush()
+            print(f"frontend cache: {fe.frontend.cache.info()}")
 
     if args.churn and not args.sharded:
         # mutable corpus lifecycle: delete 10% of ids, upsert replacements

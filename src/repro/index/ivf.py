@@ -258,6 +258,11 @@ class IVFZenIndex:
                    for f32/bf16 storage. Per *cluster* — not per tile — so
                    the quantised values depend only on the global assignment,
                    never on tile packing or shard count.
+      generation:  monotonic churn counter — bumped by every
+                   upsert/delete/compact that changes the searchable state.
+                   The serving frontend's result cache keys on it
+                   (``repro.serving.cache``), so cached responses can never
+                   outlive the index state that produced them.
     """
 
     centroids: Array    # (C, k) f32 coarse-quantizer centroids
@@ -270,20 +275,26 @@ class IVFZenIndex:
     n_deleted: int = 0  # tombstones since the last build/compact
     storage: str = "float32"        # resident dtype of tile_coords
     tile_scales: Optional[Array] = None  # (C, 1) int8 dequant scales
+    generation: int = 0  # churn counter; invalidates frontend cache entries
 
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
+        # generation rides as a *child* (traced leaf), never in the static
+        # aux: it is host-only cache metadata, and making it jit-static
+        # would force a full `_ivf_search` recompile — and a permanently
+        # retained cache entry — on every churn event
         children = (self.centroids, self.tile_coords, self.tile_ids,
-                    self.tile_scales)
+                    self.tile_scales, self.generation)
         aux = (self.n_clusters, self.tiles_per_cluster, self.tile_rows,
                self.n_valid, self.n_deleted, self.storage)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        centroids, tile_coords, tile_ids, tile_scales = children
+        centroids, tile_coords, tile_ids, tile_scales, generation = children
         return cls(centroids, tile_coords, tile_ids, *aux[:5],
-                   storage=aux[5], tile_scales=tile_scales)
+                   storage=aux[5], tile_scales=tile_scales,
+                   generation=generation)
 
     @property
     def size(self) -> int:
@@ -384,6 +395,7 @@ class IVFZenIndex:
             tile_ids=jnp.asarray(tids),
             n_valid=self.n_valid - removed,
             n_deleted=self.n_deleted + removed,
+            generation=self.generation + 1,
         )
 
     def upsert(self, ids: Sequence[int], coords: Array) -> "IVFZenIndex":
@@ -464,6 +476,7 @@ class IVFZenIndex:
             n_valid=base.n_valid + ids_np.size,
             n_deleted=max(0, base.n_deleted - int(ids_np.size)),
             tile_scales=None if scl is None else jnp.asarray(scl),
+            generation=self.generation + 1,
         )
 
     @property
@@ -535,7 +548,18 @@ class IVFZenIndex:
         ``n_clusters``) the quantizer is refit on the live coordinates with
         ``index.kmeans`` first — the full re-balance for heavily churned or
         drifted corpora. Ids are preserved either way.
+
+        A compaction with nothing to reclaim — no tombstones, already at
+        the minimal tiles-per-cluster, no refit requested — returns
+        ``self`` unchanged, so a periodic ``compact()`` on a healthy index
+        never bumps ``generation`` (which would needlessly invalidate the
+        serving frontend's result cache).
         """
+        if not recluster and n_clusters is None and self.n_deleted == 0:
+            t_needed = max(
+                1, -(-int(self.cluster_sizes().max()) // self.tile_rows))
+            if self.tiles_per_cluster == t_needed:
+                return self
         coords, ids, assign = self._live_members()
         if recluster or n_clusters is not None:
             key = key if key is not None else jax.random.PRNGKey(0)
@@ -568,6 +592,7 @@ class IVFZenIndex:
             n_valid=len(ids),
             storage=self.storage,
             tile_scales=None if scales is None else jnp.asarray(scales),
+            generation=self.generation + 1,
         )
 
     def _host_tiles_f32(self) -> np.ndarray:

@@ -37,9 +37,20 @@ persist the whole serving state — transform, coordinates/inverted lists, id
 map, corpus — as a versioned snapshot (``repro.checkpoint.index_io``) that
 restores bit-identically, including onto a different device count.
 
+Serving frontend
+----------------
+``ZenServer(frontend=True)`` (CLI: ``--frontend [--max-batch N --cache
+ROWS]``) attaches the ``repro.serving`` micro-batching scheduler: many
+small concurrent callers coalesce into one shape-bucketed kernel dispatch
+per tick, with an LRU result cache invalidated by the index ``generation``
+counter and reject-on-full backpressure. Even without the frontend, every
+query dispatches at bucketed shapes (power-of-two Q, fixed ``n_neighbors``
+menu) so the jit cache stays a handful of entries — and so scheduled,
+cached and direct responses are bit-identical (``tests/test_frontend.py``).
+
 CLI (CPU demo):  PYTHONPATH=src python -m repro.launch.serve --n 20000 --dim \
                  256 --k 16 --queries 64 [--index ivf --nprobe 8] \
-                 [--checkpoint /tmp/zen.ckpt]
+                 [--checkpoint /tmp/zen.ckpt] [--frontend --cache 1024]
 """
 from __future__ import annotations
 
@@ -62,6 +73,9 @@ from repro.core.simplex import BaseSimplex
 from repro.distributed import retrieval as retrieval_lib
 from repro.kernels import quantize as quant
 from repro.kernels.scoring import mask_invalid
+from repro.serving import (
+    DEFAULT_NEIGHBOR_MENU, MicroBatchScheduler, bucket_neighbors, bucket_q,
+)
 
 Array = jax.Array
 
@@ -109,6 +123,11 @@ class ZenIndex:
                  untouched rows are never requantised, and the far-sentinel
                  dead rows get their own (huge) scale without poisoning
                  live neighbours.
+      generation: monotonic churn counter — every upsert/delete/compact
+                 that changes the searchable state bumps it, and the
+                 serving frontend's result cache keys on it, so cached
+                 responses can never outlive the index state that produced
+                 them (``repro.serving.cache``).
     """
 
     transform: NSimplexTransform
@@ -121,6 +140,7 @@ class ZenIndex:
     n_deleted: int = 0  # flat tombstones since the last build/compact
     storage: str = "float32"  # resident dtype of the flat coords
     coord_scales: Optional[Array] = None  # (cap, 1) int8 dequant scales
+    generation: int = 0  # churn counter; invalidates frontend cache entries
 
     @property
     def size(self) -> int:
@@ -168,7 +188,11 @@ class ZenIndex:
         """Tombstone the given external ids; unknown ids are ignored."""
         self._check_not_sharded()
         if self.ivf is not None:
-            return dataclasses.replace(self, ivf=self.ivf.delete(ids))
+            new_ivf = self.ivf.delete(ids)
+            if new_ivf is self.ivf:  # nothing removed: state unchanged
+                return self
+            return dataclasses.replace(self, ivf=new_ivf,
+                                       generation=self.generation + 1)
         self._check_mutable()
         row_ids = self._host_row_ids()
         coords, scl = self._host_coord_state()
@@ -184,6 +208,7 @@ class ZenIndex:
             n_valid=self.size - int(mask.sum()),
             n_deleted=self.n_deleted + int(mask.sum()),
             coord_scales=None if scl is None else jnp.asarray(scl),
+            generation=self.generation + 1,
         )
 
     def upsert(self, ids: Sequence[int], coords_new: Array) -> "ZenIndex":
@@ -202,16 +227,19 @@ class ZenIndex:
         """
         self._check_not_sharded()
         if self.ivf is not None:
-            return dataclasses.replace(
-                self, ivf=self.ivf.upsert(ids, coords_new))
+            new_ivf = self.ivf.upsert(ids, coords_new)
+            if new_ivf is self.ivf:  # empty batch: state unchanged
+                return self
+            return dataclasses.replace(self, ivf=new_ivf,
+                                       generation=self.generation + 1)
         self._check_mutable()
         from repro.index.ivf import _check_ids, _dedupe_last_wins
 
         ids_np = np.asarray(ids, np.int64).ravel()
         _check_ids(ids_np)
-        new = np.asarray(coords_new, np.float32).reshape(ids_np.size, -1)
         if ids_np.size == 0:
             return self
+        new = np.asarray(coords_new, np.float32).reshape(ids_np.size, -1)
         ids_np, new = _dedupe_last_wins(ids_np, new)
 
         row_ids = self._host_row_ids()
@@ -250,6 +278,7 @@ class ZenIndex:
             n_valid=n_live,
             n_deleted=max(0, self.n_deleted - reclaimed),
             coord_scales=None if scl is None else jnp.asarray(scl),
+            generation=self.generation + 1,
         )
 
     def compact(self, **kw) -> "ZenIndex":
@@ -261,7 +290,11 @@ class ZenIndex:
         """
         self._check_not_sharded()
         if self.ivf is not None:
-            return dataclasses.replace(self, ivf=self.ivf.compact(**kw))
+            new_ivf = self.ivf.compact(**kw)
+            if new_ivf is self.ivf:  # nothing to reclaim: state unchanged
+                return self
+            return dataclasses.replace(self, ivf=new_ivf,
+                                       generation=self.generation + 1)
         self._check_mutable()
         if self.row_ids is None:
             return self
@@ -277,6 +310,7 @@ class ZenIndex:
             n_deleted=0,
             coord_scales=(None if self.coord_scales is None else
                           jnp.asarray(np.asarray(self.coord_scales)[live])),
+            generation=self.generation + 1,
         )
 
     def needs_compact(self, **kw) -> bool:
@@ -394,83 +428,197 @@ class ZenServer:
     per-shard candidates host-side. IVF-built indexes probe only the
     ``nprobe`` nearest clusters per query (``repro.index``) — sublinear in
     index size, with ``nprobe`` as the recall/latency knob.
+
+    Shape-bucketed dispatch
+    -----------------------
+    Every query — frontend-scheduled or direct — is served at *bucketed*
+    shapes: the row count is padded to a power-of-two Q bucket (floor 2)
+    and ``n_neighbors`` is rounded up to the fixed width menu
+    (``repro.serving.DEFAULT_NEIGHBOR_MENU``), then sliced back. The jit
+    cache therefore holds one entry per (Q bucket, width) pair instead of
+    one per caller shape, and — because results are row-wise bit-identical
+    across bucketed batch shapes — a coalesced, padded, or cached response
+    is bit-identical to the same query served alone.
+
+    Frontend
+    --------
+    ``frontend=True`` attaches a ``repro.serving.MicroBatchScheduler``:
+    ``query`` becomes a thin client that submits rows to the scheduler
+    (coalescing across concurrent callers, LRU result caching with
+    generation-based invalidation, reject-on-full backpressure) and blocks
+    for its answer; ``query(..., direct=True)`` is the escape hatch that
+    bypasses the scheduler on the old synchronous path.
     """
 
     def __init__(self, index: ZenIndex, *, mode: str = "zen",
                  rerank_factor: int = 0, chunk: int = 8192,
-                 nprobe: int = 8, force_kernel: bool = False):
+                 nprobe: int = 8, force_kernel: bool = False,
+                 frontend: bool = False, max_batch: int = 64,
+                 cache_size: int = 0, queue_limit: int = 4096,
+                 tick_interval: float = 0.002,
+                 neighbor_menu: Sequence[int] = DEFAULT_NEIGHBOR_MENU,
+                 clock=None):
         self.index = index
         self.mode = mode
         self.rerank_factor = rerank_factor
         self.chunk = chunk
         self.nprobe = nprobe
         self.force_kernel = force_kernel
+        self.neighbor_menu = tuple(neighbor_menu)
+        self.max_batch = max_batch
+        self.cache_size = cache_size
         self._stats = {"queries": 0, "batches": 0, "latency_s": [],
                        "upserts": 0, "deletes": 0}
+        self.frontend: Optional[MicroBatchScheduler] = None
+        if frontend:
+            kw = {"clock": clock} if clock is not None else {}
+            self.frontend = MicroBatchScheduler(
+                self, max_batch=max_batch, cache_size=cache_size,
+                queue_limit=queue_limit, tick_interval=tick_interval,
+                neighbor_menu=self.neighbor_menu, **kw)
 
-    def query(self, queries: Array, n_neighbors: int = 10
-              ) -> Tuple[Array, Array]:
+    # -- bucketed dispatch core ----------------------------------------------
+    def _query_geometry(self, n_neighbors: int) -> Tuple[int, int]:
+        """(n_bucket, fetch width) a request dispatches at.
+
+        ``n_bucket`` is the menu-rounded output width; the fetch width is
+        the menu-rounded candidate-pool width (``n_neighbors *
+        rerank_factor`` when re-ranking). Shared with the scheduler so
+        direct and coalesced dispatches — and their cache keys — agree.
+        """
+        n_bucket = bucket_neighbors(n_neighbors, self.neighbor_menu)
+        width = bucket_neighbors(
+            n_neighbors * max(self.rerank_factor, 1), self.neighbor_menu)
+        return n_bucket, max(width, n_bucket)
+
+    def _query_block(self, queries: Array, width: int, n_bucket: int,
+                     index: Optional[ZenIndex] = None
+                     ) -> Tuple[Array, Array]:
+        """Serve one already-padded block at bucketed shapes.
+
+        Args:
+          queries:  (Qp, m) raw query rows, ``Qp`` a power-of-two bucket
+                    (padding rows are copies of real rows; their results
+                    are sliced off by the caller, never observed).
+          width:    bucketed candidate fetch width.
+          n_bucket: bucketed output width (<= ``width``).
+          index:    the ``ZenIndex`` snapshot to serve from (defaults to
+                    the current ``self.index``). The whole block is served
+                    from this one snapshot — ``self.index`` is read exactly
+                    once — so concurrent churn swapping the live index can
+                    never mix two index states within one query (the
+                    scheduler passes the snapshot it keyed its cache
+                    entries on).
+
+        Returns (distances, ids), each (Qp, n_bucket) — project, search,
+        optional exact re-rank, external-id mapping, and the (+inf, -1)
+        fill for slots the index cannot serve. Both the direct path and
+        the frontend scheduler dispatch through here, which is what makes
+        their results (and cache entries) interchangeable bit-for-bit.
+        """
+        index = index if index is not None else self.index
+        queries = jnp.asarray(queries)
+        if index.size == 0:  # fully-deleted index: all slots unfilled
+            return (jnp.full((queries.shape[0], n_bucket), jnp.inf,
+                             jnp.float32),
+                    jnp.full((queries.shape[0], n_bucket), -1, jnp.int32))
+        qp = index.transform.transform(queries)
+        n_fetch = min(width, index.size)
+        if index.ivf is not None:
+            d, ids = index.ivf.search(
+                qp, n_neighbors=n_fetch,
+                nprobe=self.nprobe, mode=self.mode,
+                force_kernel=self.force_kernel,
+            )
+        elif index.mesh is not None:
+            d, ids = retrieval_lib.sharded_knn_search(
+                qp, index.coords,
+                n_neighbors=n_fetch, mode=self.mode,
+                mesh=index.mesh, chunk=self.chunk,
+                force_kernel=self.force_kernel, n_valid=index.n_valid,
+                scales=index.coord_scales,
+            )
+            d, ids = self._map_row_ids(d, ids, index)
+        else:
+            d, ids = zen_lib.knn_search(
+                qp, index.coords,
+                n_neighbors=n_fetch, mode=self.mode,
+                chunk=self.chunk if index.coords.shape[0] > self.chunk
+                else 0,
+                scales=index.coord_scales,
+                force_kernel=self.force_kernel,
+            )
+            d, ids = self._map_row_ids(d, ids, index)
+        if self.rerank_factor and index.corpus is not None:
+            d, ids = self._rerank(queries, ids, n_bucket, index)
+        else:
+            d, ids = d[:, :n_bucket], ids[:, :n_bucket]
+        if d.shape[1] < n_bucket:
+            # fewer live rows than the bucket width: pad to the full bucket
+            pad = n_bucket - d.shape[1]
+            d = jnp.pad(d, ((0, 0), (0, pad)), constant_values=jnp.inf)
+            ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+        return d, ids
+
+    def query(self, queries: Array, n_neighbors: int = 10, *,
+              direct: bool = False) -> Tuple[Array, Array]:
         """Serve one batch: (Q, m) raw queries -> (distances, ids).
 
         Args:
           queries:     (Q, m) raw (un-projected) query vectors.
           n_neighbors: neighbours to return per query.
+          direct:      bypass the frontend scheduler (when one is attached)
+                       and serve synchronously on the calling thread — the
+                       unbatched escape hatch. Results are bit-identical
+                       either way.
 
         Returns (distances, ids), each (Q, n_neighbors), ascending distance.
         Ids are *external* ids (stable across churn and checkpoint reload);
         slots the index cannot fill come back as (+inf, -1).
         """
         t0 = time.time()
-        if self.index.size == 0:  # fully-deleted index: all slots unfilled
-            d = jnp.full((queries.shape[0], n_neighbors), jnp.inf,
-                         jnp.float32)
-            ids = jnp.full((queries.shape[0], n_neighbors), -1, jnp.int32)
-            self._stats["queries"] += int(queries.shape[0])
-            self._stats["batches"] += 1
-            self._stats["latency_s"].append(time.time() - t0)
-            return d, ids
-        qp = self.index.transform.transform(queries)
-        n_fetch = n_neighbors * max(self.rerank_factor, 1)
-        if self.index.ivf is not None:
-            d, ids = self.index.ivf.search(
-                qp, n_neighbors=min(n_fetch, self.index.size),
-                nprobe=self.nprobe, mode=self.mode,
-                force_kernel=self.force_kernel,
-            )
-        elif self.index.mesh is not None:
-            d, ids = retrieval_lib.sharded_knn_search(
-                qp, self.index.coords,
-                n_neighbors=min(n_fetch, self.index.size), mode=self.mode,
-                mesh=self.index.mesh, chunk=self.chunk,
-                force_kernel=self.force_kernel, n_valid=self.index.n_valid,
-                scales=self.index.coord_scales,
-            )
-            d, ids = self._map_row_ids(d, ids)
+        queries = jnp.asarray(queries)
+        n_rows = int(queries.shape[0])
+        if (self.frontend is not None and not direct
+                and n_rows <= self.frontend.queue_limit):
+            # batches beyond queue_limit fall through to the direct path:
+            # they are already far past any coalescing benefit, and a
+            # permanent reject-on-full for them would masquerade as
+            # transient overload
+            handle = self.frontend.submit(queries, n_neighbors)
+            if not self.frontend.running:
+                # no ticker thread: drive the scheduler inline so the
+                # single-threaded caller still gets coalescing + caching
+                self.frontend.flush()
+            d_np, ids_np = handle.result()
+            d, ids = jnp.asarray(d_np), jnp.asarray(ids_np)
+        elif n_rows == 0:
+            d = jnp.full((0, n_neighbors), jnp.inf, jnp.float32)
+            ids = jnp.full((0, n_neighbors), -1, jnp.int32)
         else:
-            d, ids = zen_lib.knn_search(
-                qp, self.index.coords,
-                n_neighbors=min(n_fetch, self.index.size), mode=self.mode,
-                chunk=self.chunk if self.index.coords.shape[0] > self.chunk
-                else 0,
-                scales=self.index.coord_scales,
-                force_kernel=self.force_kernel,
-            )
-            d, ids = self._map_row_ids(d, ids)
-        if self.rerank_factor and self.index.corpus is not None:
-            d, ids = self._rerank(queries, ids, n_neighbors)
-        else:
-            d, ids = d[:, :n_neighbors], ids[:, :n_neighbors]
-        if d.shape[1] < n_neighbors:
-            # fewer live rows than requested: pad to the promised shape
-            pad = n_neighbors - d.shape[1]
-            d = jnp.pad(d, ((0, 0), (0, pad)), constant_values=jnp.inf)
-            ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
-        self._stats["queries"] += int(queries.shape[0])
+            n_bucket, width = self._query_geometry(n_neighbors)
+            if n_rows <= self.max_batch:
+                qp_rows = bucket_q(n_rows)
+            else:
+                # beyond max_batch, power-of-two padding would waste up to
+                # ~2x scan compute; round up to a max_batch multiple
+                # instead (waste < max_batch rows, shapes still bucketed)
+                qp_rows = -(-n_rows // self.max_batch) * self.max_batch
+            if qp_rows > n_rows:  # pad with copies of a real row
+                queries = jnp.concatenate([
+                    queries,
+                    jnp.broadcast_to(queries[:1],
+                                     (qp_rows - n_rows, queries.shape[1])),
+                ])
+            d, ids = self._query_block(queries, width, n_bucket)
+            d, ids = d[:n_rows, :n_neighbors], ids[:n_rows, :n_neighbors]
+        self._stats["queries"] += n_rows
         self._stats["batches"] += 1
         self._stats["latency_s"].append(time.time() - t0)
         return d, ids
 
-    def _map_row_ids(self, d: Array, ids: Array) -> Tuple[Array, Array]:
+    def _map_row_ids(self, d: Array, ids: Array, index: ZenIndex
+                     ) -> Tuple[Array, Array]:
         """Map flat row positions to external ids (churned/reloaded index).
 
         With ``row_ids`` unset the two id spaces coincide and this is a
@@ -478,9 +626,9 @@ class ZenServer:
         far sentinel), but any dead id that sneaks into an under-filled
         result is masked to (+inf, -1) — the same contract as the IVF path.
         """
-        if self.index.row_ids is None:
+        if index.row_ids is None:
             return d, ids
-        ext = jnp.take(self.index.row_ids, jnp.maximum(ids, 0), axis=0)
+        ext = jnp.take(index.row_ids, jnp.maximum(ids, 0), axis=0)
         ext = jnp.where(ids >= 0, ext, -1)
         return mask_invalid(d, ext), ext
 
@@ -555,20 +703,26 @@ class ZenServer:
             self.compact()
         return True
 
-    def _rerank(self, queries: Array, cand_ids: Array, n_neighbors: int
-                ) -> Tuple[Array, Array]:
+    def _rerank(self, queries: Array, cand_ids: Array, n_neighbors: int,
+                index: ZenIndex) -> Tuple[Array, Array]:
         """Exact re-rank of the Zen candidate pool with true distances."""
         from repro.index import exact_rerank
 
         return exact_rerank(
-            queries, self.index.corpus, cand_ids, n_neighbors,
-            metric=self.index.transform.metric,
+            queries, index.corpus, cand_ids, n_neighbors,
+            metric=index.transform.metric,
         )
 
     def stats(self) -> dict:
-        """Serving counters: query/batch totals, latency percentiles, churn."""
+        """Serving counters: query/batch totals, latency percentiles, churn.
+
+        With a frontend attached, a ``"frontend"`` sub-dict adds the SLO
+        instrumentation (p50/p95/p99 request latency, batch occupancy,
+        cache hit rate, compile count, backpressure counters) and a
+        ``"cache"`` sub-dict the LRU state (``repro.serving.stats``).
+        """
         lat = np.asarray(self._stats["latency_s"] or [0.0])
-        return {
+        out = {
             "queries": self._stats["queries"],
             "batches": self._stats["batches"],
             "upserts": self._stats["upserts"],
@@ -576,6 +730,10 @@ class ZenServer:
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
         }
+        if self.frontend is not None:
+            out["frontend"] = self.frontend.stats.snapshot()
+            out["cache"] = self.frontend.cache.info()
+        return out
 
     # -- persistence ---------------------------------------------------------
     def save(self, directory: str) -> str:
@@ -612,6 +770,9 @@ class ZenServer:
                 "rerank_factor": self.rerank_factor,
                 "chunk": self.chunk,
                 "nprobe": self.nprobe,
+                "frontend": self.frontend is not None,
+                "max_batch": self.max_batch,
+                "cache_size": self.cache_size,
             },
         }
         if index.ivf is not None:
@@ -742,6 +903,15 @@ def main() -> None:
     p.add_argument("--checkpoint", default=None, metavar="DIR",
                    help="restore the server from DIR if a snapshot exists "
                         "there, else build and save one (versioned, atomic)")
+    p.add_argument("--frontend", action="store_true",
+                   help="serve through the micro-batching frontend "
+                        "(coalesced, shape-bucketed dispatches + result "
+                        "cache; repro.serving)")
+    p.add_argument("--max-batch", type=int, default=64,
+                   help="largest coalesced dispatch (frontend mode)")
+    p.add_argument("--cache", type=int, default=0, metavar="ROWS",
+                   help="LRU result-cache capacity in rows (frontend mode; "
+                        "0 disables)")
     args = p.parse_args()
 
     import os
@@ -751,11 +921,13 @@ def main() -> None:
 
     key = jax.random.PRNGKey(0)
     corpus = syn.manifold_space(key, args.n, args.dim, args.dim // 8)
+    frontend_kw = dict(frontend=args.frontend, max_batch=args.max_batch,
+                       cache_size=args.cache)
     if args.checkpoint and os.path.exists(
             os.path.join(args.checkpoint, "manifest.json")):
         server = ZenServer.load(args.checkpoint,
                                 rerank_factor=args.rerank,
-                                nprobe=args.nprobe)
+                                nprobe=args.nprobe, **frontend_kw)
         index = server.index
         ref_dim = int(index.transform.refs.shape[1])
         if ref_dim != args.dim:
@@ -769,7 +941,7 @@ def main() -> None:
                             n_clusters=args.clusters or None,
                             storage=args.storage)
         server = ZenServer(index, rerank_factor=args.rerank,
-                           nprobe=args.nprobe)
+                           nprobe=args.nprobe, **frontend_kw)
         if args.checkpoint:
             print(f"saved snapshot to {server.save(args.checkpoint)}")
     print(f"index: {index.size} x {args.k} (from dim {args.dim}, "

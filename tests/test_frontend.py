@@ -1,0 +1,569 @@
+"""Simulation-driven tests of the micro-batching serving frontend.
+
+The scheduler never sleeps on its own: ``tick()`` is a plain synchronous
+function and the clock is injected, so every test here drives the frontend
+step by step — submit, advance the fake clock, tick, observe — with no
+real threads and no timing flakiness. The contract under test is the
+acceptance bar of the frontend PR: every scheduled, coalesced, padded, or
+cached response is **bit-identical** to the same query served directly,
+for every estimator mode, flat and IVF, with and without re-rank, across
+arbitrary interleavings of queries and churn.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: fixed-seed replay keeps the suite green
+    from _hypothesis_fallback import given, settings, st
+
+from repro.data import synthetic as syn
+from repro.launch.serve import ZenIndex, ZenServer, build_index
+from repro.serving import (
+    FrontendOverloadError,
+    LRUCache,
+    bucket_neighbors,
+    bucket_q,
+    query_fingerprint,
+)
+
+N, DIM, K = 600, 48, 10
+N_CLUSTERS = 24
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _x32():
+    """The frontend serves the stack's default f32 numerics; some sibling
+    modules flip ``jax_enable_x64`` globally at import time, so pin it off
+    for this module (autouse + module scope: applies before the corpus /
+    index fixtures build anything)."""
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    yield
+    jax.config.update("jax_enable_x64", prev)
+
+
+class FakeClock:
+    """Deterministic injectable time source."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return syn.manifold_space(jax.random.PRNGKey(0), N, DIM, 8)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return np.asarray(
+        syn.manifold_space(jax.random.PRNGKey(1), 32, DIM, 8), np.float32)
+
+
+@pytest.fixture(scope="module")
+def base_index(corpus):
+    return {
+        "flat": build_index(corpus, K, index="flat"),
+        "ivf": build_index(corpus, K, index="ivf", n_clusters=N_CLUSTERS),
+    }
+
+
+def _frontend_server(index, **kw):
+    kw.setdefault("nprobe", 8)
+    kw.setdefault("frontend", True)
+    kw.setdefault("clock", kw.pop("clock", None) or FakeClock())
+    return ZenServer(index, **kw)
+
+
+def _rows_equal(a, b):
+    return (np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+            and np.array_equal(np.asarray(a[1]), np.asarray(b[1])))
+
+
+# -- bucket helpers -----------------------------------------------------------
+
+
+def test_bucket_q_power_of_two_floor_two():
+    assert [bucket_q(q) for q in (1, 2, 3, 4, 5, 8, 9, 100)] == \
+        [2, 2, 4, 4, 8, 8, 16, 128]
+    assert bucket_q(100, max_batch=32) == 32
+
+
+def test_bucket_neighbors_menu_then_pow2():
+    assert [bucket_neighbors(n) for n in (1, 8, 9, 16, 100, 128)] == \
+        [8, 8, 16, 16, 128, 128]
+    assert bucket_neighbors(129) == 256  # off-menu stays bounded
+    assert bucket_neighbors(5, menu=(4, 32)) == 32
+
+
+# -- coalescing / splitting ---------------------------------------------------
+
+
+def test_coalescing_k_submitters_one_dispatch(base_index, queries):
+    """K concurrent single-row submitters collapse into one dispatch."""
+    server = _frontend_server(base_index["flat"])
+    sched = server.frontend
+    handles = [sched.submit(queries[i], 10) for i in range(5)]
+    assert sched.backlog == 5
+    assert not any(h.done() for h in handles)
+    assert sched.tick() == 1                      # one coalesced dispatch
+    assert sched.backlog == 0
+    st_ = sched.stats
+    assert st_.dispatches == 1
+    assert st_.dispatched_rows == 5 and st_.padded_rows == 8  # bucket 8
+    assert st_.occupancy == pytest.approx(5 / 8)
+    for i, h in enumerate(handles):
+        assert h.done()
+        assert _rows_equal(h.result(),
+                           server.query(queries[i][None], 10, direct=True))
+
+
+def test_split_at_max_batch(base_index, queries):
+    """Oversized coalesced groups split into max_batch-row dispatches."""
+    server = _frontend_server(base_index["flat"], max_batch=4)
+    sched = server.frontend
+    handles = [sched.submit(queries[i], 10) for i in range(11)]
+    assert sched.tick() == 3                      # ceil(11 / 4)
+    assert sched.stats.dispatches == 3
+    assert max(s[0] for s in sched.stats.dispatch_shapes) <= 4
+    for i, h in enumerate(handles):
+        assert _rows_equal(h.result(),
+                           server.query(queries[i][None], 10, direct=True))
+
+
+def test_mixed_n_neighbors_group_by_geometry(base_index, queries):
+    """Requests with different bucketed widths dispatch separately — each
+    row computes at exactly the geometry its direct call would use."""
+    server = _frontend_server(base_index["flat"])
+    sched = server.frontend
+    h10 = sched.submit(queries[0], 10)   # n_bucket 16
+    h9 = sched.submit(queries[1], 9)     # n_bucket 16 — same group
+    h40 = sched.submit(queries[2], 40)   # n_bucket 64 — separate group
+    assert sched.tick() == 2
+    assert _rows_equal(h10.result(),
+                       server.query(queries[0][None], 10, direct=True))
+    assert _rows_equal(h9.result(),
+                       server.query(queries[1][None], 9, direct=True))
+    assert _rows_equal(h40.result(),
+                       server.query(queries[2][None], 40, direct=True))
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf"])
+@pytest.mark.parametrize("mode", ["zen", "lwb", "upb"])
+def test_bucket_padding_parity(base_index, queries, kind, mode):
+    """Padded coalesced dispatches are bit-identical to per-query direct
+    calls — every estimator mode, flat and IVF."""
+    server = _frontend_server(base_index[kind], mode=mode)
+    sched = server.frontend
+    handles = [sched.submit(queries[i], 10) for i in range(7)]  # pads to 8
+    sched.tick()
+    for i, h in enumerate(handles):
+        direct = server.query(queries[i][None], 10, direct=True)
+        assert _rows_equal(h.result(), direct), (kind, mode, i)
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf"])
+def test_bucket_padding_parity_with_rerank(base_index, queries, kind):
+    """Parity survives the exact re-rank stage (wider bucketed pools)."""
+    server = _frontend_server(base_index[kind], rerank_factor=4)
+    handles = [server.frontend.submit(queries[i], 10) for i in range(5)]
+    server.frontend.tick()
+    for i, h in enumerate(handles):
+        assert _rows_equal(h.result(),
+                           server.query(queries[i][None], 10, direct=True))
+
+
+def test_query_through_frontend_matches_direct(base_index, queries):
+    """ZenServer.query as a thin scheduler client (inline ticking)."""
+    server = _frontend_server(base_index["flat"])
+    got = server.query(queries[:6], 10)
+    want = server.query(queries[:6], 10, direct=True)
+    assert _rows_equal(got, want)
+    assert server.frontend.stats.completed >= 6
+
+
+def test_direct_escape_hatch_bypasses_scheduler(base_index, queries):
+    server = _frontend_server(base_index["flat"])
+    before = server.frontend.stats.submitted
+    server.query(queries[:3], 10, direct=True)
+    assert server.frontend.stats.submitted == before
+    assert server.frontend.backlog == 0
+
+
+# -- backpressure -------------------------------------------------------------
+
+
+def test_reject_on_full_backpressure(base_index, queries):
+    server = _frontend_server(base_index["flat"], queue_limit=4)
+    sched = server.frontend
+    for i in range(4):
+        sched.submit(queries[i], 10)
+    with pytest.raises(FrontendOverloadError):
+        sched.submit(queries[4], 10)
+    assert sched.stats.rejected == 1
+    assert sched.backlog == 4                 # reject enqueued nothing
+    # a multi-row submit that cannot fully fit is rejected atomically
+    sched.tick()
+    sched.submit(queries[:3], 10)
+    with pytest.raises(FrontendOverloadError):
+        sched.submit(queries[3:6], 10)        # 3 rows, 1 slot free
+    assert sched.backlog == 3
+    sched.flush()
+    assert sched.backlog == 0
+
+
+# -- cache --------------------------------------------------------------------
+
+
+def test_lru_cache_eviction_order():
+    c = LRUCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1        # refreshes "a" -> "b" is now LRU
+    c.put("c", 3)                 # evicts "b"
+    assert c.get("b") is None and c.get("a") == 1 and c.get("c") == 3
+    assert c.evictions == 1
+    assert len(c) == 2
+
+
+def test_lru_cache_disabled_at_zero_capacity():
+    c = LRUCache(0)
+    c.put("a", 1)
+    assert c.get("a") is None and len(c) == 0
+
+
+def test_query_fingerprint_canonicalises():
+    row64 = np.arange(4, dtype=np.float64)
+    assert query_fingerprint(row64) == query_fingerprint(
+        row64.astype(np.float32))
+    assert query_fingerprint(row64) != query_fingerprint(row64 + 1e-6)
+
+
+def test_cache_hit_resolves_without_tick(base_index, queries):
+    server = _frontend_server(base_index["flat"], cache_size=64)
+    sched = server.frontend
+    h1 = sched.submit(queries[0], 10)
+    sched.tick()
+    h2 = sched.submit(queries[0], 10)
+    assert h2.done()                          # no tick needed
+    assert sched.stats.cache_hits == 1
+    assert _rows_equal(h1.result(), h2.result())
+    # a different n_neighbors in the same bucket also hits, sliced
+    h3 = sched.submit(queries[0], 9)
+    assert h3.done() and sched.stats.cache_hits == 2
+    d9, i9 = h3.result()
+    d10, i10 = h1.result()
+    assert np.array_equal(i9[0], i10[0, :9])
+    assert np.array_equal(d9[0], d10[0, :9])
+
+
+def test_cache_miss_on_new_query(base_index, queries):
+    server = _frontend_server(base_index["flat"], cache_size=64)
+    sched = server.frontend
+    sched.submit(queries[0], 10)
+    sched.tick()
+    h = sched.submit(queries[1], 10)
+    assert not h.done()                       # genuinely new row: a miss
+    assert sched.stats.cache_misses == 2
+    sched.flush()
+
+
+@pytest.mark.parametrize("churn", ["upsert", "delete", "compact"])
+def test_cache_invalidation_on_churn(base_index, queries, corpus, churn):
+    """upsert/delete/compact bump the index generation; stale entries can
+    no longer be looked up, and the re-served answer matches a fresh
+    direct query of the churned index."""
+    server = _frontend_server(base_index["flat"], cache_size=64)
+    sched = server.frontend
+    sched.submit(queries[0], 10)
+    sched.tick()
+    assert sched.stats.cache_misses == 1
+    gen0 = server.index.generation
+    if churn == "upsert":
+        server.upsert([N + 1], np.asarray(corpus)[:1] * 0.5)
+    elif churn == "delete":
+        server.delete([int(np.asarray(sched.submit(queries[0], 10)
+                                      .result()[1])[0, 0])])
+    else:
+        server.delete([3])                    # make compact non-trivial
+        server.compact()
+    assert server.index.generation > gen0
+    h = sched.submit(queries[0], 10)
+    assert not h.done()                       # old-generation entry ignored
+    sched.tick()
+    assert _rows_equal(h.result(),
+                       server.query(queries[0][None], 10, direct=True))
+
+
+def test_generation_counter_no_bump_on_noop(base_index):
+    idx = base_index["flat"]
+    assert idx.generation == 0
+    assert idx.delete([10 ** 6]).generation == 0        # unknown id: no-op
+    assert idx.upsert([], np.zeros((0, K))).generation == 0
+    assert idx.compact().generation == 0                # untouched index
+    # a compaction with nothing to reclaim is a no-op on IVF too — a
+    # periodic compact() must not invalidate the result cache
+    ivf = base_index["ivf"]
+    assert ivf.compact() is ivf
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf"])
+def test_generation_counter_bumps(base_index, kind):
+    idx = base_index[kind]
+    rows = np.ones((1, K), np.float32)
+    up = idx.upsert([N + 7], rows)
+    assert up.generation == idx.generation + 1
+    de = up.delete([N + 7])
+    assert de.generation > up.generation
+    co = de.compact()
+    assert co.generation > de.generation
+    if kind == "ivf":  # the counter is threaded through IVFZenIndex too
+        assert up.ivf.generation == idx.ivf.generation + 1
+        assert co.ivf.generation > de.ivf.generation
+
+
+def test_empty_index_through_frontend(base_index, queries):
+    server = _frontend_server(base_index["flat"])
+    server.delete(np.arange(N))
+    assert server.index.size == 0
+    d, ids = server.query(queries[:3], 10)
+    assert d.shape == (3, 10) and bool(jnp.isinf(d).all())
+    assert bool((np.asarray(ids) == -1).all())
+
+
+def test_cache_stores_row_copies_not_views(base_index, queries):
+    """Entries are per-row copies — a view would pin the whole (Qp,
+    n_bucket) dispatch arrays for as long as one row survives the LRU."""
+    server = _frontend_server(base_index["flat"], cache_size=8)
+    sched = server.frontend
+    sched.submit(queries[0], 10)
+    sched.tick()
+    ((d_row, id_row),) = list(sched.cache._data.values())
+    assert d_row.base is None and id_row.base is None
+    assert d_row.shape == (16,)               # stored at the bucketed width
+
+
+# -- dispatch failures --------------------------------------------------------
+
+
+def test_dispatch_failure_resolves_waiters_and_ticker_survives(
+        base_index, queries):
+    """A raising dispatch fails its waiters (result() re-raises) instead
+    of hanging them, and the scheduler keeps serving afterwards."""
+    server = _frontend_server(base_index["flat"])
+    sched = server.frontend
+    good = sched.submit(queries[0], 10)
+    bad = sched.submit(np.ones(7, np.float32), 10)  # wrong query dim
+    sched.tick()                                    # ragged group: raises
+    assert good.done() and bad.done()               # resolved, not hung
+    with pytest.raises(Exception):
+        bad.result(timeout=1)
+    with pytest.raises(Exception):                  # same failed chunk
+        good.result(timeout=1)
+    assert sched.stats.failures == 2
+    h = sched.submit(queries[1], 10)                # scheduler still alive
+    sched.tick()
+    assert _rows_equal(h.result(),
+                       server.query(queries[1][None], 10, direct=True))
+
+
+# -- clock / latency instrumentation ------------------------------------------
+
+
+def test_fake_clock_drives_latency_stats(base_index, queries):
+    clock = FakeClock()
+    server = _frontend_server(base_index["flat"], clock=clock)
+    sched = server.frontend
+    h = sched.submit(queries[0], 10)
+    clock.advance(0.25)                       # request waits a quarter second
+    sched.tick()
+    assert h.latency_s == pytest.approx(0.25)
+    pct = sched.stats.latency_percentiles()
+    assert pct["p50_ms"] == pytest.approx(250.0)
+    assert pct["p99_ms"] == pytest.approx(250.0)
+    # a cache-free second request resolved in the same tick shares the bill
+    h2 = sched.submit(queries[1], 10)
+    clock.advance(0.05)
+    sched.tick()
+    assert h2.latency_s == pytest.approx(0.05)
+
+
+def test_stats_snapshot_keys(base_index, queries):
+    server = _frontend_server(base_index["flat"], cache_size=8)
+    server.query(queries[:4], 10)
+    out = server.stats()
+    fe = out["frontend"]
+    for key in ("submitted", "completed", "rejected", "dispatches",
+                "batch_occupancy", "cache_hit_rate", "compile_count",
+                "p50_ms", "p95_ms", "p99_ms"):
+        assert key in fe, key
+    assert out["cache"]["capacity"] == 8
+    assert fe["submitted"] == 4 and fe["completed"] == 4
+
+
+# -- jit-cache bounding (the direct-path fix rides the same buckets) ----------
+
+
+def test_jit_cache_bounded_over_odd_shapes_flat(base_index, queries):
+    """20 odd-shaped (Q, n_neighbors) batches compile only a handful of
+    bucketed entries — the direct-path recompile fix."""
+    from repro.core import zen as Z
+
+    server = ZenServer(base_index["flat"])    # no frontend: direct path
+    Z._dense_topk._clear_cache()
+    shapes = set()
+    for i in range(20):
+        q_rows, nn = 1 + i, 3 + (i % 9)       # 20 distinct caller shapes
+        server.query(queries[:q_rows], nn)
+        nb, w = server._query_geometry(nn)
+        shapes.add((bucket_q(q_rows), w))
+    assert len(shapes) <= 10                  # 5 Q buckets x 2 widths
+    assert Z._dense_topk._cache_size() <= len(shapes)
+    assert Z._dense_topk._cache_size() < 20   # strictly fewer than callers
+
+
+def test_jit_cache_bounded_over_odd_shapes_ivf(base_index, queries):
+    from repro.index.ivf import _ivf_search
+
+    server = ZenServer(base_index["ivf"], nprobe=8)
+    _ivf_search._clear_cache()
+    for i in range(20):
+        server.query(queries[:1 + i], 3 + (i % 9))
+    # Q buckets {2..32} x one n_bucket span — far below 20 caller shapes
+    assert _ivf_search._cache_size() <= 8
+
+
+def test_ivf_jit_cache_stable_under_inplace_refresh(
+        base_index, corpus, queries):
+    """The generation counter must not ride in the jit-static aux: an
+    in-place refresh (upsert replacing an id; n_valid/n_deleted round-trip
+    to their prior values) re-hits the existing `_ivf_search` entry
+    instead of recompiling once per churn event."""
+    from repro.index.ivf import _ivf_search
+
+    server = ZenServer(base_index["ivf"], nprobe=8)
+    _ivf_search._clear_cache()
+    server.query(queries[:4], 10)
+    base_size = _ivf_search._cache_size()
+    for _ in range(3):
+        server.upsert([5], np.asarray(corpus)[5:6])   # in-place refresh
+        server.query(queries[:4], 10)
+    assert server.index.generation == 3               # cache keys moved on
+    assert _ivf_search._cache_size() == base_size     # ...but no recompile
+
+
+# -- ticker thread ------------------------------------------------------------
+
+
+def test_ticker_thread_serves_concurrent_callers(base_index, queries):
+    """Real threads + the background ticker: concurrent ZenServer.query
+    calls coalesce and every caller gets its direct-path bits."""
+    server = ZenServer(base_index["flat"], frontend=True,
+                       tick_interval=0.001)
+    server.frontend.start()
+    try:
+        results = {}
+
+        def caller(i):
+            results[i] = server.query(queries[i][None], 10)
+
+        threads = [threading.Thread(target=caller, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        assert len(results) == 8
+        for i in range(8):
+            assert _rows_equal(results[i],
+                               server.query(queries[i][None], 10,
+                                            direct=True))
+    finally:
+        server.frontend.stop()
+    assert not server.frontend.running
+
+
+# -- property: random submit/churn interleavings ------------------------------
+
+
+_PROP_STATE = {}
+
+
+def _prop_server(kind):
+    """Module-cached small server base for the property examples."""
+    if kind not in _PROP_STATE:
+        corpus = syn.manifold_space(jax.random.PRNGKey(5), 300, 24, 6)
+        _PROP_STATE[kind] = build_index(
+            corpus, 8, index=kind,
+            n_clusters=12 if kind == "ivf" else None)
+    return _PROP_STATE[kind]
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_random_interleaving_matches_direct(seed):
+    """Any interleaving of submits, churn, and ticks: every response is
+    bit-identical to a fresh direct query at resolution time."""
+    rng = np.random.default_rng(seed)
+    kind = "ivf" if seed % 2 else "flat"
+    server = ZenServer(_prop_server(kind), frontend=True, cache_size=32,
+                       nprobe=6, clock=FakeClock())
+    sched = server.frontend
+    qpool = rng.normal(size=(16, 24)).astype(np.float32)
+    pending = []          # (handle, qrow, n_neighbors), not yet verified
+    next_id = 10_000
+
+    def verify_resolved():
+        still = []
+        for h, qrow, nn in pending:
+            if h.done():
+                direct = server.query(qrow[None], nn, direct=True)
+                assert _rows_equal(h.result(), direct)
+            else:
+                still.append((h, qrow, nn))
+        pending[:] = still
+
+    for _ in range(rng.integers(8, 20)):
+        op = rng.choice(["submit", "submit", "submit", "tick", "upsert",
+                         "delete", "compact"])
+        if op == "submit":
+            qrow = qpool[rng.integers(0, len(qpool))]
+            nn = int(rng.integers(1, 12))
+            try:
+                h = sched.submit(qrow, nn)
+            except FrontendOverloadError:
+                continue
+            pending.append((h, qrow, nn))
+            verify_resolved()         # cache hits resolve at submit time
+        elif op == "tick":
+            sched.tick()
+            verify_resolved()         # verify before any further churn
+        elif op == "upsert":
+            sched.tick()              # drain, then verify, then churn —
+            verify_resolved()         # responses reflect dispatch-time state
+            server.upsert([next_id], rng.normal(size=(1, 24)).astype(
+                np.float32))
+            next_id += 1
+        elif op == "delete":
+            sched.tick()
+            verify_resolved()
+            server.delete([int(rng.integers(0, 300))])
+        else:
+            sched.tick()
+            verify_resolved()
+            server.compact()
+    sched.flush()
+    verify_resolved()
+    assert not pending

@@ -1,0 +1,91 @@
+"""Golden oracle parity: the serving stack's exact output is pinned.
+
+``tests/golden/serving_golden.npz`` (committed; regenerated only by
+``tools/make_golden.py``) holds a fixed-seed corpus plus the expected
+top-k ids *and* distances of every major retrieval configuration — flat
+f32, IVF at ``nprobe = n_clusters`` (exact) and at a partial probe, int8
+storage, exact re-rank, and the jsd/qform non-Euclidean paths. Any PR
+that shifts these bits — a kernel rewrite, an estimator reorder, a
+quantisation change — fails here instead of drifting silently; an
+*intentional* numerical change regenerates the file in the same commit.
+"""
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "serving_golden.npz")
+_TOOL = os.path.join(os.path.dirname(__file__), os.pardir, "tools",
+                     "make_golden.py")
+
+
+def _load_tool():
+    spec = importlib.util.spec_from_file_location("make_golden", _TOOL)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with np.load(GOLDEN) as f:
+        return {k: f[k] for k in f.files}
+
+
+@pytest.fixture(scope="module")
+def tool():
+    return _load_tool()
+
+
+def test_golden_file_is_complete(golden, tool):
+    """Every pinned case (and its corpus) is present, with sane shapes."""
+    for space in ("euclid", "jsd"):
+        assert golden[f"corpus_{space}"].shape == (tool.N, tool.DIM)
+        assert golden[f"queries_{space}"].shape == (tool.Q, tool.DIM)
+    for name in tool.CASES:
+        assert golden[f"{name}_d"].shape == (tool.Q, tool.NN)
+        assert golden[f"{name}_ids"].shape == (tool.Q, tool.NN)
+        assert golden[f"{name}_d"].dtype == np.float32
+        assert golden[f"{name}_ids"].dtype == np.int32
+
+
+@pytest.mark.parametrize("name", [
+    "flat_zen", "flat_lwb", "ivf_exact", "ivf_probe4", "flat_int8",
+    "ivf_int8", "flat_rerank", "flat_jsd", "ivf_qform",
+])
+def test_case_matches_golden(golden, tool, name):
+    """Re-running a pinned configuration reproduces the committed bits."""
+    d, ids = tool.run_case(name, golden)
+    np.testing.assert_array_equal(
+        ids, golden[f"{name}_ids"],
+        err_msg=f"{name}: neighbour ids drifted from the golden file")
+    np.testing.assert_array_equal(
+        d, golden[f"{name}_d"],
+        err_msg=f"{name}: distances drifted from the golden file "
+                "(bit-exact comparison; regenerate via tools/make_golden.py "
+                "only for an intentional numerical change)")
+
+
+def test_ivf_full_probe_equals_flat(golden):
+    """nprobe = n_clusters recovers the flat scan exactly — pinned both
+    as a cross-check between two golden cases (no recomputation)."""
+    np.testing.assert_array_equal(golden["ivf_exact_ids"],
+                                  golden["flat_zen_ids"])
+    np.testing.assert_array_equal(golden["ivf_exact_d"],
+                                  golden["flat_zen_d"])
+
+
+def test_regen_script_reproduces_committed_file(golden, tool):
+    """``tools/make_golden.py`` regenerates the committed file bit-for-bit
+    — the synthetic-data pipeline and every configuration are jointly
+    deterministic, so the golden file can always be audited by rerunning
+    the script."""
+    regen = tool.build_golden()
+    assert set(regen) == set(golden), "golden array set changed"
+    for key in sorted(regen):
+        np.testing.assert_array_equal(
+            regen[key], golden[key],
+            err_msg=f"regenerated array {key!r} differs from the "
+                    "committed golden file")

@@ -1,0 +1,146 @@
+"""Regenerate the committed golden-parity corpus (tests/golden/).
+
+The golden file pins the serving stack's *exact* numerical output across
+PRs: a fixed-seed corpus + query set and the expected top-k ids/distances
+of every major retrieval configuration — flat f32, IVF probed at
+``nprobe = n_clusters`` (exact), int8 storage, exact re-rank, and the
+non-Euclidean jsd/qform paths. ``tests/test_golden_parity.py`` replays
+each configuration against the stored corpus and requires bit-identical
+results; it also re-runs :func:`build_golden` and requires the regenerated
+arrays to match the committed file bit-for-bit, so the synthetic-data
+pipeline is pinned too.
+
+Regenerate (only when an intentional numerical change lands — commit the
+diff together with the change that justifies it):
+
+    PYTHONPATH=src python tools/make_golden.py
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Dict
+
+import numpy as np
+
+import jax
+
+from repro.data import synthetic as syn
+from repro.launch.serve import ZenServer, build_index
+
+
+@contextlib.contextmanager
+def _force_x32():
+    """Pin the golden computations to f32 regardless of ambient config.
+
+    Some test modules enable ``jax_enable_x64`` globally at import time;
+    the golden bits are defined as the serving stack's *default* (x32)
+    numerics, so both generation and replay run under this guard.
+    """
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+#: golden geometry — small enough to commit, big enough that top-k is
+#: non-trivial (multiple IVF clusters, real neighbour structure)
+N, DIM, K, Q, NN = 512, 32, 8, 16, 10
+N_CLUSTERS = 16
+
+GOLDEN_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "tests", "golden", "serving_golden.npz")
+
+#: the pinned configurations: name -> (corpus space, build/server kwargs)
+CASES = {
+    "flat_zen": dict(space="euclid", metric="euclidean", index="flat"),
+    "flat_lwb": dict(space="euclid", metric="euclidean", index="flat",
+                     mode="lwb"),
+    "ivf_exact": dict(space="euclid", metric="euclidean", index="ivf",
+                      nprobe=N_CLUSTERS),
+    "ivf_probe4": dict(space="euclid", metric="euclidean", index="ivf",
+                       nprobe=4),
+    "flat_int8": dict(space="euclid", metric="euclidean", index="flat",
+                      storage="int8"),
+    "ivf_int8": dict(space="euclid", metric="euclidean", index="ivf",
+                     storage="int8", nprobe=N_CLUSTERS),
+    "flat_rerank": dict(space="euclid", metric="euclidean", index="flat",
+                        rerank_factor=4),
+    "flat_jsd": dict(space="jsd", metric="jsd", index="flat",
+                     rerank_factor=4),
+    "ivf_qform": dict(space="euclid", metric="qform", index="ivf",
+                      nprobe=N_CLUSTERS, rerank_factor=4),
+}
+
+
+def _spaces() -> Dict[str, np.ndarray]:
+    """Fixed-seed corpus/query pairs per metric domain."""
+    with _force_x32():
+        return _spaces_x32()
+
+
+def _spaces_x32() -> Dict[str, np.ndarray]:
+    key = jax.random.PRNGKey(1234)
+    return {
+        "corpus_euclid": np.asarray(
+            syn.manifold_space(key, N, DIM, DIM // 4), np.float32),
+        "queries_euclid": np.asarray(
+            syn.manifold_space(jax.random.fold_in(key, 1), Q, DIM, DIM // 4),
+            np.float32),
+        # probability vectors: the jsd metric's natural domain
+        "corpus_jsd": np.asarray(
+            syn.probability_space(jax.random.fold_in(key, 2), N, DIM,
+                                  DIM // 4), np.float32),
+        "queries_jsd": np.asarray(
+            syn.probability_space(jax.random.fold_in(key, 3), Q, DIM,
+                                  DIM // 4), np.float32),
+    }
+
+
+def run_case(name: str, arrays: Dict[str, np.ndarray]):
+    """(distances, ids) of one pinned configuration over the stored data."""
+    with _force_x32():
+        return _run_case_x32(name, arrays)
+
+
+def _run_case_x32(name: str, arrays: Dict[str, np.ndarray]):
+    cfg = dict(CASES[name])
+    space = cfg.pop("space")
+    corpus = np.asarray(arrays[f"corpus_{space}"])
+    queries = np.asarray(arrays[f"queries_{space}"])
+    build_kw = dict(
+        metric=cfg.pop("metric"), index=cfg.pop("index"),
+        storage=cfg.pop("storage", "float32"),
+        key=jax.random.PRNGKey(7),
+    )
+    if build_kw["index"] == "ivf":
+        build_kw["n_clusters"] = N_CLUSTERS
+    index = build_index(jax.numpy.asarray(corpus), K, **build_kw)
+    server = ZenServer(index, **cfg)
+    d, ids = server.query(jax.numpy.asarray(queries), NN)
+    return np.asarray(d, np.float32), np.asarray(ids, np.int32)
+
+
+def build_golden() -> Dict[str, np.ndarray]:
+    """All golden arrays: the corpora plus every case's expected output."""
+    arrays = _spaces()
+    for name in CASES:
+        d, ids = run_case(name, arrays)
+        arrays[f"{name}_d"] = d
+        arrays[f"{name}_ids"] = ids
+    return arrays
+
+
+def main() -> None:
+    arrays = build_golden()
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    np.savez(GOLDEN_PATH, **arrays)
+    size = os.path.getsize(GOLDEN_PATH)
+    print(f"wrote {GOLDEN_PATH} ({size / 1024:.1f} KiB, "
+          f"{len(arrays)} arrays, {len(CASES)} cases)")
+
+
+if __name__ == "__main__":
+    main()

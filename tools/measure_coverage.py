@@ -1,0 +1,125 @@
+"""Dev-container line-coverage harness (pytest-cov stand-in).
+
+The dev container cannot install ``pytest-cov``/``coverage``, but the CI
+coverage floor (``--cov-fail-under`` in ``.github/workflows/ci.yml``) must
+be ratcheted against a measured number. This harness approximates
+``coverage.py``'s line metric with the stdlib only:
+
+  * the *denominator* is every executable line of ``src/repro`` — the
+    union of ``co_lines()`` over all code objects compiled from each file;
+  * the *numerator* is the set of those lines fired by a ``sys.settrace``
+    line hook while pytest runs (tracing is disabled inside files outside
+    ``src/repro``, so the overhead stays tolerable).
+
+Subprocess-spawned tests (the 4-device mesh suites) don't report into the
+parent tracer — same blind spot PR 4 noted — so the number reads *below*
+what pytest-cov sees in CI. Keep the CI floor at least a point under the
+measurement from this tool.
+
+Usage (optionally sharding the suite across invocations, merging the
+line sets via --state):
+
+    PYTHONPATH=src python tools/measure_coverage.py --state /tmp/cov.pkl \
+        tests/test_a.py tests/test_b.py
+    PYTHONPATH=src python tools/measure_coverage.py --state /tmp/cov.pkl \
+        --report tests/test_c.py
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pickle
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src", "repro")
+
+
+def executable_lines() -> dict:
+    """{abspath: set(line)} of every compilable line under src/repro."""
+    out = {}
+    for dirpath, _, files in os.walk(SRC):
+        for name in sorted(files):
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, name)
+            with open(path) as f:
+                try:
+                    code = compile(f.read(), path, "exec")
+                except SyntaxError:
+                    continue
+            lines, stack = set(), [code]
+            while stack:
+                co = stack.pop()
+                lines.update(ln for _, _, ln in co.co_lines()
+                             if ln is not None)
+                stack.extend(c for c in co.co_consts
+                             if hasattr(c, "co_lines"))
+            out[path] = lines
+    return out
+
+
+def run_traced(pytest_args) -> dict:
+    """Run pytest under a line tracer; {abspath: set(line)} executed."""
+    import pytest
+
+    hit: dict = {}
+
+    def tracer(frame, event, arg):
+        fn = frame.f_code.co_filename
+        if not fn.startswith(SRC):
+            return None  # don't descend into non-target files
+        if event == "line":
+            hit.setdefault(fn, set()).add(frame.f_lineno)
+        return tracer
+
+    sys.settrace(tracer)
+    try:
+        rc = pytest.main(pytest_args)
+    finally:
+        sys.settrace(None)
+    if rc not in (0,):
+        raise SystemExit(f"pytest failed (exit {rc}); coverage not valid")
+    return hit
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("pytest_args", nargs="*",
+                   help="files/args passed to pytest (default: the "
+                        "not-slow tier-1 suite)")
+    p.add_argument("--state", default=None,
+                   help="pickle accumulating executed lines across "
+                        "sharded invocations")
+    p.add_argument("--report", action="store_true",
+                   help="print the merged coverage after this shard")
+    args = p.parse_args()
+
+    pytest_args = args.pytest_args or ["-q", "-m", "not slow", "tests"]
+    hit = run_traced(["-q", "-p", "no:cacheprovider", *pytest_args])
+
+    if args.state and os.path.exists(args.state):
+        with open(args.state, "rb") as f:
+            prev = pickle.load(f)
+        for fn, lines in prev.items():
+            hit.setdefault(fn, set()).update(lines)
+    if args.state:
+        with open(args.state, "wb") as f:
+            pickle.dump(hit, f)
+
+    if args.report or not args.state:
+        want = executable_lines()
+        total = sum(len(v) for v in want.values())
+        got = sum(len(want[fn] & hit.get(fn, set())) for fn in want)
+        print(f"\nsrc/repro line coverage: {got}/{total} "
+              f"= {100.0 * got / total:.1f}%")
+        worst = sorted(
+            want, key=lambda fn: len(want[fn] & hit.get(fn, set()))
+            / max(len(want[fn]), 1))[:8]
+        for fn in worst:
+            cov = len(want[fn] & hit.get(fn, set())) / max(len(want[fn]), 1)
+            print(f"  {100 * cov:5.1f}%  {os.path.relpath(fn, ROOT)}")
+
+
+if __name__ == "__main__":
+    main()
