@@ -625,6 +625,129 @@ def bench_retrieval_frontend(smoke: bool = False) -> None:
     )
 
 
+def bench_retrieval_offload(smoke: bool = False) -> None:
+    """Tiered tile store: host-resident inverted lists vs all-resident, and
+    degraded-shard serving under a dead heartbeat. Two phases:
+
+    **Memory/recall flatness** — synthetic pre-clustered apex coordinates
+    (known assignment; k-means would dominate the wall clock at 1e7 rows)
+    are packed into the IVF tile layout, offloaded with a *fixed* hot set,
+    and probed at matched nprobe. Reported per index size:
+
+      * device-resident bytes (centroids + hot tiles + the double-buffered
+        upload allowance) — the acceptance bar is the largest size staying
+        within 2x of the smallest while the host pool grows ~linearly;
+      * recall@10 of the tiered search against the all-resident index at
+        equal nprobe (the same kernel scores the same tiles: 1.000);
+      * QPS of the tiered probe and the upload traffic behind it.
+
+    **Degraded serving** — a ``ZenServer`` over an offloaded index with
+    fault tolerance enabled (fake clock): one logical shard's heartbeat
+    stops mid-run; its clusters are masked, queries keep answering (no
+    raise), and the row reports the recall drop + ``degraded_shards``.
+    """
+    from repro.core.quality import recall_at_k
+    from repro.index.ivf import IVFZenIndex, TieredIVFZenIndex
+
+    q, kdim, nn, nprobe = 32, 8, 10, 8
+    tile_rows, T, hot = 128, 2, 64
+    per_cluster = tile_rows * T
+    # exact multiples of the tile capacity: every cluster packs full
+    cs = (781, 3906) if smoke else (3906, 39062)  # ~2e5/1e6 or ~1e6/1e7
+    rng = np.random.default_rng(0)
+
+    device_bytes = []
+    for C in cs:
+        n = C * per_cluster
+        centroids = rng.standard_normal((C, kdim)).astype(np.float32) * 8.0
+        coords = np.repeat(centroids, per_cluster, axis=0)
+        coords += 0.25 * rng.standard_normal(coords.shape).astype(np.float32)
+        coords[:, -1] = np.abs(coords[:, -1])
+        assign = np.repeat(np.arange(C, dtype=np.int64), per_cluster)
+        ids = np.arange(n, dtype=np.int64)
+
+        t0 = time.perf_counter()
+        resident = IVFZenIndex.from_members(
+            coords, ids, assign, jnp.asarray(centroids), C, tile_rows)
+        tiered = TieredIVFZenIndex.from_index(
+            resident, hot_clusters=hot, prefetch_cols=2)
+        t_build = (time.perf_counter() - t0) * 1e6
+        _row(f"retrieval_offload_build_n{n}", t_build,
+             f"clusters={C};hot={hot};tile_rows={tile_rows}")
+
+        pick = rng.choice(n, size=q, replace=False)
+        Qb = jnp.asarray(coords[pick]
+                         + 0.05 * rng.standard_normal((q, kdim)), jnp.float32)
+        res_ids = np.asarray(resident.search(Qb, nn, nprobe=nprobe)[1])
+        fn = lambda: tiered.search(Qb, nn, nprobe=nprobe)
+        rec = recall_at_k(res_ids, np.asarray(fn()[1]))  # also warms
+        t = _timeit(lambda: fn()[0], repeat=2)
+        st = tiered.stats()
+        # flatness is judged on the *provisioned* peak (resident arrays +
+        # the analytic staging-buffer bound for this batch shape): the
+        # observed mark depends on which slot bucket the traffic happened
+        # to land in, which jumps by 2x at the bucketing boundaries.
+        device_bytes.append(tiered.provisioned_device_bytes(q))
+        _row(
+            f"retrieval_offload_probe_n{n}", t,
+            f"qps={q / (t * 1e-6):.0f};recall10_vs_resident={rec:.3f};"
+            f"device_mb={st['device_bytes'] / 2**20:.2f};"
+            f"provisioned_mb={device_bytes[-1] / 2**20:.2f};"
+            f"host_mb={st['host_bytes'] / 2**20:.2f};"
+            f"uploaded_mb={st['bytes_uploaded'] / 2**20:.2f};"
+            f"cold_uploads={st['cold_uploads']};nprobe={nprobe}",
+        )
+        del resident, tiered, coords, ids, assign
+    growth = device_bytes[-1] / device_bytes[0]
+    n_growth = cs[-1] / cs[0]
+    _row("retrieval_offload_device_mem_growth", 0.0,
+         f"device_growth={growth:.2f}x_over_{n_growth:.0f}x_rows;"
+         f"flat={'yes' if growth < 2.0 else 'NO'}")
+
+    # degraded serving: kill one logical shard's heartbeat mid-run
+    from repro.data import synthetic as syn
+    from repro.launch.serve import ZenServer, build_index
+
+    n, dim, shards = (20_000 if smoke else 100_000), 64, 4
+
+    class _Clock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    key = jax.random.PRNGKey(0)
+    corpus = syn.manifold_space(key, n, dim, 8)
+    index = build_index(corpus, 16, index="ivf", offload=True,
+                        hot_clusters=16, offload_shards=shards,
+                        key=jax.random.fold_in(key, 2))
+    srv = ZenServer(index, nprobe=16)
+    clock = _Clock()
+    srv.enable_fault_tolerance(deadline_s=5.0, clock=clock)
+    for s in range(shards):
+        srv.heartbeat(s)
+    Qs = syn.manifold_space(jax.random.fold_in(key, 3), q, dim, 8)
+    resident_srv = ZenServer(
+        build_index(corpus, 16, index="ivf",
+                    key=jax.random.fold_in(key, 2)), nprobe=16)
+    truth = np.asarray(resident_srv.query(Qs, nn)[1])
+
+    t_h = _timeit(lambda: srv.query(Qs, nn)[0], repeat=2)
+    rec_h = recall_at_k(truth, np.asarray(srv.query(Qs, nn)[1]))
+    clock.t = 6.0  # shard0's heartbeat goes silent; the rest keep beating
+    for s in range(1, shards):
+        srv.heartbeat(s)
+    rec_d = recall_at_k(truth, np.asarray(srv.query(Qs, nn)[1]))  # no raise
+    st = srv.stats()
+    _row(
+        f"retrieval_offload_degraded_n{n}", t_h,
+        f"recall10_healthy={rec_h:.3f};recall10_degraded={rec_d:.3f};"
+        f"degraded_shards={','.join(st['degraded_shards']) or 'none'};"
+        f"masked_clusters={st['tier']['masked_clusters']};"
+        f"shards={shards};queries_raised=0",
+    )
+
+
 def bench_serving() -> None:
     from repro.data import synthetic as syn
     from repro.launch.serve import ZenServer, build_index
@@ -653,6 +776,7 @@ _WORKLOADS = {
     "retrieval_churn": lambda a: bench_retrieval_churn(smoke=a.smoke),
     "retrieval_quantized": lambda a: bench_retrieval_quantized(smoke=a.smoke),
     "retrieval_frontend": lambda a: bench_retrieval_frontend(smoke=a.smoke),
+    "retrieval_offload": lambda a: bench_retrieval_offload(smoke=a.smoke),
 }
 
 

@@ -127,12 +127,20 @@ def load_state(
     directory: str,
     *,
     expect_kind: Optional[str] = None,
+    mmap: bool = False,
 ) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
     """Load a snapshot written by :func:`save_state`.
 
     Args:
       directory:   snapshot directory.
       expect_kind: when given, the manifest's ``kind`` must match.
+      mmap:        memory-map the ``.npy`` files (read-only) instead of
+                   materialising them — the tiered tile store serves a
+                   host pool far larger than RAM straight off the snapshot
+                   (``index.ivf.TieredIVFZenIndex.load``); fancy-indexed
+                   block reads touch only the probed pages. bf16 arrays
+                   come back as a (zero-copy) view of the mapped uint16
+                   bits.
 
     Returns ``(arrays, meta)`` with host numpy arrays.
 
@@ -165,7 +173,8 @@ def load_state(
         )
     arrays: Dict[str, np.ndarray] = {}
     for name, entry in manifest["arrays"].items():
-        arr = np.load(os.path.join(directory, entry["file"]))
+        arr = np.load(os.path.join(directory, entry["file"]),
+                      mmap_mode="r" if mmap else None)
         if entry["dtype"] == "bfloat16":
             if _BF16 is None:  # pragma: no cover - ml_dtypes ships with jax
                 raise CheckpointFormatError(

@@ -10,6 +10,7 @@ it is an evaluation-only path, never inside a training step.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict
 
 import numpy as np
@@ -95,16 +96,42 @@ def quadratic_loss(delta, zeta) -> float:
     return float(np.sum((delta - zeta) ** 2))
 
 
+def _tie_averaged_ranks(a: np.ndarray) -> np.ndarray:
+    """1-indexed ranks where tied values share the average of their ranks
+    (the "average" method, matching ``scipy.stats.spearmanr``)."""
+    order = np.argsort(a, kind="stable")
+    ranks = np.empty(a.size, np.float64)
+    ranks[order] = np.arange(1, a.size + 1, dtype=np.float64)
+    _, inv, counts = np.unique(a, return_inverse=True, return_counts=True)
+    sums = np.zeros(counts.size, np.float64)
+    np.add.at(sums, inv, ranks)
+    return sums[inv] / counts[inv]
+
+
 def spearman_rho(delta, zeta) -> float:
-    """Spearman rank correlation over sampled pairwise distances (Eq. 33)."""
+    """Spearman rank correlation over sampled pairwise distances (Eq. 33).
+
+    Ranks are tie-averaged: quantized (int8) and JSD near-equidistant
+    corpora produce many exactly-tied distances, and dense integer ranks
+    would order ties arbitrarily and bias rho. With ties present the
+    ``1 - 6*sum(d^2)/(t^3 - t)`` shortcut is no longer exact, so rho is
+    computed as the Pearson correlation of the averaged ranks — identical
+    to the shortcut when all values are distinct. NaN for fewer than two
+    pairs (the shortcut divides by zero) or a constant input.
+    """
     delta = np.asarray(delta, np.float64).ravel()
     zeta = np.asarray(zeta, np.float64).ravel()
     t = delta.shape[0]
-    rank = lambda a: np.argsort(np.argsort(a, kind="stable"), kind="stable").astype(
-        np.float64
-    )
-    dr, zr = rank(delta), rank(zeta)
-    return float(1.0 - 6.0 * np.sum((dr - zr) ** 2) / (t**3 - t))
+    if t < 2:
+        return float("nan")
+    dr = _tie_averaged_ranks(delta)
+    zr = _tie_averaged_ranks(zeta)
+    dr -= dr.mean()
+    zr -= zr.mean()
+    denom = math.sqrt(float(np.sum(dr * dr)) * float(np.sum(zr * zr)))
+    if denom == 0.0:
+        return float("nan")
+    return float(np.sum(dr * zr) / denom)
 
 
 # -- kNN recall as logistic-relevance DCG (paper Appendix E.3) ---------------
@@ -112,9 +139,13 @@ def spearman_rho(delta, zeta) -> float:
 
 def rank_relevance(i: np.ndarray, n: int = 1000) -> np.ndarray:
     """Paper Eq. (34): inverse-sigmoid relevance of the i-th true neighbour
-    (1-indexed ranks)."""
-    del n
-    return 1.0 - 1.0 / (1.0 + np.exp(-(i - 500.0) / 100.0))
+    (1-indexed ranks), midpoint n/2 and width n/10 so the significant
+    region scales with the result-list length n. At realistic serving k
+    (10–128) a fixed n=1000 sigmoid would rate every rank ~0.993 and any
+    shuffle of the list would still score ~1.0.
+    """
+    i = np.asarray(i, np.float64)
+    return 1.0 - 1.0 / (1.0 + np.exp(-(i - n / 2.0) / (n / 10.0)))
 
 
 def dcg_recall(true_ids: np.ndarray, approx_ids: np.ndarray) -> float:
@@ -130,13 +161,14 @@ def dcg_recall(true_ids: np.ndarray, approx_ids: np.ndarray) -> float:
     pos_in_true = {int(t): i + 1 for i, t in enumerate(true_ids)}  # 1-indexed
     i = np.arange(1, n + 1, dtype=np.float64)
     discount = np.log2(i + 1.0)
-    # relevance of the object found at approx rank i = R(rank in true list)
+    # relevance of the object found at approx rank i = R(rank in true list);
+    # a miss lands at rank 2n, deep past the sigmoid cliff (relevance ~0)
     ranks = np.array(
-        [pos_in_true.get(int(a), n + 1000) for a in approx_ids], np.float64
+        [pos_in_true.get(int(a), 2 * n) for a in approx_ids], np.float64
     )
-    rel = rank_relevance(ranks)
+    rel = rank_relevance(ranks, n)
     dcg = np.sum((np.power(2.0, rel) - 1.0) / discount)
-    ideal = np.sum((np.power(2.0, rank_relevance(i)) - 1.0) / discount)
+    ideal = np.sum((np.power(2.0, rank_relevance(i, n)) - 1.0) / discount)
     return float(dcg / ideal)
 
 

@@ -53,14 +53,17 @@ class StepMonitor:
             self.ema = step_time
             return None
         flagged = None
-        if self.n > self.warmup_steps and step_time > self.threshold * self.ema:
-            self.consecutive += 1
-            flagged = StragglerEvent(step, step_time, self.ema,
-                                     step_time / self.ema)
-            self.events.append(flagged)
+        if step_time > self.threshold * self.ema:
+            # never fold a straggler into the EMA (keep the baseline honest)
+            # — warmup included, where absorbing one would inflate the EMA
+            # enough to hide every later straggler behind the raised bar
+            if self.n > self.warmup_steps:
+                self.consecutive += 1
+                flagged = StragglerEvent(step, step_time, self.ema,
+                                         step_time / self.ema)
+                self.events.append(flagged)
         else:
             self.consecutive = 0
-            # only fold non-straggler steps into the EMA (keep it honest)
             self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * step_time
         return flagged
 
@@ -71,23 +74,45 @@ class StepMonitor:
 
 
 class HeartbeatRegistry:
+    """Liveness bookkeeping over an *expected* membership.
+
+    ``register(host)`` declares that a host is supposed to beat; a host that
+    registers (or is registered by the deployment) and then never beats is
+    reported dead one deadline after registration — silence from birth is
+    indistinguishable from an early crash and must not be invisible.
+    ``beat`` on an unknown host implicitly registers it.
+    """
+
     def __init__(self, deadline_s: float = 60.0, now: Callable[[], float] = time.monotonic):
         self.deadline_s = deadline_s
         self._now = now
-        self._last: Dict[str, float] = {}
+        self._last: Dict[str, float] = {}        # host -> last beat time
+        self._registered: Dict[str, float] = {}  # host -> registration time
+
+    def register(self, host: str) -> None:
+        """Declare expected membership (idempotent; keeps the first time)."""
+        self._registered.setdefault(host, self._now())
 
     def beat(self, host: str) -> None:
+        self._registered.setdefault(host, self._now())
         self._last[host] = self._now()
+
+    def expected(self) -> list[str]:
+        return sorted(self._registered)
+
+    def _deadline_ref(self, host: str) -> float:
+        """Last beat, or registration time for a host that never beat."""
+        return self._last.get(host, self._registered[host])
 
     def dead_hosts(self) -> list[str]:
         t = self._now()
-        return [h for h, last in self._last.items()
-                if t - last > self.deadline_s]
+        return [h for h in self.expected()
+                if t - self._deadline_ref(h) > self.deadline_s]
 
     def alive(self) -> list[str]:
         t = self._now()
-        return sorted(h for h, last in self._last.items()
-                      if t - last <= self.deadline_s)
+        return sorted(h for h in self.expected()
+                      if t - self._deadline_ref(h) <= self.deadline_s)
 
 
 class PreemptionGuard:

@@ -60,6 +60,8 @@ from repro.core import metrics as metrics_lib
 from repro.core import zen as zen_lib
 from repro.kernels import ops as kernel_ops
 from repro.kernels import quantize as quant
+from repro.kernels import scoring
+from repro.kernels import tile_stage
 
 from .kmeans import kmeans_assign, kmeans_fit
 
@@ -68,6 +70,9 @@ Array = jax.Array
 #: snapshot kind tag for IVF indexes (flat and sharded share one canonical
 #: on-disk representation: live members + global quantizer)
 IVF_SNAPSHOT_KIND = "ivf-index"
+#: tiered-store snapshot: the packed *tile layout* itself (not the member
+#: list), so a memmapped load serves straight off the snapshot files
+TILE_POOL_SNAPSHOT_KIND = "ivf-tile-pool"
 
 
 def _check_ids(ids: np.ndarray) -> None:
@@ -1054,8 +1059,13 @@ class ShardedIVFZenIndex:
         mode: str = "zen",
         *,
         force_kernel: bool = False,
+        alive: Optional[Array] = None,
     ) -> Tuple[Array, Array]:
-        """Per-shard IVF probe + host-side candidate merge (global ids)."""
+        """Per-shard IVF probe + on-mesh ring merge (global ids).
+
+        ``alive`` is an optional (n_shards,) bool mask (degraded serving):
+        a False shard's candidates are dropped inside the merge.
+        """
         from repro.distributed import retrieval as retrieval_lib
 
         assert n_neighbors > 0, n_neighbors
@@ -1069,4 +1079,443 @@ class ShardedIVFZenIndex:
             mode, mesh=self.mesh, axis=self.axis_names,
             tiles_per_cluster=self.tiles_per_cluster,
             tile_scales=self.tile_scales, force_kernel=force_kernel,
+            alive=alive,
+        )
+
+
+# -- tiered (host-offloaded) serving ------------------------------------------
+
+
+class TieredIVFZenIndex:
+    """Serve-only IVF index whose inverted lists live in a host-resident pool.
+
+    The all-resident layouts above keep every packed tile in device memory,
+    so the corpus is capped by HBM. This tier splits the same layout:
+
+      * **device-resident**: the coarse-quantizer centroids, the per-cluster
+        dequant scales, and a configurable *hot set* of high-traffic
+        clusters (plus one always-empty dummy cluster that absorbs probe
+        slots pointing at cold or dead clusters);
+      * **host-resident**: the full ``(C*T, tile_rows, k)`` tile pool as
+        plain numpy — optionally a read-only memmap of a
+        :data:`TILE_POOL_SNAPSHOT_KIND` snapshot (:meth:`load`), in which
+        case cold tiles are paged straight off disk.
+
+    A search runs the normal coarse probe, answers the hot part of every
+    probe list from the resident hot set, and walks the cold probe columns
+    in fixed-width chunks: the upload for chunk ``j+1`` is *issued* (an
+    async transfer — ``kernels.tile_stage.stage_blocks``: Pallas DMA
+    through pinned host memory on TPU, plain ``device_put`` elsewhere)
+    before chunk ``j`` is scored, so ``ivf_probe`` never waits on a cold
+    tile it already knew it needed. Upload buffers are bucketed to
+    power-of-two cluster counts, which bounds the distinct probe-kernel
+    shapes (and therefore recompiles) to O(log C).
+
+    Results are bit-compatible with ``IVFZenIndex.search`` at equal
+    ``nprobe`` up to the ordering of exactly-tied distances: the same
+    kernel scores the same probed tiles, only partitioned differently.
+
+    For degraded serving the clusters are statically partitioned over
+    ``n_shards`` logical shards (cluster ``c`` lives on shard ``c %
+    n_shards``); :meth:`set_dead_shards` masks a dead shard's clusters out
+    of both passes, so queries keep answering from the survivors with
+    reduced recall instead of raising (``launch.serve.ZenServer`` drives
+    this from its ``HeartbeatRegistry``).
+
+    The tier is immutable serving state: no upsert/delete/compact — churn
+    the resident index and re-offload (:meth:`from_index`).
+    """
+
+    def __init__(
+        self,
+        centroids,
+        host_coords: np.ndarray,
+        host_ids: np.ndarray,
+        *,
+        n_clusters: int,
+        tiles_per_cluster: int,
+        tile_rows: int,
+        n_valid: int,
+        storage: str = "float32",
+        host_scales: Optional[np.ndarray] = None,
+        hot_clusters: Optional[np.ndarray] = None,
+        prefetch_cols: int = 2,
+        n_shards: int = 1,
+        force_stage_kernel: bool = False,
+        generation: int = 0,
+    ):
+        ct = n_clusters * tiles_per_cluster
+        assert host_coords.shape[:2] == (ct, tile_rows), host_coords.shape
+        assert host_ids.shape == (ct, tile_rows), host_ids.shape
+        assert n_shards >= 1, n_shards
+        self.centroids = jnp.asarray(centroids)
+        self.host_coords = host_coords
+        self.host_ids = host_ids
+        self.host_scales = (None if host_scales is None
+                            else np.asarray(host_scales, np.float32))
+        self.n_clusters = n_clusters
+        self.tiles_per_cluster = tiles_per_cluster
+        self.tile_rows = tile_rows
+        self.n_valid = n_valid
+        self.n_deleted = 0
+        self.storage = storage
+        self.prefetch_cols = max(1, prefetch_cols)
+        self.n_shards = n_shards
+        self.force_stage_kernel = force_stage_kernel
+        self.generation = generation
+        self.dead_shards: list = []
+        self._dead_cluster = np.zeros(n_clusters, bool)
+        self._traffic = np.zeros(n_clusters, np.int64)
+        self._hot_hits = 0
+        self._cold_uploads = 0
+        self._bytes_uploaded = 0
+        self._max_chunk_bytes = 0
+        if hot_clusters is None:
+            hot_clusters = np.empty(0, np.int64)
+        self._set_hot(np.asarray(hot_clusters, np.int64))
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_index(
+        cls,
+        index: IVFZenIndex,
+        *,
+        hot_clusters: Optional[int] = None,
+        hot_fraction: float = 0.1,
+        prefetch_cols: int = 2,
+        n_shards: int = 1,
+        force_stage_kernel: bool = False,
+    ) -> "TieredIVFZenIndex":
+        """Offload a resident index: tiles drop to host, a hot set stays.
+
+        The initial hot set is the ``hot_clusters`` (default
+        ``hot_fraction`` of C) largest clusters by live member count — the
+        best traffic proxy before any query lands; :meth:`refresh_hot`
+        re-picks by observed probe traffic.
+        """
+        C = index.n_clusters
+        sizes = index.cluster_sizes()
+        H = (max(0, min(int(hot_clusters), C)) if hot_clusters is not None
+             else max(1, int(C * hot_fraction)))
+        hot = np.sort(np.argsort(sizes, kind="stable")[::-1][:H])
+        return cls(
+            index.centroids,
+            np.asarray(index.tile_coords),
+            np.asarray(index.tile_ids, np.int32),
+            n_clusters=C,
+            tiles_per_cluster=index.tiles_per_cluster,
+            tile_rows=index.tile_rows,
+            n_valid=index.n_valid,
+            storage=index.storage,
+            host_scales=(None if index.tile_scales is None
+                         else np.asarray(index.tile_scales, np.float32)),
+            hot_clusters=hot,
+            prefetch_cols=prefetch_cols,
+            n_shards=n_shards,
+            force_stage_kernel=force_stage_kernel,
+            generation=index.generation,
+        )
+
+    @property
+    def size(self) -> int:
+        return self.n_valid
+
+    @property
+    def dim(self) -> int:
+        return int(self.centroids.shape[1])
+
+    @property
+    def tile_scales(self):
+        """Host view of the per-cluster scales (snapshot-payload contract)."""
+        return self.host_scales
+
+    # -- hot set -------------------------------------------------------------
+    def _set_hot(self, hot: np.ndarray) -> None:
+        """(Re)upload the hot cluster set + the trailing dummy cluster."""
+        C, T, rows = self.n_clusters, self.tiles_per_cluster, self.tile_rows
+        kdim = self.host_coords.shape[2]
+        self.hot_clusters = np.sort(hot.astype(np.int64))
+        H = self.hot_clusters.size
+        blocks = (self.hot_clusters[:, None] * T + np.arange(T)).reshape(-1)
+        coords = np.zeros((
+            (H + 1) * T, rows, kdim), self.host_coords.dtype)
+        ids = np.full(((H + 1) * T, rows), -1, np.int32)
+        if H:
+            coords[:H * T] = self.host_coords[blocks]
+            ids[:H * T] = self.host_ids[blocks]
+        self._hot_coords = tile_stage.stage_blocks(
+            coords, force_kernel=self.force_stage_kernel)
+        self._hot_ids = tile_stage.stage_blocks(
+            ids, force_kernel=self.force_stage_kernel)
+        if self.host_scales is None:
+            self._hot_scales = None
+        else:
+            hs = np.ones((H + 1, 1), np.float32)
+            if H:
+                hs[:H] = self.host_scales[self.hot_clusters]
+            self._hot_scales = jnp.asarray(hs)
+        base = np.full(C, H, np.int32)  # cold clusters -> the dummy slot
+        base[self.hot_clusters] = np.arange(H, dtype=np.int32)
+        self._base_slot = base
+        self._refresh_slot()
+
+    def _refresh_slot(self) -> None:
+        dummy = np.int32(self.hot_clusters.size)
+        self._hot_slot = np.where(self._dead_cluster, dummy, self._base_slot)
+
+    def refresh_hot(self, hot_clusters: Optional[int] = None) -> None:
+        """Re-pick the hot set from observed probe traffic and re-upload."""
+        H = (self.hot_clusters.size if hot_clusters is None
+             else max(0, min(int(hot_clusters), self.n_clusters)))
+        order = np.argsort(self._traffic, kind="stable")[::-1]
+        self._set_hot(np.sort(order[:H]))
+
+    # -- degraded serving ----------------------------------------------------
+    def shard_of_cluster(self) -> np.ndarray:
+        """(C,) logical shard owning each cluster."""
+        return np.arange(self.n_clusters) % self.n_shards
+
+    def set_dead_shards(self, shards) -> None:
+        """Mask the given logical shards' clusters out of every probe."""
+        dead = sorted({int(s) for s in shards})
+        for s in dead:
+            if not 0 <= s < self.n_shards:
+                raise ValueError(
+                    f"shard {s} out of range for n_shards={self.n_shards}")
+        self.dead_shards = dead
+        self._dead_cluster = np.isin(self.shard_of_cluster(), dead)
+        self._refresh_slot()
+
+    # -- memory accounting ---------------------------------------------------
+    def device_bytes(self) -> int:
+        """Device-resident footprint: centroids + hot set + the (double-
+        buffered) peak cold upload, the figure the benchmark holds flat."""
+        resident = (self.centroids.nbytes + self._hot_coords.nbytes
+                    + self._hot_ids.nbytes)
+        if self._hot_scales is not None:
+            resident += self._hot_scales.nbytes
+        return resident + 2 * self._max_chunk_bytes
+
+    def provisioned_device_bytes(self, n_queries: int) -> int:
+        """Worst-case device high-water mark for ``n_queries``-row batches:
+        the resident arrays plus both staging buffers at the largest slot
+        bucket ``_stage_chunk`` can allocate for that batch shape. Unlike
+        ``device_bytes`` (the observed mark) this does not depend on which
+        clusters the traffic happened to touch, so it is the figure to
+        provision — and to compare across corpus sizes."""
+        worst_uniq = min(int(n_queries) * self.prefetch_cols, self.n_clusters)
+        n_slots = min(1 << worst_uniq.bit_length(), self.n_clusters + 1)
+        n_slots = max(n_slots, worst_uniq + 1)
+        T, rows = self.tiles_per_cluster, self.tile_rows
+        kdim = self.host_coords.shape[2]
+        per_slot = T * rows * (kdim * self.host_coords.dtype.itemsize + 4)
+        chunk = n_slots * per_slot
+        if self.host_scales is not None:
+            chunk += n_slots * 4
+        resident = (self.centroids.nbytes + self._hot_coords.nbytes
+                    + self._hot_ids.nbytes)
+        if self._hot_scales is not None:
+            resident += self._hot_scales.nbytes
+        return resident + 2 * chunk
+
+    def host_bytes(self) -> int:
+        out = self.host_coords.nbytes + self.host_ids.nbytes
+        if self.host_scales is not None:
+            out += self.host_scales.nbytes
+        return out
+
+    def stats(self) -> dict:
+        return {
+            "hot_clusters": int(self.hot_clusters.size),
+            "hot_hits": int(self._hot_hits),
+            "cold_uploads": int(self._cold_uploads),
+            "bytes_uploaded": int(self._bytes_uploaded),
+            "device_bytes": self.device_bytes(),
+            "host_bytes": self.host_bytes(),
+            "dead_shards": list(self.dead_shards),
+            "masked_clusters": int(self._dead_cluster.sum()),
+        }
+
+    # -- search --------------------------------------------------------------
+    def _stage_chunk(self, sub, subcold):
+        """Build + launch the upload for one cold probe-column chunk.
+
+        Returns ``(coords, ids, scales, remapped_probes)`` device handles
+        (transfers in flight), or None when the chunk has no cold cluster.
+        ``sub``/``subcold``: (Q, w) probe ids and their cold-and-alive mask.
+        """
+        uniq = np.unique(sub[subcold])
+        if uniq.size == 0:
+            return None
+        T, rows = self.tiles_per_cluster, self.tile_rows
+        kdim = self.host_coords.shape[2]
+        # power-of-two slot bucket (incl. the dummy) bounds recompiles
+        n_slots = min(1 << int(uniq.size).bit_length(), self.n_clusters + 1)
+        n_slots = max(n_slots, uniq.size + 1)
+        slot = np.full(self.n_clusters, n_slots - 1, np.int32)
+        slot[uniq] = np.arange(uniq.size, dtype=np.int32)
+        remapped = np.where(subcold, slot[sub], n_slots - 1).astype(np.int32)
+        blocks = (uniq[:, None] * T + np.arange(T)).reshape(-1)
+        coords = np.zeros((n_slots * T, rows, kdim), self.host_coords.dtype)
+        ids = np.full((n_slots * T, rows), -1, np.int32)
+        coords[:uniq.size * T] = self.host_coords[blocks]
+        ids[:uniq.size * T] = self.host_ids[blocks]
+        scales = None
+        if self.host_scales is not None:
+            hs = np.ones((n_slots, 1), np.float32)
+            hs[:uniq.size] = self.host_scales[uniq]
+            scales = jnp.asarray(hs)
+        up_bytes = coords.nbytes + ids.nbytes
+        self._cold_uploads += 1
+        self._bytes_uploaded += up_bytes
+        self._max_chunk_bytes = max(self._max_chunk_bytes, up_bytes)
+        return (
+            tile_stage.stage_blocks(
+                coords, force_kernel=self.force_stage_kernel),
+            tile_stage.stage_blocks(
+                ids, force_kernel=self.force_stage_kernel),
+            scales,
+            jnp.asarray(remapped),
+        )
+
+    def search(
+        self,
+        queries: Array,
+        n_neighbors: int = 10,
+        nprobe: int = 8,
+        mode: str = "zen",
+        *,
+        force_kernel: bool = False,
+    ) -> Tuple[Array, Array]:
+        """Hot-set probe + double-buffered cold-chunk probes, merged.
+
+        Same contract as ``IVFZenIndex.search``; dead shards' clusters are
+        silently skipped (degraded mode), which lowers recall but never
+        raises.
+        """
+        assert n_neighbors > 0, n_neighbors
+        if self.n_valid == 0:
+            return _empty_result(queries.shape[0], n_neighbors)
+        n_neighbors = min(n_neighbors, self.n_valid)
+        nprobe = max(1, min(nprobe, self.n_clusters))
+        T = self.tiles_per_cluster
+        probes = np.asarray(
+            _probe_clusters(queries, self.centroids, nprobe, mode))
+        np.add.at(self._traffic, probes.reshape(-1), 1)
+
+        # hot pass: the full probe list with cold/dead entries remapped to
+        # the dummy slot — answers everything the hot set can
+        hot_pr = self._hot_slot[probes]
+        H = self.hot_clusters.size
+        self._hot_hits += int((hot_pr < H).sum())
+        best_d, best_i = kernel_ops.ivf_probe(
+            queries, self._hot_coords, self._hot_ids, jnp.asarray(hot_pr),
+            n_neighbors, mode, tiles_per_cluster=T,
+            tile_scales=self._hot_scales, force_kernel=force_kernel,
+        )
+
+        # cold passes: probe columns in fixed-width chunks; the upload for
+        # chunk j+1 is in flight while chunk j is being scored
+        cold = (~self._dead_cluster & (self._base_slot == H))[probes]
+        w = self.prefetch_cols
+        spans = [(lo, min(lo + w, nprobe)) for lo in range(0, nprobe, w)]
+        staged = self._stage_chunk(
+            probes[:, spans[0][0]:spans[0][1]],
+            cold[:, spans[0][0]:spans[0][1]]) if spans else None
+        for j, (lo, hi) in enumerate(spans):
+            cur, staged = staged, None
+            if j + 1 < len(spans):
+                nlo, nhi = spans[j + 1]
+                staged = self._stage_chunk(
+                    probes[:, nlo:nhi], cold[:, nlo:nhi])
+            if cur is None:
+                continue
+            up_coords, up_ids, up_scales, remapped = cur
+            d, i = kernel_ops.ivf_probe(
+                queries, up_coords, up_ids, remapped, n_neighbors, mode,
+                tiles_per_cluster=T, tile_scales=up_scales,
+                force_kernel=force_kernel,
+            )
+            best_d, best_i = scoring.merge_topk(
+                best_d, best_i, d, i, n_neighbors)
+        return best_d, best_i
+
+    # -- persistence ---------------------------------------------------------
+    def _live_members(
+        self, *, raw: bool = False
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host copies of the live rows (same contract as the resident
+        variants) — lets ``snapshot_payload`` serve a tiered index too."""
+        valid = self.host_ids >= 0
+        block_cluster = (np.arange(self.host_ids.shape[0])
+                         // self.tiles_per_cluster)
+        assign = np.broadcast_to(
+            block_cluster[:, None], self.host_ids.shape)[valid]
+        coords = np.asarray(self.host_coords)
+        if not raw and self.host_scales is not None:
+            per_block = np.repeat(
+                self.host_scales[:, 0], self.tiles_per_cluster)
+            coords = quant.dequantize(coords, per_block[:, None, None])
+        elif not raw:
+            coords = np.asarray(coords, np.float32)
+        return (coords[valid], self.host_ids[valid].astype(np.int64),
+                assign.astype(np.int64))
+
+    def save(self, directory: str) -> str:
+        """Persist the packed tile pool itself (memmap-servable layout)."""
+        arrays = {
+            "centroids": np.asarray(self.centroids, np.float32),
+            "tile_coords": np.asarray(self.host_coords),
+            "tile_ids": np.asarray(self.host_ids, np.int32),
+        }
+        if self.host_scales is not None:
+            arrays["cluster_scales"] = self.host_scales
+        meta = {
+            "n_clusters": self.n_clusters,
+            "tiles_per_cluster": self.tiles_per_cluster,
+            "tile_rows": self.tile_rows,
+            "n_valid": self.n_valid,
+            "storage": self.storage,
+            "n_shards": self.n_shards,
+        }
+        return index_io.save_state(
+            directory, arrays, meta, kind=TILE_POOL_SNAPSHOT_KIND)
+
+    @classmethod
+    def load(
+        cls,
+        directory: str,
+        *,
+        mmap: bool = True,
+        hot_clusters: Optional[int] = None,
+        hot_fraction: float = 0.1,
+        prefetch_cols: int = 2,
+        n_shards: Optional[int] = None,
+        force_stage_kernel: bool = False,
+    ) -> "TieredIVFZenIndex":
+        """Open a tile-pool snapshot; with ``mmap`` the cold tiles never
+        materialise in RAM — only probed blocks are read."""
+        arrays, meta = index_io.load_state(
+            directory, expect_kind=TILE_POOL_SNAPSHOT_KIND, mmap=mmap)
+        host_ids = arrays["tile_ids"]
+        C, T = int(meta["n_clusters"]), int(meta["tiles_per_cluster"])
+        live = (np.asarray(host_ids) >= 0).reshape(C, -1).sum(axis=1)
+        H = (max(0, min(int(hot_clusters), C)) if hot_clusters is not None
+             else max(1, int(C * hot_fraction)))
+        hot = np.sort(np.argsort(live, kind="stable")[::-1][:H])
+        return cls(
+            jnp.asarray(arrays["centroids"]),
+            arrays["tile_coords"],
+            host_ids,
+            n_clusters=C,
+            tiles_per_cluster=T,
+            tile_rows=int(meta["tile_rows"]),
+            n_valid=int(meta["n_valid"]),
+            storage=meta.get("storage", "float32"),
+            host_scales=arrays.get("cluster_scales"),
+            hot_clusters=hot,
+            prefetch_cols=prefetch_cols,
+            n_shards=int(meta.get("n_shards", 1)) if n_shards is None
+            else n_shards,
+            force_stage_kernel=force_stage_kernel,
         )

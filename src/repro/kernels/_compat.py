@@ -3,9 +3,19 @@
 JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and back,
 depending on the release line); every kernel in this package goes through
 :func:`compiler_params` so a single site tracks the rename.
+
+This module is also the seam for *host memory* support: the tiered tile
+store (``index.ivf.TieredIVFZenIndex``) keeps cold inverted lists host-side
+and stages probed buffers up through :func:`pinned_host_sharding` +
+``kernels.tile_stage``. Memory kinds are a backend capability, not an API
+constant, so the probe is runtime (and cached).
 """
 from __future__ import annotations
 
+import functools
+from typing import Optional
+
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(
@@ -21,3 +31,21 @@ if CompilerParams is None:  # pragma: no cover - ancient jax
 def compiler_params(*, dimension_semantics, **kw):
     """Build TPU compiler params across the CompilerParams rename."""
     return CompilerParams(dimension_semantics=dimension_semantics, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _pinned_host_supported(device) -> bool:
+    try:
+        return "pinned_host" in {m.kind for m in device.addressable_memories()}
+    except Exception:  # pragma: no cover - backends without memory spaces
+        return False
+
+
+def pinned_host_sharding(device=None) -> Optional[jax.sharding.Sharding]:
+    """Sharding that pins a host buffer for async DMA upload, if the backend
+    has a ``pinned_host`` memory space (TPU; None on plain CPU/GPU builds,
+    where callers fall back to an ordinary ``device_put``)."""
+    device = device if device is not None else jax.devices()[0]
+    if not _pinned_host_supported(device):
+        return None
+    return jax.sharding.SingleDeviceSharding(device, memory_kind="pinned_host")

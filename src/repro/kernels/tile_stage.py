@@ -1,0 +1,107 @@
+"""Host -> device staging of cold inverted-list tile buffers.
+
+The tiered tile store (``index.ivf.TieredIVFZenIndex``) keeps most packed
+tiles in a host-resident pool and uploads only the buffers a probe batch
+needs. :func:`stage_blocks` is the single upload primitive:
+
+* **TPU** — the buffer is placed in ``pinned_host`` memory
+  (``kernels._compat.pinned_host_sharding``) and :func:`dma_copy_blocks`
+  streams it block by block with explicitly double-buffered
+  ``pltpu.make_async_copy`` DMAs: while block ``i`` is written out, the
+  copy for block ``i+1`` is already in flight, so the probe kernel that
+  consumes the result never waits on a transfer it already knew it needed.
+* **CPU / GPU** — ``jax.device_put``, which is itself asynchronous: the
+  store issues the put for the *next* probe chunk before scoring the
+  current one, giving the same overlap without a kernel.
+
+Both paths return an ordinary committed device array; callers never branch
+on backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import compiler_params, pinned_host_sharding
+
+Array = jax.Array
+
+
+def _copy_kernel(src_ref, out_ref, buf_ref, sem_ref):
+    """Double-buffered blockwise copy: src (ANY/host) -> out (VMEM blocks)."""
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+    slot = i % 2
+    nxt = (i + 1) % 2
+
+    @pl.when(i == 0)
+    def _start_first():
+        pltpu.make_async_copy(
+            src_ref.at[i], buf_ref.at[slot], sem_ref.at[slot]
+        ).start()
+
+    @pl.when(i + 1 < n)
+    def _prefetch_next():
+        pltpu.make_async_copy(
+            src_ref.at[i + 1], buf_ref.at[nxt], sem_ref.at[nxt]
+        ).start()
+
+    pltpu.make_async_copy(
+        src_ref.at[i], buf_ref.at[slot], sem_ref.at[slot]
+    ).wait()
+    out_ref[0] = buf_ref[slot]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dma_copy_blocks(src: Array, *, interpret: bool = False) -> Array:
+    """Copy a (B, ...) block array up through VMEM with overlapped DMAs.
+
+    ``src`` may live in host (pinned) memory; each (1, ...) block is pulled
+    with a manual async copy while the previous block drains to the output,
+    so the transfer is fully pipelined. Grid is serial ("arbitrary"): the
+    two scratch slots alternate between steps.
+    """
+    blk = src.shape[1:]
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(src.shape[0],),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(
+            (1,) + blk, lambda i: (i,) + (0,) * len(blk)
+        ),
+        out_shape=jax.ShapeDtypeStruct(src.shape, src.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2,) + blk, src.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        compiler_params=compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="nsimplex_tile_stage",
+    )(src)
+
+
+def stage_blocks(host_vals: np.ndarray, *, force_kernel: bool = False) -> Array:
+    """Upload one packed block buffer; returns immediately (async transfer).
+
+    Args:
+      host_vals: (B, ...) numpy (or memmap) buffer of tile blocks.
+      force_kernel: run the Pallas DMA path in interpret mode off-TPU
+                    (parity testing).
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force_kernel):
+        return jax.device_put(jnp.asarray(host_vals))
+    pinned = pinned_host_sharding()
+    if pinned is not None:
+        staged = jax.device_put(np.ascontiguousarray(host_vals), pinned)
+    else:  # interpret-mode parity off-TPU: no pinned space to start from
+        staged = jnp.asarray(host_vals)
+    return dma_copy_blocks(staged, interpret=not on_tpu)

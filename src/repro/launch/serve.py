@@ -188,6 +188,7 @@ class ZenIndex:
         """Tombstone the given external ids; unknown ids are ignored."""
         self._check_not_sharded()
         if self.ivf is not None:
+            self._check_not_tiered()
             new_ivf = self.ivf.delete(ids)
             if new_ivf is self.ivf:  # nothing removed: state unchanged
                 return self
@@ -227,6 +228,7 @@ class ZenIndex:
         """
         self._check_not_sharded()
         if self.ivf is not None:
+            self._check_not_tiered()
             new_ivf = self.ivf.upsert(ids, coords_new)
             if new_ivf is self.ivf:  # empty batch: state unchanged
                 return self
@@ -290,6 +292,7 @@ class ZenIndex:
         """
         self._check_not_sharded()
         if self.ivf is not None:
+            self._check_not_tiered()
             new_ivf = self.ivf.compact(**kw)
             if new_ivf is self.ivf:  # nothing to reclaim: state unchanged
                 return self
@@ -325,6 +328,8 @@ class ZenIndex:
         if self.mesh is not None:
             return False  # sharded indexes are immutable: nothing to compact
         if self.ivf is not None:
+            if self._is_tiered():
+                return False  # serve-only: no churn to compact away
             return self.ivf.needs_compact(**kw)
         max_ratio = kw.get("max_tombstone_ratio", 0.2)
         return (self.n_deleted / max(self.size + self.n_deleted, 1)
@@ -348,6 +353,19 @@ class ZenIndex:
         if self.coords is None:
             raise ValueError("index has no flat coordinates to mutate")
 
+    def _is_tiered(self) -> bool:
+        from repro.index.ivf import TieredIVFZenIndex
+
+        return isinstance(self.ivf, TieredIVFZenIndex)
+
+    def _check_not_tiered(self):
+        if self._is_tiered():
+            raise NotImplementedError(
+                "a tiered (host-offloaded) index is serve-only: churn the "
+                "resident index and re-offload (build_index(..., "
+                "offload=True) or TieredIVFZenIndex.from_index)"
+            )
+
 
 def build_index(
     corpus: Array,
@@ -362,6 +380,10 @@ def build_index(
     tile_rows: int = 128,
     kmeans_iters: int = 15,
     storage: str = "float32",
+    offload: bool = False,
+    hot_clusters: Optional[int] = None,
+    offload_shards: int = 1,
+    prefetch_cols: int = 2,
 ) -> ZenIndex:
     """Fit on the corpus (witness = corpus sample) and project every row.
 
@@ -377,9 +399,27 @@ def build_index(
     the bytes, symmetric scales: per row for the flat layout, per cluster
     for IVF tiles). The projection, quantizer fit and query math all stay
     f32; only what the probe kernels stream gets narrower.
+
+    ``offload=True`` (IVF only) drops the packed inverted-list tiles to a
+    host-resident pool after the build (``index.ivf.TieredIVFZenIndex``):
+    only the centroids, scales and the ``hot_clusters`` highest-traffic
+    clusters stay device-resident, cold probes stream up in
+    ``prefetch_cols``-wide double-buffered chunks, and the clusters are
+    partitioned over ``offload_shards`` logical shards for degraded serving
+    (``ZenServer.enable_fault_tolerance``). The offloaded index is
+    serve-only: upsert/delete/compact raise.
     """
     if index not in ("flat", "ivf"):
         raise ValueError(f"index must be 'flat' or 'ivf', got {index!r}")
+    if offload and index != "ivf":
+        raise ValueError("offload=True requires index='ivf' (the tiered "
+                         "tile store offloads inverted-list tiles)")
+    if offload and mesh is not None:
+        raise ValueError(
+            "offload=True and mesh are mutually exclusive: the tiered "
+            "store already splits device/host residency on one host; "
+            "degraded serving over its logical shards replaces mesh "
+            "sharding (offload_shards=...)")
     quant.check_storage(storage)
     key = key if key is not None else jax.random.PRNGKey(0)
     tr = select_references(corpus, k, key, metric=metric)
@@ -399,6 +439,12 @@ def build_index(
             coords, n_clusters, tile_rows=tile_rows, n_iters=kmeans_iters,
             key=jax.random.fold_in(key, 7), storage=storage,
         )
+        if offload:
+            from repro.index.ivf import TieredIVFZenIndex
+
+            ivf = TieredIVFZenIndex.from_index(
+                ivf, hot_clusters=hot_clusters,
+                n_shards=offload_shards, prefetch_cols=prefetch_cols)
     elif storage != "float32":
         values, scales = quant.encode_rows(
             np.asarray(coords, np.float32), storage)
@@ -469,6 +515,14 @@ class ZenServer:
         self.cache_size = cache_size
         self._stats = {"queries": 0, "batches": 0, "latency_s": [],
                        "upserts": 0, "deletes": 0}
+        # fault tolerance (enable_fault_tolerance): liveness registry,
+        # preemption guard, and the degraded state they currently imply
+        self.heartbeats = None
+        self.preemption = None
+        self._snapshot_dir: Optional[str] = None
+        self._ft_shards: Tuple[str, ...] = ()
+        self._degraded: Tuple[int, ...] = ()
+        self._alive_mask: Optional[Array] = None
         self.frontend: Optional[MicroBatchScheduler] = None
         if frontend:
             kw = {"clock": clock} if clock is not None else {}
@@ -525,10 +579,15 @@ class ZenServer:
         qp = index.transform.transform(queries)
         n_fetch = min(width, index.size)
         if index.ivf is not None:
+            # mesh-sharded IVF takes the device-resident alive mask; the
+            # tiered store is instead masked up front (set_dead_shards)
+            kw = ({"alive": self._alive_mask}
+                  if self._alive_mask is not None and index.mesh is not None
+                  else {})
             d, ids = index.ivf.search(
                 qp, n_neighbors=n_fetch,
                 nprobe=self.nprobe, mode=self.mode,
-                force_kernel=self.force_kernel,
+                force_kernel=self.force_kernel, **kw,
             )
         elif index.mesh is not None:
             d, ids = retrieval_lib.sharded_knn_search(
@@ -536,7 +595,7 @@ class ZenServer:
                 n_neighbors=n_fetch, mode=self.mode,
                 mesh=index.mesh, chunk=self.chunk,
                 force_kernel=self.force_kernel, n_valid=index.n_valid,
-                scales=index.coord_scales,
+                scales=index.coord_scales, alive=self._alive_mask,
             )
             d, ids = self._map_row_ids(d, ids, index)
         else:
@@ -577,6 +636,7 @@ class ZenServer:
         slots the index cannot fill come back as (+inf, -1).
         """
         t0 = time.time()
+        self.on_tick()  # refresh shard liveness / pending preemption save
         queries = jnp.asarray(queries)
         n_rows = int(queries.shape[0])
         if (self.frontend is not None and not direct
@@ -703,6 +763,98 @@ class ZenServer:
             self.compact()
         return True
 
+    # -- fault tolerance ------------------------------------------------------
+    def _default_shard_count(self) -> int:
+        """Logical shard count implied by the index layout."""
+        ivf = self.index.ivf
+        if ivf is not None and hasattr(ivf, "set_dead_shards"):
+            return int(ivf.n_shards)  # tiered: static cluster partition
+        if self.index.mesh is not None:
+            return int(self.index.mesh.devices.size)
+        return 1
+
+    def enable_fault_tolerance(self, shards=None, *,
+                               deadline_s: float = 60.0, clock=None,
+                               snapshot_dir: Optional[str] = None,
+                               install_signal: bool = False):
+        """Attach liveness + preemption handling (``distributed.fault``).
+
+        Args:
+          shards:      logical shard names expected to heartbeat — an int
+                       (count; names become ``shard0..shardN-1``) or a
+                       sequence of names. Defaults to the index's own shard
+                       structure: ``n_shards`` for a tiered IVF index, the
+                       mesh device count for a sharded one, else 1.
+          deadline_s:  silence longer than this marks a shard dead.
+          clock:       monotonic time source (tests inject a fake).
+          snapshot_dir: when set, a platform preemption notice
+                       (SIGTERM / ``preemption.request()``) triggers a full
+                       server snapshot here at the next tick boundary.
+          install_signal: install the real SIGTERM handler (off by default:
+                       tests and embedded servers trigger manually).
+
+        After this, each shard's supervisor calls :meth:`heartbeat`
+        periodically; every query (and every frontend tick) refreshes the
+        death verdicts via :meth:`on_tick`. A dead shard's data is masked
+        out of the search — queries keep answering from the survivors with
+        reduced recall instead of raising — and ``stats()`` reports the
+        outage under ``"degraded_shards"``. Returns the registry.
+        """
+        from repro.distributed.fault import HeartbeatRegistry, PreemptionGuard
+
+        if shards is None:
+            shards = self._default_shard_count()
+        if isinstance(shards, int):
+            shards = [f"shard{i}" for i in range(shards)]
+        self._ft_shards = tuple(str(s) for s in shards)
+        kw = {"now": clock} if clock is not None else {}
+        self.heartbeats = HeartbeatRegistry(deadline_s=deadline_s, **kw)
+        for name in self._ft_shards:
+            self.heartbeats.register(name)
+        self.preemption = PreemptionGuard(install_signal=install_signal)
+        self._snapshot_dir = snapshot_dir
+        self._degraded = ()
+        self._alive_mask = None
+        return self.heartbeats
+
+    def heartbeat(self, shard) -> None:
+        """Record a liveness beat for ``shard`` (index or name)."""
+        if self.heartbeats is None:
+            raise RuntimeError("call enable_fault_tolerance() first")
+        name = (self._ft_shards[shard] if isinstance(shard, int)
+                else str(shard))
+        self.heartbeats.beat(name)
+
+    def on_tick(self) -> None:
+        """Refresh liveness verdicts + run any pending preemption save.
+
+        Called on every query and every frontend scheduler tick; a no-op
+        until :meth:`enable_fault_tolerance`. Masking is applied only when
+        the verdict *changes*, so steady state costs one clock read.
+        """
+        reg = self.heartbeats
+        if reg is not None:
+            dead_names = set(reg.dead_hosts())
+            dead = tuple(i for i, n in enumerate(self._ft_shards)
+                         if n in dead_names)
+            if dead != self._degraded:
+                self._degraded = dead
+                ivf = self.index.ivf
+                if ivf is not None and hasattr(ivf, "set_dead_shards"):
+                    ivf.set_dead_shards(dead)
+                elif self.index.mesh is not None:
+                    alive = np.ones(len(self._ft_shards), bool)
+                    alive[list(dead)] = False
+                    self._alive_mask = (None if alive.all()
+                                        else jnp.asarray(alive))
+                # flat single-host index: nothing to mask — the registry
+                # still tracks external replicas and stats() reports them
+        guard = self.preemption
+        if (guard is not None and guard.should_save()
+                and self._snapshot_dir is not None):
+            self.save(self._snapshot_dir)
+            guard.clear()
+
     def _rerank(self, queries: Array, cand_ids: Array, n_neighbors: int,
                 index: ZenIndex) -> Tuple[Array, Array]:
         """Exact re-rank of the Zen candidate pool with true distances."""
@@ -730,6 +882,12 @@ class ZenServer:
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
         }
+        if self.heartbeats is not None:
+            out["degraded_shards"] = [self._ft_shards[i]
+                                      for i in self._degraded]
+        ivf = self.index.ivf
+        if ivf is not None and hasattr(ivf, "set_dead_shards"):
+            out["tier"] = ivf.stats()  # hot/cold traffic + memory split
         if self.frontend is not None:
             out["frontend"] = self.frontend.stats.snapshot()
             out["cache"] = self.frontend.cache.info()
@@ -900,6 +1058,14 @@ def main() -> None:
                    help="resident dtype of the searchable index tiles "
                         "(bf16 halves, int8 quarters the coordinate bytes; "
                         "estimator accumulation stays f32)")
+    p.add_argument("--offload", action="store_true",
+                   help="host-offload the IVF tile pool (tiered store): "
+                        "only centroids + a hot cluster set stay device-"
+                        "resident, cold probes stream up double-buffered")
+    p.add_argument("--hot-clusters", type=int, default=0,
+                   help="device-resident hot set size (0 = 10%% of C)")
+    p.add_argument("--offload-shards", type=int, default=1,
+                   help="logical shards for degraded serving (tiered)")
     p.add_argument("--checkpoint", default=None, metavar="DIR",
                    help="restore the server from DIR if a snapshot exists "
                         "there, else build and save one (versioned, atomic)")
@@ -939,7 +1105,10 @@ def main() -> None:
         index = build_index(corpus, args.k, metric=args.metric,
                             index=args.index,
                             n_clusters=args.clusters or None,
-                            storage=args.storage)
+                            storage=args.storage,
+                            offload=args.offload,
+                            hot_clusters=args.hot_clusters or None,
+                            offload_shards=args.offload_shards)
         server = ZenServer(index, rerank_factor=args.rerank,
                            nprobe=args.nprobe, **frontend_kw)
         if args.checkpoint:

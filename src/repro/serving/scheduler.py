@@ -284,6 +284,9 @@ class MicroBatchScheduler:
         Synchronous and sleep-free — the deterministic unit the simulation
         tests drive directly, and the only thing the ticker thread does.
         """
+        tick_hook = getattr(self.server, "on_tick", None)
+        if tick_hook is not None:  # shard liveness + preemption-save refresh
+            tick_hook()            # (launch.serve.ZenServer fault tolerance)
         with self._lock:
             pending, self._pending = self._pending, []
         self.stats.record_tick()
@@ -305,7 +308,8 @@ class MicroBatchScheduler:
                         self.stats.record_failure(len(chunk))
                         for slot in chunk:
                             slot.handle._fail(exc)
-                n_dispatches += 1
+                else:  # a raised dispatch issued no kernel — don't count it
+                    n_dispatches += 1
         return n_dispatches
 
     def _dispatch(

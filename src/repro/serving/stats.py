@@ -94,7 +94,15 @@ class FrontendStats:
         return len(self.dispatch_shapes)
 
     def latency_percentiles(self) -> dict:
-        lat = np.asarray(self._latency_s or [0.0], np.float64)
+        """p50/p95/p99 over the window — NaN until the first sample lands.
+
+        An idle frontend must not report a perfect p99: fabricating a 0.0 ms
+        sample would satisfy any SLO check before a single query ran.
+        """
+        if not self._latency_s:
+            nan = float("nan")
+            return {"p50_ms": nan, "p95_ms": nan, "p99_ms": nan}
+        lat = np.asarray(self._latency_s, np.float64)
         return {
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p95_ms": float(np.percentile(lat, 95) * 1e3),
@@ -102,7 +110,9 @@ class FrontendStats:
         }
 
     def snapshot(self) -> dict:
-        """Flat dict for ``ZenServer.stats()`` / logging."""
+        """Flat dict for ``ZenServer.stats()`` / logging. Latency percentile
+        keys are omitted until at least one sample exists — absent beats a
+        NaN that breaks naive JSON serialisation of operator dashboards."""
         out = {
             "submitted": self.submitted,
             "rejected": self.rejected,
@@ -116,5 +126,6 @@ class FrontendStats:
             "cache_hit_rate": round(self.cache_hit_rate, 4),
             "compile_count": self.compile_count,
         }
-        out.update(self.latency_percentiles())
+        if self._latency_s:
+            out.update(self.latency_percentiles())
         return out

@@ -122,6 +122,26 @@ def test_spearman_matches_scipy():
     np.testing.assert_allclose(got, want, atol=1e-10)
 
 
+def test_spearman_matches_scipy_with_ties():
+    """Quantized / near-equidistant corpora produce exact distance ties;
+    tie-averaged ranks must reproduce scipy's rho, where dense integer
+    ranks would order ties arbitrarily and drift."""
+    rng = np.random.default_rng(8)
+    a = rng.integers(0, 12, size=400).astype(float)
+    b = a + rng.integers(-2, 3, size=400)  # correlated, still heavily tied
+    got = Q.spearman_rho(a, b)
+    want = scipy.stats.spearmanr(a, b).statistic
+    np.testing.assert_allclose(got, want, atol=1e-10)
+
+
+def test_spearman_all_ties_and_degenerate_inputs():
+    # fewer than two pairs: correlation undefined, must be NaN (not a crash)
+    assert np.isnan(Q.spearman_rho([], []))
+    assert np.isnan(Q.spearman_rho([3.0], [5.0]))
+    # a constant margin has zero rank variance: also undefined
+    assert np.isnan(Q.spearman_rho([2.0, 2.0, 2.0], [1.0, 5.0, 3.0]))
+
+
 def test_sammon_and_qloss_zero_when_exact():
     d = np.random.default_rng(7).uniform(1, 5, size=100)
     assert Q.sammon_stress(d, d) == 0.0
@@ -156,6 +176,31 @@ def test_recall_at_k_ignores_padding_ids():
 def test_recall_at_k_mismatched_batch_raises():
     with pytest.raises(ValueError):
         Q.recall_at_k([[1, 2], [3, 4]], [[1, 2]])
+
+
+def test_dcg_recall_discriminates_at_serving_k():
+    """Eq. 34's sigmoid must scale with the list length n: at k=10 a
+    shuffled result list scores strictly below the perfect one (a fixed
+    n=1000 midpoint would rate every rank <=10 as ~0.993-relevant and
+    grade any shuffle ~1.0)."""
+    ids = np.arange(10)
+    shuffled = np.array([9, 4, 7, 1, 8, 0, 5, 3, 6, 2])
+    assert Q.dcg_recall(ids, ids) == pytest.approx(1.0)
+    assert Q.dcg_recall(ids, shuffled) < 0.95
+    # reversal is the worst same-set ordering: strictly below a mild swap
+    swap = ids.copy()
+    swap[0], swap[1] = swap[1], swap[0]
+    assert Q.dcg_recall(ids, ids[::-1]) < Q.dcg_recall(ids, swap) < 1.0
+
+
+def test_rank_relevance_midpoint_scales_with_n():
+    # Eq. 34: midpoint n/2 (relevance 0.5), width n/10
+    for n in (10, 100, 1000):
+        assert Q.rank_relevance(n / 2, n) == pytest.approx(0.5)
+        assert Q.rank_relevance(1, n) > 0.98
+        assert Q.rank_relevance(n, n) < 0.01
+    # head ranks separate at small n instead of saturating
+    assert Q.rank_relevance(1, 10) - Q.rank_relevance(10, 10) > 0.9
 
 
 def test_dcg_recall_prefers_early_agreement():

@@ -1,0 +1,148 @@
+"""Fault-tolerance hooks (``distributed.fault``), driven by fake clocks.
+
+Every contract here is deterministic: step times are fed directly to the
+StepMonitor, heartbeats advance an injected monotonic clock, and the
+preemption guard is triggered manually — no real time, signals or threads.
+"""
+import numpy as np
+import pytest
+
+from repro.distributed.fault import (
+    HeartbeatRegistry,
+    PreemptionGuard,
+    StepMonitor,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# ----------------------------- StepMonitor -----------------------------------
+
+
+def test_step_monitor_flags_straggler_after_warmup():
+    mon = StepMonitor(warmup_steps=3, threshold=2.0)
+    for s in range(6):
+        assert mon.record(s, 1.0) is None
+    ev = mon.record(6, 5.0)
+    assert ev is not None
+    assert ev.ratio == pytest.approx(5.0)
+    assert mon.events == [ev]
+
+
+def test_step_monitor_warmup_straggler_never_inflates_ema():
+    """A straggler landing *during* warmup must not fold into the EMA —
+    absorbing it would raise the bar enough to hide later stragglers."""
+    mon = StepMonitor(warmup_steps=5, threshold=2.0, ema_decay=0.9)
+    mon.record(0, 1.0)
+    assert mon.record(1, 10.0) is None  # warmup: not flagged...
+    assert mon.ema == pytest.approx(1.0)  # ...and not averaged in
+    for s in range(2, 6):
+        mon.record(s, 1.0)
+    # a genuine 3x straggler after warmup is still visible
+    assert mon.record(6, 3.0) is not None
+
+
+def test_step_monitor_escalates_after_patience():
+    mon = StepMonitor(warmup_steps=1, threshold=2.0, patience=3)
+    for s in range(4):
+        mon.record(s, 1.0)
+    for s in range(4, 6):
+        mon.record(s, 5.0)
+        assert not mon.should_escalate
+    mon.record(6, 5.0)
+    assert mon.should_escalate
+
+
+def test_step_monitor_normal_step_resets_patience():
+    mon = StepMonitor(warmup_steps=1, threshold=2.0, patience=2)
+    for s in range(4):
+        mon.record(s, 1.0)
+    mon.record(4, 5.0)
+    mon.record(5, 1.0)  # recovered: consecutive count resets
+    mon.record(6, 5.0)
+    assert not mon.should_escalate
+
+
+def test_step_monitor_ema_tracks_normal_steps():
+    mon = StepMonitor(warmup_steps=0, ema_decay=0.5)
+    mon.record(0, 1.0)
+    mon.record(1, 2.0)  # within threshold: folds in
+    assert mon.ema == pytest.approx(1.5)
+
+
+# --------------------------- HeartbeatRegistry --------------------------------
+
+
+def test_registry_alive_and_dead_transitions():
+    clock = FakeClock()
+    reg = HeartbeatRegistry(deadline_s=10.0, now=clock)
+    reg.beat("a")
+    reg.beat("b")
+    assert reg.alive() == ["a", "b"] and reg.dead_hosts() == []
+    clock.advance(11.0)
+    reg.beat("a")
+    assert reg.dead_hosts() == ["b"]
+    assert reg.alive() == ["a"]
+    reg.beat("b")  # b recovers
+    assert reg.dead_hosts() == []
+
+
+def test_registry_registered_but_never_beat_is_reported_dead():
+    """Silence from birth must be indistinguishable from an early crash:
+    a host the deployment *expects* (register) but that never beats goes
+    dead one deadline after registration."""
+    clock = FakeClock()
+    reg = HeartbeatRegistry(deadline_s=5.0, now=clock)
+    reg.register("ghost")
+    reg.beat("live")
+    assert reg.expected() == ["ghost", "live"]
+    assert reg.dead_hosts() == []  # within its first deadline
+    clock.advance(6.0)
+    reg.beat("live")
+    assert reg.dead_hosts() == ["ghost"]
+
+
+def test_registry_register_is_idempotent():
+    clock = FakeClock()
+    reg = HeartbeatRegistry(deadline_s=5.0, now=clock)
+    reg.register("a")
+    clock.advance(4.0)
+    reg.register("a")  # must NOT refresh the registration deadline
+    clock.advance(2.0)
+    assert reg.dead_hosts() == ["a"]
+
+
+def test_registry_beat_implicitly_registers():
+    clock = FakeClock()
+    reg = HeartbeatRegistry(deadline_s=5.0, now=clock)
+    reg.beat("x")
+    assert reg.expected() == ["x"]
+    clock.advance(6.0)
+    assert reg.dead_hosts() == ["x"]
+
+
+def test_registry_empty_membership():
+    reg = HeartbeatRegistry(deadline_s=1.0, now=FakeClock())
+    assert reg.expected() == [] and reg.dead_hosts() == [] and reg.alive() == []
+
+
+# ---------------------------- PreemptionGuard ---------------------------------
+
+
+def test_preemption_guard_request_save_clear_cycle():
+    guard = PreemptionGuard(install_signal=False)
+    assert not guard.should_save()
+    guard.request()
+    assert guard.should_save()
+    assert guard.should_save()  # sticky until cleared
+    guard.clear()
+    assert not guard.should_save()

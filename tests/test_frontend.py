@@ -567,3 +567,35 @@ def test_random_interleaving_matches_direct(seed):
     sched.flush()
     verify_resolved()
     assert not pending
+
+
+# -- stats edge cases ----------------------------------------------------------
+
+
+def test_latency_percentiles_empty_window_is_nan_not_crash():
+    """Before any request completes there is no latency sample: the
+    percentile accessors answer NaN (np.percentile of [] raises), and
+    snapshot() omits the keys rather than reporting a fabricated 0ms SLO."""
+    from repro.serving.stats import FrontendStats
+
+    stats = FrontendStats()
+    pct = stats.latency_percentiles()
+    assert set(pct) == {"p50_ms", "p95_ms", "p99_ms"}
+    assert all(np.isnan(v) for v in pct.values())
+    snap = stats.snapshot()
+    assert not any(k in snap for k in ("p50_ms", "p95_ms", "p99_ms"))
+    stats.record_complete(1, 0.1)  # first sample: keys appear, real values
+    snap = stats.snapshot()
+    assert snap["p50_ms"] == pytest.approx(100.0)
+
+
+def test_tick_dispatch_count_excludes_failed_dispatches(base_index, queries):
+    """tick() returns the number of dispatches *issued*; a raising dispatch
+    issued no kernel and must not count (its rows land in failures)."""
+    server = _frontend_server(base_index["flat"])
+    sched = server.frontend
+    sched.submit(np.ones(7, np.float32), 10)  # wrong query dim: will raise
+    assert sched.tick() == 0
+    assert sched.stats.failures == 1
+    sched.submit(queries[0], 10)
+    assert sched.tick() == 1

@@ -416,3 +416,136 @@ def test_probe_memory_flat_in_index_size():
     small, big = temp_bytes(16 * 1024), temp_bytes(128 * 1024)
     assert big <= 2 * max(small, 1), (small, big)
     assert big < q * 128 * 1024 * 4  # tile-sized, not index-sized
+
+
+# -- tiered (host-offloaded) tile store ---------------------------------------
+
+
+def _tiered_fixture(seed=17, n=1500, k=8, c=16, storage="float32"):
+    from repro.index.ivf import TieredIVFZenIndex
+
+    X = _coords(seed, n, k)
+    idx = IVFZenIndex.build(X, c, key=jax.random.PRNGKey(seed),
+                            storage=storage)
+    tiered = TieredIVFZenIndex.from_index(idx, hot_clusters=3,
+                                          prefetch_cols=2)
+    return X, idx, tiered
+
+
+@pytest.mark.parametrize("storage", ["float32", "bfloat16", "int8"])
+@pytest.mark.parametrize("nprobe", [1, 4, 16])
+def test_tiered_search_matches_resident(storage, nprobe):
+    """Hot-pass + streamed-cold-chunk search returns exactly the resident
+    index's results at every nprobe: same kernel over the same tiles, only
+    partitioned into device-resident and staged passes."""
+    X, idx, tiered = _tiered_fixture(storage=storage)
+    Q = _queries(1, X, 12)
+    want_d, want_i = idx.search(Q, n_neighbors=10, nprobe=nprobe)
+    got_d, got_i = tiered.search(Q, n_neighbors=10, nprobe=nprobe)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_tiered_all_hot_and_all_cold_extremes():
+    from repro.index.ivf import TieredIVFZenIndex
+
+    X = _coords(18, 900, 8)
+    idx = IVFZenIndex.build(X, 12, key=jax.random.PRNGKey(18))
+    Q = _queries(2, X, 8)
+    want = idx.search(Q, n_neighbors=10, nprobe=12)
+    for hot in (0, 12):  # pure streaming vs fully resident
+        t = TieredIVFZenIndex.from_index(idx, hot_clusters=hot)
+        got = t.search(Q, n_neighbors=10, nprobe=12)
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(want[1])), hot
+        st = t.stats()
+        if hot == 0:
+            assert st["cold_uploads"] > 0 and st["hot_hits"] == 0
+        else:
+            assert st["cold_uploads"] == 0 and st["hot_hits"] > 0
+        # the analytic provisioning bound dominates the observed mark
+        assert t.provisioned_device_bytes(Q.shape[0]) >= st["device_bytes"]
+
+
+def test_tiered_stage_kernel_interpret_parity():
+    """The Pallas double-buffered DMA staging path (interpret mode on CPU)
+    produces the same device blocks — and therefore the same search
+    results — as the device_put fallback."""
+    from repro.index.ivf import TieredIVFZenIndex
+
+    X = _coords(19, 800, 8)
+    idx = IVFZenIndex.build(X, 10, key=jax.random.PRNGKey(19))
+    Q = _queries(3, X, 6)
+    plain = TieredIVFZenIndex.from_index(idx, hot_clusters=2)
+    forced = TieredIVFZenIndex.from_index(idx, hot_clusters=2,
+                                          force_stage_kernel=True)
+    d0, i0 = plain.search(Q, n_neighbors=8, nprobe=10)
+    d1, i1 = forced.search(Q, n_neighbors=8, nprobe=10)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_dma_copy_blocks_roundtrip_dtypes():
+    from repro.kernels import tile_stage
+
+    rng = np.random.default_rng(20)
+    for dtype in (np.float32, np.int32):
+        src = rng.normal(size=(5, 4, 8)).astype(dtype)
+        out = tile_stage.dma_copy_blocks(jnp.asarray(src), interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), src)
+
+
+def test_tiered_tile_pool_snapshot_mmap_roundtrip(tmp_path):
+    """save() persists the packed pool; load(mmap=True) serves straight
+    off the snapshot (cold tiles stay on disk) with identical results."""
+    from repro.index.ivf import TieredIVFZenIndex
+
+    for storage in ("float32", "int8"):
+        X, idx, tiered = _tiered_fixture(seed=21, storage=storage)
+        Q = _queries(4, X, 8)
+        want = tiered.search(Q, n_neighbors=10, nprobe=16)
+        path = str(tmp_path / f"pool-{storage}")
+        tiered.save(path)
+        back = TieredIVFZenIndex.load(path, mmap=True, hot_clusters=3)
+        assert isinstance(back.host_coords, np.memmap)
+        got = back.search(Q, n_neighbors=10, nprobe=16)
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(want[1]))
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(want[0]))
+        assert back.size == tiered.size and back.storage == storage
+
+
+def test_tiered_refresh_hot_follows_traffic():
+    """refresh_hot() re-picks the device-resident set from observed probe
+    traffic; results stay identical (residency is a placement decision)."""
+    X, idx, tiered = _tiered_fixture(seed=22)
+    Q = _queries(5, X, 16)
+    want = tiered.search(Q, n_neighbors=10, nprobe=4)
+    before = tiered.stats()["cold_uploads"]
+    tiered.refresh_hot()
+    got = tiered.search(Q, n_neighbors=10, nprobe=4)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    # the re-picked hot set covers this query mix at least as well
+    assert tiered.stats()["cold_uploads"] - before <= before
+
+
+def test_tiered_dead_shard_masks_members():
+    from repro.index.ivf import TieredIVFZenIndex
+
+    X = _coords(23, 1200, 8)
+    idx = IVFZenIndex.build(X, 16, key=jax.random.PRNGKey(23))
+    tiered = TieredIVFZenIndex.from_index(idx, hot_clusters=4, n_shards=4)
+    Q = _queries(6, X, 12)
+    tiered.set_dead_shards([1])
+    d, ids = tiered.search(Q, n_neighbors=10, nprobe=16)
+    dead_clusters = np.flatnonzero(tiered.shard_of_cluster() == 1)
+    dead_members = set(np.asarray(
+        idx.tile_ids).reshape(16, -1)[dead_clusters].ravel().tolist()) - {-1}
+    assert not (set(np.asarray(ids).ravel().tolist()) & dead_members)
+    assert tiered.stats()["masked_clusters"] == 4
+    tiered.set_dead_shards([])  # recovery restores exactness
+    _, ids2 = tiered.search(Q, n_neighbors=10, nprobe=16)
+    want = idx.search(Q, n_neighbors=10, nprobe=16)
+    np.testing.assert_array_equal(np.asarray(ids2), np.asarray(want[1]))

@@ -174,6 +174,183 @@ def test_noneuclid_exact_rerank_uses_true_metric(metric):
     np.testing.assert_allclose(np.asarray(d), want, rtol=1e-5, atol=1e-6)
 
 
+# -- tiered (host-offloaded) serving + degraded shards -------------------------
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _tiered_pair(key, n=3000, storage="float32"):
+    """(tiered server, resident server, queries) over the same corpus."""
+    corpus = syn.manifold_space(key, n, 64, 8)
+    kw = dict(metric="euclidean", index="ivf", n_clusters=32, storage=storage)
+    tiered = build_index(corpus, 12, offload=True, hot_clusters=4,
+                         offload_shards=4, **kw)
+    resident = build_index(corpus, 12, **kw)
+    q = syn.manifold_space(jax.random.fold_in(key, 1), 16, 64, 8)
+    return (ZenServer(tiered, nprobe=8), ZenServer(resident, nprobe=8),
+            jnp.asarray(q))
+
+
+@pytest.mark.parametrize("storage", ["float32", "int8"])
+def test_tiered_offload_matches_resident(storage):
+    """Host-offloaded serving returns the same neighbours as the
+    all-resident index at equal nprobe (same kernel, same tiles — only
+    partitioned into hot + streamed-cold passes)."""
+    tiered_srv, resident_srv, q = _tiered_pair(
+        jax.random.PRNGKey(21), storage=storage)
+    d_t, i_t = tiered_srv.query(q, 10)
+    d_r, i_r = resident_srv.query(q, 10)
+    np.testing.assert_array_equal(np.asarray(i_t), np.asarray(i_r))
+    np.testing.assert_allclose(np.asarray(d_t), np.asarray(d_r),
+                               rtol=1e-5, atol=1e-5)
+    tier = tiered_srv.stats()["tier"]
+    assert tier["cold_uploads"] > 0  # the cold path actually ran
+    assert tier["hot_clusters"] == 4
+    assert tier["bytes_uploaded"] > 0
+    # the resident arrays on device are the hot subset, not the full pool
+    # (the device/host *ratio* at scale is the benchmark's acceptance bar;
+    # at this toy size the double-buffer allowance dominates device_bytes)
+    assert tiered_srv.index.ivf._hot_coords.shape[0] < (
+        np.asarray(tiered_srv.index.ivf.host_coords).shape[0])
+
+
+def test_tiered_index_is_serve_only():
+    tiered_srv, _, q = _tiered_pair(jax.random.PRNGKey(22))
+    with pytest.raises(NotImplementedError):
+        tiered_srv.delete([1, 2])
+    with pytest.raises(NotImplementedError):
+        tiered_srv.upsert([9999], np.zeros((1, 64), np.float32))
+    with pytest.raises(NotImplementedError):
+        tiered_srv.compact()
+    assert not tiered_srv.index.needs_compact()
+    assert not tiered_srv.maybe_compact()
+    d, ids = tiered_srv.query(q, 10)  # still serves
+    assert bool(jnp.isfinite(d).all())
+
+
+def test_offload_requires_single_host_ivf():
+    corpus = syn.manifold_space(jax.random.PRNGKey(23), 500, 32, 4)
+    with pytest.raises(ValueError, match="ivf"):
+        build_index(corpus, 8, offload=True)  # flat index cannot offload
+
+
+def test_degraded_shard_serving_end_to_end(tmp_path):
+    """Kill one logical shard's heartbeat mid-serving: queries keep
+    answering (no raise), recall drops, ``stats()["degraded_shards"]``
+    reports the outage, and a recovered heartbeat restores full recall."""
+    clock = _Clock()
+    tiered_srv, resident_srv, q = _tiered_pair(jax.random.PRNGKey(24))
+    reg = tiered_srv.enable_fault_tolerance(deadline_s=5.0, clock=clock)
+    assert reg.expected() == [f"shard{i}" for i in range(4)]
+    for s in range(4):
+        tiered_srv.heartbeat(s)
+
+    _, true_ids = resident_srv.query(q, 10)
+    _, ids_healthy = tiered_srv.query(q, 10)
+    assert tiered_srv.stats()["degraded_shards"] == []
+    rec_healthy = _recall(ids_healthy, true_ids)
+    assert rec_healthy == 1.0
+
+    clock.t = 6.0  # shard2 misses its deadline; the rest keep beating
+    for s in (0, 1, 3):
+        tiered_srv.heartbeat(s)
+    d_deg, ids_deg = tiered_srv.query(q, 10)  # must not raise
+    st = tiered_srv.stats()
+    assert st["degraded_shards"] == ["shard2"]
+    assert st["tier"]["masked_clusters"] == 8  # 32 clusters / 4 shards
+    rec_degraded = _recall(ids_deg, true_ids)
+    assert rec_degraded < rec_healthy
+    assert bool(jnp.isfinite(d_deg).any())
+    # the dead shard's clusters (c % 4 == 2) contribute no results
+    assign = np.asarray(tiered_srv.index.ivf.host_ids)
+    dead_members = set(
+        assign.reshape(32, -1)[2::4].ravel().tolist()) - {-1}
+    assert not (set(np.asarray(ids_deg).ravel().tolist()) & dead_members)
+
+    clock.t = 7.0  # shard2 comes back
+    tiered_srv.heartbeat(2)
+    _, ids_back = tiered_srv.query(q, 10)
+    assert tiered_srv.stats()["degraded_shards"] == []
+    assert _recall(ids_back, true_ids) == rec_healthy
+
+
+def test_preemption_triggers_snapshot_at_tick(tmp_path):
+    """A preemption notice saves a full server snapshot at the next query
+    tick; the snapshot reloads and answers identically (healthy state)."""
+    tiered_srv, _, q = _tiered_pair(jax.random.PRNGKey(25))
+    snap = str(tmp_path / "preempt")
+    tiered_srv.enable_fault_tolerance(
+        deadline_s=1e9, clock=_Clock(), snapshot_dir=snap)
+    d0, i0 = tiered_srv.query(q, 10)
+    tiered_srv.preemption.request()  # platform SIGTERM, modelled manually
+    tiered_srv.query(q, 10)          # tick boundary: save fires here
+    assert not tiered_srv.preemption.should_save()  # cleared after saving
+    back = ZenServer.load(snap)
+    d1, i1 = back.query(q, 10)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_degraded_mesh_flat_serving():
+    """The on-mesh alive mask degrades a row-sharded flat index the same
+    way: dead shard's rows vanish from results, queries never raise."""
+    import os
+    import subprocess
+    import sys
+
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.data import synthetic as syn
+from repro.launch.serve import ZenServer, build_index
+
+class Clock:
+    t = 0.0
+    def __call__(self): return self.t
+
+key = jax.random.PRNGKey(31)
+corpus = syn.manifold_space(key, 1024, 32, 4)
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("shard",))
+index = build_index(corpus, 8, mesh=mesh)
+srv = ZenServer(index)
+clock = Clock()
+srv.enable_fault_tolerance(deadline_s=5.0, clock=clock)
+for s in range(4):
+    srv.heartbeat(s)
+q = syn.manifold_space(jax.random.fold_in(key, 1), 8, 32, 4)
+d0, i0 = srv.query(q, 10)
+clock.t = 6.0
+for s in (0, 1, 3):
+    srv.heartbeat(s)
+d1, i1 = srv.query(q, 10)
+assert srv.stats()["degraded_shards"] == ["shard2"]
+assert np.isfinite(np.asarray(d1)).any()
+# shard 2 owns rows [512, 768): none may appear while it is dead
+hits = np.asarray(i1).ravel()
+assert not ((hits >= 512) & (hits < 768)).any()
+assert not np.array_equal(np.asarray(i0), np.asarray(i1))
+print("DEGRADED-MESH-OK")
+"""
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"),
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert "DEGRADED-MESH-OK" in out.stdout, out.stderr[-2000:]
+
+
 def test_noneuclid_quantized_ivf_serving():
     """storage="int8" composes with a non-Euclidean metric end to end."""
     key = jax.random.PRNGKey(13)
