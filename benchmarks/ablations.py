@@ -7,6 +7,15 @@
 * reference-selection (paper §7.2): random refs vs mutually-close refs vs
   far-apart refs — the paper reports close references improve the small-
   distance weakness; measured here on kNN recall and Kruskal stress.
+* pivot-strategy (``core.pivots``): the paper's random pivot redraw vs the
+  principled strategies (kmeanspp / farthest_first / maxvol) at fixed k,
+  on query->corpus recall@10 and Kruskal stress;
+* PQ compression (``kernels.pq``): recall@10 of the product-quantised IVF
+  tier as the subspace count M sweeps the bytes-per-member from k/4 down
+  to 1 — the recall-vs-compression frontier behind ``storage="pq"``.
+
+Runnable directly (CI): ``python benchmarks/ablations.py [--smoke]`` prints
+one ``name,derived`` CSV row per ablation.
 """
 from __future__ import annotations
 
@@ -111,3 +120,116 @@ def reference_selection(n: int = 200, m: int = 100, k: int = 10,
             len(set(true_nn[i]) & set(approx_nn[i])) / 10 for i in range(n)
         ]))
     return out
+
+
+def _recall(true_nn: np.ndarray, approx_nn: np.ndarray) -> float:
+    nn = true_nn.shape[1]
+    return float(np.mean([
+        len(set(true_nn[i]) & set(approx_nn[i])) / nn
+        for i in range(true_nn.shape[0])
+    ]))
+
+
+def pivot_strategy_ablation(
+    n: int = 1500, m: int = 64, k: int = 12, n_queries: int = 64,
+    nn: int = 10, seed: int = 0,
+) -> Dict[str, float]:
+    """Recall@nn and stress per base-simplex strategy at fixed k.
+
+    Same corpus, same key, same k — only ``core.pivots`` strategy varies:
+    the paper's random redraw loop against kmeanspp / farthest_first /
+    maxvol. Recall is query->corpus under the Zen estimator against true
+    Euclidean neighbours; at least one principled strategy is expected to
+    beat random (pinned by the BENCH snapshot).
+    """
+    from repro.core import pivots as pivots_lib
+    from repro.core.zen import estimate_pdist
+
+    key = jax.random.PRNGKey(seed)
+    X = syn.manifold_space(key, n, m, m // 8)
+    Qv = syn.manifold_space(jax.random.fold_in(key, 1), n_queries, m, m // 8)
+    D_true = np.asarray(M.euclidean_pdist(Qv, X))
+    true_nn = np.argsort(D_true, axis=1)[:, :nn]
+    out = {}
+    for strategy in pivots_lib.PIVOT_STRATEGIES:
+        tr = pivots_lib.select_references(
+            X, k, jax.random.fold_in(key, 2), strategy=strategy)
+        zen = np.asarray(estimate_pdist(tr.transform(Qv), tr.transform(X),
+                                        "zen"))
+        out[f"{strategy}_recall{nn}"] = _recall(
+            true_nn, np.argsort(zen, axis=1)[:, :nn])
+        out[f"{strategy}_kruskal"] = Q.kruskal_stress(
+            D_true.ravel(), zen.ravel())
+    return out
+
+
+def pq_compression_ablation(
+    n: int = 4000, m: int = 64, k: int = 16, n_queries: int = 32,
+    nn: int = 10, nprobe: int = 8, subspaces=(16, 8, 4, 2), seed: int = 0,
+) -> Dict[str, float]:
+    """Recall@nn vs PQ compression as the subspace count M sweeps down.
+
+    One f32 IVF index is the baseline; each PQ index re-uses the same
+    coarse quantizer key, so the only variable is bytes-per-member
+    (M uint8 codes vs k f32 coordinates — compression counts the codebook
+    overhead too). Recall is measured against the f32 index at
+    ``nprobe = n_clusters`` (the flat-exact equivalent), raw probe output —
+    no rerank — so the curve isolates what the codes alone retain.
+    """
+    from repro.core.projection import fit_transform
+    from repro.index import IVFZenIndex
+
+    key = jax.random.PRNGKey(seed)
+    X = syn.manifold_space(key, n + n_queries, m, m // 8)
+    Qv, X = X[:n_queries], X[n_queries:]
+    tr, Xp = fit_transform(X, k, jax.random.fold_in(key, 1))
+    Qp = tr.transform(Qv)
+    n_clusters = max(16, int(round(4 * n ** 0.5)))
+    f32 = IVFZenIndex.build(Xp, n_clusters, key=jax.random.fold_in(key, 2))
+    truth = np.asarray(f32.search(Qp, nn, nprobe=f32.n_clusters)[1])
+    base_bytes = f32.tile_coords.nbytes
+    out = {
+        "float32_mb": base_bytes / 2**20,
+        f"float32_nprobe{nprobe}_recall{nn}": _recall(
+            truth, np.asarray(f32.search(Qp, nn, nprobe=nprobe)[1])),
+    }
+    for mcount in subspaces:
+        if mcount > k:
+            continue
+        pq = IVFZenIndex.build(
+            Xp, n_clusters, key=jax.random.fold_in(key, 2), storage="pq",
+            pq_m=mcount)
+        ids = np.asarray(pq.search(Qp, nn, nprobe=nprobe)[1])
+        pq_bytes = pq.tile_coords.nbytes + pq.codebooks.nbytes
+        out[f"pq_m{mcount}_recall{nn}"] = _recall(truth, ids)
+        out[f"pq_m{mcount}_compression"] = base_bytes / pq_bytes
+    return out
+
+
+def main() -> None:
+    """CLI: run every ablation, print ``name,derived`` CSV rows."""
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized shapes (smaller corpora, same protocol)")
+    args = p.parse_args()
+
+    runs = [
+        ("ablate_estimator_zen_vs_bounds", estimator_ablation, {}),
+        ("ablate_dim_profile_100d", dimension_profile,
+         {"ks": (2, 8, 32)} if args.smoke else {}),
+        ("ablate_reference_choice", reference_selection, {}),
+        ("ablate_pivot_strategy", pivot_strategy_ablation,
+         {"n": 600, "n_queries": 32} if args.smoke else {}),
+        ("ablate_pq_compression", pq_compression_ablation,
+         {"n": 1500, "subspaces": (8, 4)} if args.smoke else {}),
+    ]
+    print("name,derived")
+    for name, fn, kw in runs:
+        res = fn(**kw)
+        print(name + "," + ";".join(f"{k}={v:.4f}" for k, v in res.items()))
+
+
+if __name__ == "__main__":
+    main()

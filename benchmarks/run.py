@@ -190,28 +190,31 @@ def bench_kernels() -> None:
     _row("kernel_jsd_interp_128x128x128", t, "pallas interpret mode")
 
 
-def bench_ablations() -> None:
-    """Paper §4.1 / §7.2 ablations: estimator choice, dim profile, ref choice."""
+def bench_ablations(smoke: bool = False) -> None:
+    """Paper §4.1 / §7.2 ablations: estimator choice, dim profile, ref and
+    pivot-strategy choice, PQ compression sweep (benchmarks/ablations.py)."""
     import time as _t
 
     from benchmarks.ablations import (
-        dimension_profile, estimator_ablation, reference_selection,
+        dimension_profile, estimator_ablation, pivot_strategy_ablation,
+        pq_compression_ablation, reference_selection,
     )
 
-    t0 = _t.perf_counter()
-    res = estimator_ablation()
-    _row("ablate_estimator_zen_vs_bounds", (_t.perf_counter() - t0) * 1e6,
-         ";".join(f"{k}={v:.4f}" for k, v in res.items()))
-
-    t0 = _t.perf_counter()
-    res = dimension_profile()
-    _row("ablate_dim_profile_100d", (_t.perf_counter() - t0) * 1e6,
-         ";".join(f"{k}={v:.4f}" for k, v in res.items()))
-
-    t0 = _t.perf_counter()
-    res = reference_selection()
-    _row("ablate_reference_choice", (_t.perf_counter() - t0) * 1e6,
-         ";".join(f"{k}={v:.4f}" for k, v in res.items()))
+    runs = [
+        ("ablate_estimator_zen_vs_bounds", estimator_ablation, {}),
+        ("ablate_dim_profile_100d", dimension_profile,
+         {"ks": (2, 8, 32)} if smoke else {}),
+        ("ablate_reference_choice", reference_selection, {}),
+        ("ablate_pivot_strategy", pivot_strategy_ablation,
+         {"n": 600, "n_queries": 32} if smoke else {}),
+        ("ablate_pq_compression", pq_compression_ablation,
+         {"n": 1500, "subspaces": (8, 4)} if smoke else {}),
+    ]
+    for name, fn, kw in runs:
+        t0 = _t.perf_counter()
+        res = fn(**kw)
+        _row(name, (_t.perf_counter() - t0) * 1e6,
+             ";".join(f"{k}={v:.4f}" for k, v in res.items()))
 
 
 def bench_retrieval_topk(smoke: bool = False) -> None:
@@ -496,7 +499,7 @@ def bench_retrieval_quantized(smoke: bool = False) -> None:
     truth = np.asarray(zt.zen_topk_scan(Qb, X, nn, "zen")[1])
 
     # flat streaming scan: per-row scales
-    for storage in ("float32", "bfloat16", "int8"):
+    for storage in quant.SCALAR_STORAGE_DTYPES:
         vals, scales = quant.encode_rows(np.asarray(X), storage)
         vj = jnp.asarray(vals)
         sj = None if scales is None else jnp.asarray(scales)
@@ -512,7 +515,7 @@ def bench_retrieval_quantized(smoke: bool = False) -> None:
 
     # clustered IVF probe: per-cluster scales, matched nprobe sweep
     indexes = {}
-    for storage in ("float32", "bfloat16", "int8"):
+    for storage in quant.SCALAR_STORAGE_DTYPES:
         t0 = time.perf_counter()
         index = IVFZenIndex.build(
             X, n_clusters, key=jax.random.fold_in(key, 2),
@@ -536,6 +539,72 @@ def bench_retrieval_quantized(smoke: bool = False) -> None:
                 f"retrieval_quant_ivf_{storage}_nprobe{nprobe}_n{n}", t,
                 f"qps={q / (t * 1e-6):.0f};recall10={recalls[storage]:.3f};"
                 f"delta_vs_f32={recalls[storage] - recalls['float32']:+.3f}",
+            )
+
+
+def bench_retrieval_pq(smoke: bool = False) -> None:
+    """Product-quantised IVF tier vs f32: tile bytes and end-to-end recall.
+
+    Builds the same corpus/projection/coarse-quantizer twice — ``storage=
+    "float32"`` and ``storage="pq"`` (default M = k/4 -> 16x smaller tiles)
+    — and serves both through the full filter-and-refine pipeline: LUT
+    probe of ``rerank x nn`` candidates, then ``exact_rerank`` against the
+    original vectors. Recall@10 is measured against true original-space
+    neighbours, so the acceptance bar is apples-to-apples: PQ tiles >= 8x
+    smaller with end-to-end recall within 0.05 of f32 at matched nprobe.
+    """
+    from repro.core import metrics as metrics_lib
+    from repro.core.projection import select_references
+    from repro.core.quality import recall_at_k
+    from repro.data import synthetic as syn
+    from repro.index import IVFZenIndex, exact_rerank
+
+    q, dim, kdim, nn, rerank = 32, 128, 16, 10, 4
+    n = 20_000 if smoke else 100_000
+    n_clusters = max(64, int(round(4 * n**0.5)))
+    key = jax.random.PRNGKey(0)
+    corpus = syn.manifold_space(key, n, dim, 8)
+    tr = select_references(corpus, kdim, jax.random.fold_in(key, 1))
+    X = tr.transform(corpus).astype(jnp.float32)
+    qv = syn.manifold_space(jax.random.fold_in(key, 3), q, dim, 8)
+    Qb = tr.transform(qv).astype(jnp.float32)
+
+    # ground truth: true original-space neighbours
+    D_true = np.asarray(metrics_lib.euclidean_pdist(qv, corpus))
+    truth = np.argsort(D_true, axis=1)[:, :nn]
+
+    indexes, nbytes = {}, {}
+    for storage in ("float32", "pq"):
+        t0 = time.perf_counter()
+        index = IVFZenIndex.build(
+            X, n_clusters, key=jax.random.fold_in(key, 2),
+            n_iters=8 if smoke else 10, storage=storage,
+        )
+        dt = (time.perf_counter() - t0) * 1e6
+        indexes[storage] = index
+        nbytes[storage] = index.tile_coords.nbytes + (
+            index.codebooks.nbytes if index.codebooks is not None else 0)
+        _row(f"retrieval_pq_build_{storage}_n{n}", dt,
+             f"tile_mb={nbytes[storage] / 2**20:.2f};"
+             f"clusters={index.n_clusters};"
+             f"compression_vs_f32={nbytes['float32'] / nbytes[storage]:.1f}x")
+
+    def serve(index, nprobe):
+        _, cand = index.search(Qb, rerank * nn, nprobe=nprobe)
+        return exact_rerank(qv, corpus, cand, nn)
+
+    for nprobe in (8, 16):
+        recalls = {}
+        for storage, index in indexes.items():
+            fn = lambda: serve(index, nprobe)
+            ids = np.asarray(fn()[1])
+            recalls[storage] = recall_at_k(truth, ids)
+            t = _timeit(lambda: fn()[0], repeat=2)
+            _row(
+                f"retrieval_pq_{storage}_nprobe{nprobe}_n{n}", t,
+                f"qps={q / (t * 1e-6):.0f};recall10={recalls[storage]:.3f};"
+                f"delta_vs_f32={recalls[storage] - recalls['float32']:+.3f};"
+                f"rerank={rerank}x",
             )
 
 
@@ -768,13 +837,14 @@ _WORKLOADS = {
     "jsd": lambda a: bench_jsd_spaces(),
     "recall": lambda a: bench_recall(),
     "runtime": lambda a: bench_runtime_fig21(),
-    "ablations": lambda a: bench_ablations(),
+    "ablations": lambda a: bench_ablations(smoke=a.smoke),
     "kernels": lambda a: bench_kernels(),
     "serving": lambda a: bench_serving(),
     "retrieval_topk": lambda a: bench_retrieval_topk(smoke=a.smoke),
     "retrieval_ivf": lambda a: bench_retrieval_ivf(smoke=a.smoke),
     "retrieval_churn": lambda a: bench_retrieval_churn(smoke=a.smoke),
     "retrieval_quantized": lambda a: bench_retrieval_quantized(smoke=a.smoke),
+    "retrieval_pq": lambda a: bench_retrieval_pq(smoke=a.smoke),
     "retrieval_frontend": lambda a: bench_retrieval_frontend(smoke=a.smoke),
     "retrieval_offload": lambda a: bench_retrieval_offload(smoke=a.smoke),
 }

@@ -45,11 +45,16 @@ INDEX_FORMAT = "zen-index"
 #: ``cluster_scales``/``coord_scales`` arrays and a ``storage`` meta key)
 #: or bf16 (stored as a uint16 view); a v1 reader would misinterpret the
 #: raw quantised values as coordinates, so v2 snapshots must be rejected
-#: by it loudly, which the version bump guarantees
-INDEX_FORMAT_VERSION = 2
-#: versions this build can still load; v1 snapshots are a strict subset of
-#: v2 (f32 arrays only, no storage meta — loaders default it to "float32")
-READABLE_VERSIONS = (1, 2)
+#: by it loudly, which the version bump guarantees.
+#: v3: product-quantised storage — under ``storage == "pq"`` the member
+#: coords array holds (n, M) uint8 *codes* (residuals against the
+#: assigned centroid) with their (M, 256, ds) f32 ``pq_codebooks`` array;
+#: a v2 reader knows "pq" as no storage dtype and would fail confusingly
+#: mid-load, so v3 rejects it at the door instead
+INDEX_FORMAT_VERSION = 3
+#: versions this build can still load; v1/v2 snapshots are strict subsets
+#: of v3 (no "pq" storage — loaders default missing meta to "float32")
+READABLE_VERSIONS = (1, 2, 3)
 
 
 class CheckpointFormatError(ValueError):

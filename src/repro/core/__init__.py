@@ -22,6 +22,7 @@ from .simplex import (
 )
 from .zen import estimate_pdist, estimate_triple, knn_search, lwb_pdist, upb_pdist, zen_pdist
 from .baselines import LMDSTransform, MDSTransform, PCATransform, RandomProjection
+from . import pivots
 from . import quality
 
 __all__ = [
@@ -43,6 +44,7 @@ __all__ = [
     "RandomProjection",
     "MDSTransform",
     "LMDSTransform",
+    "pivots",
     "quality",
     "get_metric",
     "pairwise",

@@ -1,0 +1,267 @@
+"""Principled base-simplex (pivot) selection — the ``pivots=`` knob.
+
+The quality of every nSimplex estimate is set at fit time by the base
+simplex: the k reference objects ("pivots") whose pairwise distances the
+apex projection is built on. The paper (Connor, Vadicamo & Rabitti) selects
+them uniformly at random and re-draws on degeneracy
+(``core.projection.select_references``), noting only that the choice is
+checkable during simplex construction. This module adds the classical
+principled alternatives as drop-in strategies:
+
+  random          the paper's baseline (delegates to ``core.projection`` —
+                  bit-identical numerics to every earlier release);
+  kmeanspp        D^2 sampling (the k-means++ seeding rule): each next pivot
+                  is drawn with probability proportional to its squared
+                  distance to the nearest already-chosen pivot — spread with
+                  a controlled amount of randomness;
+  farthest_first  the deterministic greedy 2-approximation of the k-center
+                  problem: start at the max-eccentricity witness, repeatedly
+                  add the point farthest from the chosen set;
+  maxvol          greedy simplex-volume maximisation *using the nSimplex
+                  machinery itself*: after seeding with the farthest pair,
+                  each next pivot is the witness with the largest altitude
+                  over the current base simplex — the altitude IS the
+                  distance to the affine hull of the chosen pivots
+                  (``core.simplex.apex_project``), so this directly grows
+                  the volume term that keeps the Cholesky construction
+                  well-conditioned.
+
+All strategies operate on a witness *distance matrix*, never on raw
+coordinates, so they work unchanged in coordinate-free Hilbert spaces (jsd,
+qform, ... — any ``core.metrics`` entry). The O(n^2) matrix is bounded by
+subsampling the witness set to ``max_witness`` rows (deterministically, from
+the caller's key) before selection.
+
+Determinism contract: for a fixed key, corpus and strategy the chosen pivot
+*ids* are identical across runs and backends (asserted by the golden-parity
+suite) — farthest_first and maxvol are fully deterministic given the
+witness subsample; kmeanspp consumes the key through ``jax.random``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import metrics as metrics_lib
+from . import projection as projection_lib
+from . import simplex as simplex_lib
+
+Array = jax.Array
+
+#: the pivot-selection menu (the ``pivots=`` knob takes exactly these)
+PIVOT_STRATEGIES = ("random", "kmeanspp", "farthest_first", "maxvol")
+
+#: witness subsample cap for the O(n^2) distance-matrix strategies
+MAX_WITNESS = 2048
+
+
+def check_strategy(strategy: str) -> None:
+    """Raise ValueError on an unknown pivot strategy (single menu owner)."""
+    if strategy not in PIVOT_STRATEGIES:
+        raise ValueError(
+            f"unknown pivot strategy {strategy!r}; expected one of "
+            + "/".join(PIVOT_STRATEGIES))
+
+
+def _as_dist(D: np.ndarray) -> np.ndarray:
+    # np.array, not np.asarray: a dtype-matching device array (x64 mode)
+    # converts zero-copy to a *read-only* view, and the greedy loops below
+    # mutate their working copies in place.
+    D = np.array(D, np.float64)
+    n = D.shape[0]
+    assert D.shape == (n, n), D.shape
+    return D
+
+
+def farthest_first_indices(D: np.ndarray, k: int) -> np.ndarray:
+    """Deterministic farthest-first traversal over a (n, n) distance matrix.
+
+    Starts at the maximum-eccentricity row (largest mean distance to the
+    rest — a boundary point, not an arbitrary one), then greedily appends
+    ``argmax_x min_{p in chosen} D[x, p]``. Ties break to the lowest index
+    (numpy argmax), keeping the result reproducible.
+    """
+    D = _as_dist(D)
+    n = D.shape[0]
+    chosen = [int(np.argmax(D.mean(axis=1)))]
+    mind = D[:, chosen[0]].copy()
+    while len(chosen) < k:
+        mind[chosen] = -np.inf
+        nxt = int(np.argmax(mind))
+        chosen.append(nxt)
+        mind = np.minimum(mind, D[:, nxt])
+    return np.asarray(chosen, np.int64)
+
+
+def kmeanspp_indices(D: np.ndarray, k: int, key: Array) -> np.ndarray:
+    """k-means++ (D^2) pivot sampling over a (n, n) distance matrix.
+
+    The first pivot is uniform; each next one is drawn with probability
+    proportional to its squared distance to the nearest chosen pivot
+    (the same seeding rule as ``index.kmeans``, but metric-general: it only
+    reads the matrix). A degenerate all-zero tail (duplicate witnesses)
+    falls back to the first unchosen index.
+    """
+    D = _as_dist(D)
+    n = D.shape[0]
+    key, sub = jax.random.split(key)
+    chosen = [int(jax.random.randint(sub, (), 0, n))]
+    d2 = D[:, chosen[0]] ** 2
+    while len(chosen) < k:
+        d2[chosen] = 0.0
+        total = float(d2.sum())
+        if total <= 0.0:  # duplicates everywhere: deterministic fill
+            rest = [i for i in range(n) if i not in set(chosen)]
+            chosen.append(rest[0])
+        else:
+            key, sub = jax.random.split(key)
+            nxt = int(jax.random.choice(
+                sub, n, (), p=jnp.asarray(d2 / total, jnp.float32)))
+            if nxt in set(chosen):  # f32 renorm noise: take the argmax
+                nxt = int(np.argmax(d2))
+            chosen.append(nxt)
+        d2 = np.minimum(d2, D[:, chosen[-1]] ** 2)
+    return np.asarray(chosen, np.int64)
+
+
+def maxvol_indices(
+    D: np.ndarray, k: int, *, jitter: float = 0.0
+) -> np.ndarray:
+    """Greedy max-volume pivots via the apex projection's own altitude.
+
+    Seeds with the globally farthest pair, then repeatedly builds the base
+    simplex of the chosen set (``core.simplex.build_base_simplex``),
+    projects every witness onto it, and appends the witness with the
+    largest altitude — its distance to the affine hull of the current
+    pivots, i.e. exactly the height whose product the simplex volume is.
+    Fully deterministic.
+    """
+    D = _as_dist(D)
+    n = D.shape[0]
+    if k == 1:
+        return np.asarray([int(np.argmax(D.mean(axis=1)))], np.int64)
+    flat = int(np.argmax(D))
+    chosen = sorted({flat // n, flat % n})
+    if len(chosen) == 1:  # all-duplicate corner: any second point
+        chosen.append((chosen[0] + 1) % n)
+    while len(chosen) < k:
+        sub = jnp.asarray(D[np.ix_(chosen, chosen)], jnp.float32)
+        base = simplex_lib.build_base_simplex(sub, jitter=jitter)
+        coords = simplex_lib.apex_project(
+            base, jnp.asarray(D[:, chosen], jnp.float32))
+        alt = np.array(coords[:, -1], np.float64)  # writable copy (x64 mode)
+        alt[~np.isfinite(alt)] = -np.inf
+        alt[chosen] = -np.inf
+        nxt = int(np.argmax(alt))
+        if not np.isfinite(alt[nxt]):  # fully degenerate witness set:
+            # every altitude collapsed — keep the ids distinct regardless
+            nxt = next(i for i in range(n) if i not in set(chosen))
+        chosen.append(nxt)
+    return np.asarray(chosen, np.int64)
+
+
+def select_pivot_indices(
+    D: np.ndarray,
+    k: int,
+    strategy: str,
+    *,
+    key: Optional[Array] = None,
+    jitter: float = 0.0,
+) -> np.ndarray:
+    """Dispatch: (n, n) witness distance matrix -> (k,) pivot row indices.
+
+    ``key`` is consumed by the stochastic strategies (random, kmeanspp) and
+    ignored by the deterministic ones. Works for any metric — callers in
+    coordinate-free spaces pass their precomputed matrix directly.
+    """
+    check_strategy(strategy)
+    D = _as_dist(D)
+    n = D.shape[0]
+    if not 1 <= k <= n:
+        raise ValueError(f"need 1 <= k <= n={n} pivots, got k={k}")
+    if strategy == "random":
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return np.asarray(
+            jax.random.choice(key, n, (k,), replace=False), np.int64)
+    if strategy == "kmeanspp":
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return kmeanspp_indices(D, k, key)
+    if strategy == "farthest_first":
+        return farthest_first_indices(D, k)
+    return maxvol_indices(D, k, jitter=jitter)
+
+
+def pivot_ids(
+    X: Array,
+    k: int,
+    key: Array,
+    *,
+    strategy: str,
+    metric: str = "euclidean",
+    max_witness: int = MAX_WITNESS,
+    jitter: float = 0.0,
+) -> np.ndarray:
+    """Chosen pivot *row ids into X* for a strategy (golden/ablation probe).
+
+    Subsamples the witness set to ``max_witness`` rows (deterministic in
+    ``key``), builds the metric's pairwise matrix once, and maps the local
+    selection back to global row ids.
+    """
+    check_strategy(strategy)
+    X = jnp.asarray(X)
+    n = X.shape[0]
+    wkey, skey = jax.random.split(key)
+    if n > max_witness:
+        wit = np.sort(np.asarray(
+            jax.random.choice(wkey, n, (max_witness,), replace=False),
+            np.int64))
+    else:
+        wit = np.arange(n, dtype=np.int64)
+    m = metrics_lib.get_metric(metric)
+    W = X[jnp.asarray(wit)]
+    if m.normalize is not None:
+        W = m.normalize(W)
+    D = np.array(m.pdist(W, W), np.float64)  # writable copy (x64 mode)
+    np.fill_diagonal(D, 0.0)
+    local = select_pivot_indices(D, k, strategy, key=skey, jitter=jitter)
+    return wit[local]
+
+
+def select_references(
+    X: Array,
+    k: int,
+    key: Array,
+    *,
+    metric: str = "euclidean",
+    strategy: str = "random",
+    max_witness: int = MAX_WITNESS,
+    jitter: float = 0.0,
+    max_tries: int = 8,
+) -> projection_lib.NSimplexTransform:
+    """Strategy-aware replacement for ``core.projection.select_references``.
+
+    ``strategy="random"`` delegates to the original redraw loop untouched —
+    same key stream, same references, bit-identical coordinates to every
+    earlier release (the golden suite pins this). The principled strategies
+    pick pivots from a witness distance matrix (:func:`pivot_ids`) and fit;
+    should the resulting simplex still be degenerate (duplicate witnesses,
+    rank-deficient corpora), they fall back to the random redraw loop
+    rather than serve a broken base.
+    """
+    check_strategy(strategy)
+    if strategy == "random":
+        return projection_lib.select_references(
+            X, k, key, metric=metric, max_tries=max_tries, jitter=jitter)
+    X = jnp.asarray(X)
+    idx = pivot_ids(X, k, key, strategy=strategy, metric=metric,
+                    max_witness=max_witness, jitter=jitter)
+    tr = projection_lib.NSimplexTransform(
+        k=k, metric=metric, jitter=jitter).fit(X[jnp.asarray(idx)])
+    if bool(tr.degenerate()):
+        return projection_lib.select_references(
+            X, k, key, metric=metric, max_tries=max_tries, jitter=jitter)
+    return tr

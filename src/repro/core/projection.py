@@ -186,6 +186,18 @@ def fit_transform(
     key: jax.Array,
     *,
     metric: str = "euclidean",
+    pivots: str = "random",
 ) -> tuple[NSimplexTransform, Array]:
-    tr = select_references(X, k, key, metric=metric)
+    """Select k references under a pivot strategy, fit, and project X.
+
+    ``pivots`` is one of ``core.pivots.PIVOT_STRATEGIES``; the default
+    "random" reproduces the historical behaviour exactly (same key stream).
+    """
+    if pivots == "random":
+        tr = select_references(X, k, key, metric=metric)
+    else:
+        # deferred: core.pivots imports this module (strategy fallback)
+        from . import pivots as pivots_lib
+        tr = pivots_lib.select_references(
+            X, k, key, metric=metric, strategy=pivots)
     return tr, tr.transform(X)

@@ -59,6 +59,7 @@ from repro.checkpoint import index_io
 from repro.core import metrics as metrics_lib
 from repro.core import zen as zen_lib
 from repro.kernels import ops as kernel_ops
+from repro.kernels import pq as pq_lib
 from repro.kernels import quantize as quant
 from repro.kernels import scoring
 from repro.kernels import tile_stage
@@ -113,9 +114,10 @@ def snapshot_payload(index) -> Tuple[dict, dict]:
     three save paths cannot drift.
 
     Quantised indexes persist their *raw* stored values (bf16/int8 member
-    coords) plus, for int8, the per-cluster scales: load packs them back
-    without a dequantise/requantise cycle, so a snapshot restores
-    bit-identically onto any device count.
+    coords, uint8 PQ codes) plus their decode state — per-cluster scales
+    for int8, the (M, 256, ds) codebooks for pq: load packs them back
+    without a dequantise/requantise (or decode/re-encode) cycle, so a
+    snapshot restores bit-identically onto any device count.
     """
     coords, ids, assign = index._live_members(raw=True)
     arrays = {
@@ -126,6 +128,8 @@ def snapshot_payload(index) -> Tuple[dict, dict]:
     }
     if index.tile_scales is not None:
         arrays["cluster_scales"] = np.asarray(index.tile_scales, np.float32)
+    if getattr(index, "codebooks", None) is not None:
+        arrays["pq_codebooks"] = np.asarray(index.codebooks, np.float32)
     meta = {"n_clusters": index.n_clusters, "tile_rows": index.tile_rows,
             "storage": index.storage}
     return arrays, meta
@@ -178,6 +182,12 @@ def _coerce_member_storage(
     any shard split or tile packing.
     """
     quant.check_storage(storage)
+    if storage == "pq":
+        raise NotImplementedError(
+            "storage='pq' packs uint8 code tiles with their codebooks and "
+            "is only supported by the single-host IVFZenIndex "
+            "(IVFZenIndex.from_members); sharded/tiered layouts take "
+            + "/".join(quant.SCALAR_STORAGE_DTYPES))
     coords = np.asarray(coords)
     if coords.dtype == np.int8:
         if scales is None:
@@ -255,14 +265,21 @@ class IVFZenIndex:
       n_valid:     number of live (searchable) rows.
       n_deleted:   tombstones accumulated since the last build/compact —
                    drives the ``needs_compact`` trigger.
-      storage:     resident dtype of ``tile_coords``: "float32", "bfloat16"
-                   or "int8" (``kernels.quantize``). Estimator accumulation
-                   is f32 regardless; the probe kernels dequantise in
-                   register.
+      storage:     resident dtype of ``tile_coords``, one of
+                   ``kernels.quantize.STORAGE_DTYPES``. Estimator
+                   accumulation is f32 regardless; the probe kernels
+                   dequantise (or LUT-gather, for "pq") in register. Under
+                   "pq" the ``tile_coords`` array holds (C*T, tile_rows, M)
+                   uint8 *codes* instead of k-wide coordinates.
       tile_scales: (C, 1) f32 per-cluster symmetric int8 scales, or ``None``
-                   for f32/bf16 storage. Per *cluster* — not per tile — so
-                   the quantised values depend only on the global assignment,
-                   never on tile packing or shard count.
+                   for f32/bf16/pq storage. Per *cluster* — not per tile —
+                   so the quantised values depend only on the global
+                   assignment, never on tile packing or shard count.
+      codebooks:   (M, 256, ds) f32 PQ subspace codebooks (``kernels.pq``)
+                   when ``storage == "pq"``, else ``None``. Codes are
+                   residuals against the member's *globally assigned*
+                   centroid — the same layout-independence invariant as the
+                   int8 scales.
       generation:  monotonic churn counter — bumped by every
                    upsert/delete/compact that changes the searchable state.
                    The serving frontend's result cache keys on it
@@ -280,6 +297,7 @@ class IVFZenIndex:
     n_deleted: int = 0  # tombstones since the last build/compact
     storage: str = "float32"        # resident dtype of tile_coords
     tile_scales: Optional[Array] = None  # (C, 1) int8 dequant scales
+    codebooks: Optional[Array] = None    # (M, 256, ds) PQ codebooks
     generation: int = 0  # churn counter; invalidates frontend cache entries
 
     # -- pytree plumbing ----------------------------------------------------
@@ -289,17 +307,18 @@ class IVFZenIndex:
         # would force a full `_ivf_search` recompile — and a permanently
         # retained cache entry — on every churn event
         children = (self.centroids, self.tile_coords, self.tile_ids,
-                    self.tile_scales, self.generation)
+                    self.tile_scales, self.codebooks, self.generation)
         aux = (self.n_clusters, self.tiles_per_cluster, self.tile_rows,
                self.n_valid, self.n_deleted, self.storage)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        centroids, tile_coords, tile_ids, tile_scales, generation = children
+        (centroids, tile_coords, tile_ids, tile_scales, codebooks,
+         generation) = children
         return cls(centroids, tile_coords, tile_ids, *aux[:5],
                    storage=aux[5], tile_scales=tile_scales,
-                   generation=generation)
+                   codebooks=codebooks, generation=generation)
 
     @property
     def size(self) -> int:
@@ -322,6 +341,7 @@ class IVFZenIndex:
         chunk: int = 16384,
         key: Optional[Array] = None,
         storage: str = "float32",
+        pq_m: Optional[int] = None,
     ) -> "IVFZenIndex":
         """Cluster (N, k) apex coordinates and pack the inverted lists.
 
@@ -337,15 +357,21 @@ class IVFZenIndex:
           n_iters:    Lloyd iterations for the quantizer fit.
           chunk:      row chunk of the k-means assignment passes.
           key:        PRNG key for the k-means++ seeding.
-          storage:    resident dtype of the packed tiles — "float32",
-                      "bfloat16" or "int8" (per-cluster symmetric scales,
-                      ``kernels.quantize``). The quantizer fit always runs
-                      on the f32 coordinates.
+          storage:    resident dtype of the packed tiles — one of
+                      ``kernels.quantize.STORAGE_DTYPES``: "bfloat16" is a
+                      plain cast, "int8" per-cluster symmetric scales, and
+                      "pq" per-cluster-residual product quantisation
+                      (``kernels.pq``: each member stores ``pq_m`` uint8
+                      codes, codebooks trained here with a fold of ``key``).
+                      The quantizer fit always runs on the f32 coordinates.
+          pq_m:       PQ subspace count M (storage="pq" only); default
+                      ``kernels.pq.default_m(k)`` = ~4 dims per code byte.
 
         Returns a fresh index with ``n_valid == N`` and no tombstones. The
         quantizer fit and assignment run jit-compiled and chunked
         (``index.kmeans``); the pack itself is a one-off host-side sort.
         """
+        quant.check_storage(storage)
         key = key if key is not None else jax.random.PRNGKey(0)
         n, kdim = coords.shape
         n_clusters = max(1, min(n_clusters, n))
@@ -356,14 +382,27 @@ class IVFZenIndex:
         ids_np = (np.arange(n, dtype=np.int64) if ids is None
                   else np.asarray(ids, np.int64).reshape(n))
         _check_ids(ids_np)
+        coords_np = np.asarray(coords, np.float32)
+        codebooks = None
+        if storage == "pq":
+            residuals = coords_np - np.asarray(centroids, np.float32)[assign]
+            codebooks = pq_lib.train_codebooks(
+                residuals, pq_m or pq_lib.default_m(kdim),
+                key=jax.random.fold_in(key, 11), n_iters=n_iters)
+            values = pq_lib.encode(residuals, codebooks)
+            scales = None
+        else:
+            values, scales = None, None
+        packed_src = values if values is not None else coords_np
         packed, out_ids, T = _pack_tiles(
-            np.asarray(coords, np.float32), assign, ids_np, n_clusters,
-            tile_rows)
-        values, scales = _encode_packed(packed, storage)
+            packed_src, assign, ids_np, n_clusters, tile_rows)
+        if storage != "pq":
+            packed, scales = _encode_packed(packed, storage)
+        width = packed.shape[-1]
         return cls(
             centroids=centroids,
             tile_coords=jnp.asarray(
-                values.reshape(n_clusters * T, tile_rows, kdim)),
+                packed.reshape(n_clusters * T, tile_rows, width)),
             tile_ids=jnp.asarray(
                 out_ids.reshape(n_clusters * T, tile_rows)),
             n_clusters=n_clusters,
@@ -372,6 +411,7 @@ class IVFZenIndex:
             n_valid=n,
             storage=storage,
             tile_scales=None if scales is None else jnp.asarray(scales),
+            codebooks=None if codebooks is None else jnp.asarray(codebooks),
         )
 
     # -- mutation (control plane: host-side, returns a new index) -----------
@@ -432,13 +472,14 @@ class IVFZenIndex:
         ids_np, coords_np = _dedupe_last_wins(ids_np, coords_np)
 
         base = self.delete(ids_np)  # replaced rows become tombstones
-        C, T, rows, kdim = (self.n_clusters, base.tiles_per_cluster,
-                            self.tile_rows, self.dim)
+        C, T, rows = self.n_clusters, base.tiles_per_cluster, self.tile_rows
+        # stored width: k for scalar storage, M code bytes under "pq"
+        width = int(base.tile_coords.shape[-1])
         tids = np.asarray(base.tile_ids).reshape(C, T * rows).copy()
         # mutate the *stored* bytes in place and touch only the clusters
         # the batch lands in: untouched clusters keep their exact tiles and
         # scales, and the host work stays O(batch clusters), not O(N)
-        tvals = np.asarray(base.tile_coords).reshape(C, T * rows, kdim).copy()
+        tvals = np.asarray(base.tile_coords).reshape(C, T * rows, width).copy()
         scl = (None if base.tile_scales is None
                else np.asarray(base.tile_scales, np.float32).copy())
 
@@ -451,14 +492,24 @@ class IVFZenIndex:
             tids = np.concatenate(
                 [tids, np.full((C, grow * rows), -1, np.int32)], axis=1)
             tvals = np.concatenate(
-                [tvals, np.zeros((C, grow * rows, kdim), tvals.dtype)],
+                [tvals, np.zeros((C, grow * rows, width), tvals.dtype)],
                 axis=1)
             T += grow
+        cbs = (None if self.codebooks is None
+               else np.asarray(self.codebooks, np.float32))
+        cents = np.asarray(self.centroids, np.float32)
         for c in np.unique(assign):
             sel = np.flatnonzero(assign == c)
             slots = np.flatnonzero(tids[c] < 0)[: sel.size]
             tids[c, slots] = ids_np[sel]
-            if scl is None:  # f32 / bf16: a plain (casting) write
+            if cbs is not None:
+                # pq: residual-encode against this cluster's centroid with
+                # the *frozen* codebooks — same invariant as upserting into
+                # the frozen coarse quantizer; drift is reclaimed by
+                # compact(recluster=True), which retrains both
+                tvals[c, slots] = pq_lib.encode(
+                    coords_np[sel] - cents[c], cbs)
+            elif scl is None:  # f32 / bf16: a plain (casting) write
                 tvals[c, slots] = coords_np[sel]
             else:
                 # int8: dequantise this cluster's block, write the rows,
@@ -475,7 +526,7 @@ class IVFZenIndex:
         # and trip needs_compact with nothing reclaimable
         return dataclasses.replace(
             base,
-            tile_coords=jnp.asarray(tvals.reshape(C * T, rows, kdim)),
+            tile_coords=jnp.asarray(tvals.reshape(C * T, rows, width)),
             tile_ids=jnp.asarray(tids.reshape(C * T, rows).astype(np.int32)),
             tiles_per_cluster=T,
             n_valid=base.n_valid + ids_np.size,
@@ -565,8 +616,13 @@ class IVFZenIndex:
                 1, -(-int(self.cluster_sizes().max()) // self.tile_rows))
             if self.tiles_per_cluster == t_needed:
                 return self
-        coords, ids, assign = self._live_members()
-        if recluster or n_clusters is not None:
+        pq = self.storage == "pq"
+        refit = recluster or n_clusters is not None
+        # a pure pq repack moves the *raw* uint8 codes (a decode/re-encode
+        # cycle could flip codes that tie between duplicated codebook
+        # entries); only a refit decodes, because residual anchors move
+        coords, ids, assign = self._live_members(raw=pq and not refit)
+        if refit:
             key = key if key is not None else jax.random.PRNGKey(0)
             n_clusters = n_clusters or self.n_clusters
             n_clusters = max(1, min(n_clusters, max(len(ids), 1)))
@@ -582,13 +638,32 @@ class IVFZenIndex:
         else:
             n_clusters = self.n_clusters
             centroids = self.centroids
-        packed, out_ids, T = _pack_tiles(
-            coords, assign, ids, n_clusters, self.tile_rows)
-        values, scales = _encode_packed(packed, self.storage)
+        codebooks = None
+        if pq:
+            books = np.asarray(self.codebooks, np.float32)
+            if refit:
+                if len(ids):
+                    residuals = (np.asarray(coords, np.float32)
+                                 - np.asarray(centroids, np.float32)[assign])
+                    books = pq_lib.train_codebooks(
+                        residuals, books.shape[0],
+                        key=jax.random.fold_in(key, 11), n_iters=n_iters)
+                    coords = pq_lib.encode(residuals, books)
+                else:  # emptied index: keep the old books, pack no codes
+                    coords = np.zeros((0, books.shape[0]), np.uint8)
+            codebooks = jnp.asarray(books)
+            values, out_ids, T = _pack_tiles(
+                coords, assign, ids, n_clusters, self.tile_rows)
+            scales = None
+        else:
+            packed, out_ids, T = _pack_tiles(
+                coords, assign, ids, n_clusters, self.tile_rows)
+            values, scales = _encode_packed(packed, self.storage)
+        width = values.shape[-1]
         return IVFZenIndex(
             centroids=centroids,
             tile_coords=jnp.asarray(values.reshape(
-                n_clusters * T, self.tile_rows, self.dim)),
+                n_clusters * T, self.tile_rows, width)),
             tile_ids=jnp.asarray(out_ids.reshape(
                 n_clusters * T, self.tile_rows)),
             n_clusters=n_clusters,
@@ -597,12 +672,26 @@ class IVFZenIndex:
             n_valid=len(ids),
             storage=self.storage,
             tile_scales=None if scales is None else jnp.asarray(scales),
+            codebooks=codebooks,
             generation=self.generation + 1,
         )
 
     def _host_tiles_f32(self) -> np.ndarray:
-        """(C*T, rows, k) dequantised f32 host copy of the packed tiles."""
+        """(C*T, rows, k) dequantised/decoded f32 host copy of the tiles.
+
+        Dead slots (padding/tombstones) come back as whatever their stored
+        bytes decode to — callers filter by ``tile_ids >= 0`` before use.
+        """
         vals = np.asarray(self.tile_coords)
+        if self.codebooks is not None:
+            books = np.asarray(self.codebooks, np.float32)
+            ct = vals.shape[0]
+            flat = pq_lib.decode(
+                vals.reshape(ct * self.tile_rows, -1), books, self.dim)
+            out = flat.reshape(ct, self.tile_rows, self.dim)
+            cents = np.asarray(self.centroids, np.float32)
+            return out + np.repeat(
+                cents, self.tiles_per_cluster, axis=0)[:, None, :]
         if self.tile_scales is not None:
             per_block = np.repeat(  # cluster scale of every tile block
                 np.asarray(self.tile_scales, np.float32)[:, 0],
@@ -640,6 +729,8 @@ class IVFZenIndex:
         *,
         storage: str = "float32",
         scales: Optional[np.ndarray] = None,
+        codebooks: Optional[np.ndarray] = None,
+        pq_m: Optional[int] = None,
     ) -> "IVFZenIndex":
         """Pack canonical host member arrays into a fresh index.
 
@@ -649,22 +740,44 @@ class IVFZenIndex:
         tombstones and minimal tiles-per-cluster.
 
         ``coords`` may arrive already in the storage dtype (a quantised
-        snapshot, with its persisted per-cluster ``scales``) — the values
-        are packed as-is, no dequantise/requantise cycle, which is what
-        makes reloads bit-identical. f32 ``coords`` with a narrow
-        ``storage`` are encoded here instead (fresh scales).
+        snapshot, with its persisted per-cluster ``scales`` — or, under
+        ``storage="pq"``, uint8 codes with their persisted ``codebooks``) —
+        the values are packed as-is, no dequantise/requantise (or
+        decode/re-encode) cycle, which is what makes reloads bit-identical.
+        f32 ``coords`` with a narrow ``storage`` are encoded here instead
+        (fresh scales; for "pq", fresh codebooks unless given — ``pq_m``
+        sets their subspace count).
         """
         assign64 = np.asarray(assign, np.int64)
-        values, scales = _coerce_member_storage(
-            coords, assign64, n_clusters, storage, scales)
+        if storage == "pq":
+            quant.check_storage(storage)
+            coords = np.asarray(coords)
+            if coords.dtype == np.uint8:  # restored codes: pack as-is
+                if codebooks is None:
+                    raise ValueError(
+                        "uint8 PQ member codes need their codebooks")
+                values = coords
+            else:
+                residuals = (np.asarray(coords, np.float32)
+                             - np.asarray(centroids, np.float32)[assign64])
+                if codebooks is None:
+                    codebooks = pq_lib.train_codebooks(
+                        residuals, pq_m or pq_lib.default_m(coords.shape[1]))
+                values = pq_lib.encode(
+                    residuals, np.asarray(codebooks, np.float32))
+            scales = None
+        else:
+            values, scales = _coerce_member_storage(
+                coords, assign64, n_clusters, storage, scales)
+            codebooks = None
         packed, out_ids, T = _pack_tiles(
             values, assign64, np.asarray(ids, np.int64),
             n_clusters, tile_rows)
-        kdim = values.shape[1]
+        width = values.shape[1]
         return cls(
             centroids=jnp.asarray(centroids),
             tile_coords=jnp.asarray(
-                packed.reshape(n_clusters * T, tile_rows, kdim)),
+                packed.reshape(n_clusters * T, tile_rows, width)),
             tile_ids=jnp.asarray(out_ids.reshape(n_clusters * T, tile_rows)),
             n_clusters=n_clusters,
             tiles_per_cluster=T,
@@ -672,6 +785,7 @@ class IVFZenIndex:
             n_valid=values.shape[0],
             storage=storage,
             tile_scales=None if scales is None else jnp.asarray(scales),
+            codebooks=None if codebooks is None else jnp.asarray(codebooks),
         )
 
     # -- persistence ---------------------------------------------------------
@@ -712,6 +826,7 @@ class IVFZenIndex:
             tile_rows or int(meta["tile_rows"]),
             storage=meta.get("storage", "float32"),
             scales=arrays.get("cluster_scales"),
+            codebooks=arrays.get("pq_codebooks"),
         )
 
     # -- search --------------------------------------------------------------
@@ -786,6 +901,18 @@ def _ivf_search(
     force_kernel: bool,
 ) -> Tuple[Array, Array]:
     probes = _probe_clusters(queries, index.centroids, nprobe, mode)
+    if index.codebooks is not None:
+        # pq: fold the estimator mode into per-(query, cluster) ADC tables
+        # once, then stream the uint8 code tiles through the LUT-gather
+        # probe — it needs no mode argument and never sees a coordinate
+        luts = pq_lib.build_luts(
+            queries, index.centroids, index.codebooks, probes,
+            scoring.MODE_IDS[mode])
+        return kernel_ops.ivf_probe_pq(
+            index.tile_coords, index.tile_ids, probes, luts, n_neighbors,
+            tiles_per_cluster=index.tiles_per_cluster,
+            force_kernel=force_kernel,
+        )
     return kernel_ops.ivf_probe(
         queries, index.tile_coords, index.tile_ids, probes, n_neighbors,
         mode, tiles_per_cluster=index.tiles_per_cluster,
@@ -1193,6 +1320,11 @@ class TieredIVFZenIndex:
         best traffic proxy before any query lands; :meth:`refresh_hot`
         re-picks by observed probe traffic.
         """
+        if index.storage == "pq":
+            raise NotImplementedError(
+                "tiered offload does not support storage='pq' (its probe "
+                "scores coordinates, not codes); compact to one of "
+                + "/".join(quant.SCALAR_STORAGE_DTYPES) + " first")
         C = index.n_clusters
         sizes = index.cluster_sizes()
         H = (max(0, min(int(hot_clusters), C)) if hot_clusters is not None

@@ -8,13 +8,15 @@ Layout (per repo convention):
                                zen_topk and ivf_probe (and their fallbacks)
   quantize.py                — bf16 / symmetric-int8 storage for index tiles
                                (dequant fuses into the scoring inner loop)
+  pq.py                      — per-cluster-residual product quantizer codec
+                               + ADC lookup tables (the "pq" storage mode)
   ops.py                     — jit'd public wrappers with backend dispatch
   ref.py                     — pure-jnp oracles, the correctness source of truth
 """
-from . import ivf_probe, ops, quantize, ref, scoring, zen_topk
+from . import ivf_probe, ops, pq, quantize, ref, scoring, zen_topk
 from .ops import jsd_pdist, pdist_sq, zen_estimate
 
 __all__ = [
-    "ivf_probe", "ops", "quantize", "ref", "scoring", "zen_topk",
+    "ivf_probe", "ops", "pq", "quantize", "ref", "scoring", "zen_topk",
     "pdist_sq", "zen_estimate", "jsd_pdist",
 ]

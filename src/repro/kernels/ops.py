@@ -142,6 +142,44 @@ def ivf_probe(
     )
 
 
+def ivf_probe_pq(
+    tile_codes: Array,
+    tile_ids: Array,
+    probes: Array,
+    luts: Array,
+    n_neighbors: int = 10,
+    *,
+    tiles_per_cluster: int,
+    force_kernel: bool = False,
+):
+    """Clustered top-k probe over PQ code tiles; kernel-accelerated.
+
+    The product-quantised sibling of :func:`ivf_probe`: the streamed operand
+    is the (C*T, tile_rows, M) uint8 code tiles and scoring is an
+    asymmetric-distance LUT gather against the per-(query, probed cluster)
+    (M, 256) tables in ``luts`` (``kernels.pq.build_luts`` — estimator mode
+    is folded into the tables, so no ``mode`` argument here). Dispatch
+    mirrors every other kernel: scalar-prefetch Pallas kernel on TPU (or
+    under ``force_kernel`` via interpret mode), fori_loop gather fallback
+    elsewhere. Returns (distances, indices), each (Q, n_neighbors);
+    unfilled slots are (+inf, -1).
+    """
+    if _on_tpu():
+        return _ivf_probe.ivf_probe_pq(
+            tile_codes, tile_ids, probes, luts, n_neighbors,
+            tiles_per_cluster=tiles_per_cluster,
+        )
+    if force_kernel:
+        return _ivf_probe.ivf_probe_pq(
+            tile_codes, tile_ids, probes, luts, n_neighbors,
+            tiles_per_cluster=tiles_per_cluster, interpret=True,
+        )
+    return _ivf_probe.ivf_probe_pq_scan(
+        tile_codes, tile_ids, probes, luts, n_neighbors,
+        tiles_per_cluster=tiles_per_cluster,
+    )
+
+
 def jsd_pdist(
     X: Array, Y: Array, *, force_kernel: bool = False, **block_kw
 ) -> Array:

@@ -5,7 +5,7 @@ low target dimension k is exactly why the *serving index* is the right place
 to spend fewer bits per coordinate: the (N, k) / (C*T, tile_rows, k) resident
 arrays dominate index memory and scan bandwidth, while the estimator math
 (``kernels.scoring``) keeps accumulating in float32 regardless of how the
-tiles are stored. Three storage modes:
+tiles are stored. Four storage modes:
 
   float32   the identity — what every index used before this subsystem;
   bfloat16  a plain cast (same exponent range as f32, 8-bit mantissa): half
@@ -19,7 +19,19 @@ tiles are stored. Three storage modes:
             *global* coarse quantizer, so the scales — and with them the
             quantised values — are identical for any shard count or tile
             repacking; that is what keeps quantised snapshots bit-identical
-            across device counts).
+            across device counts);
+  pq        per-cluster-residual product quantisation (``kernels.pq``):
+            each member stores M uint8 codebook codes instead of k floats
+            (16–32x), scored through per-query asymmetric-distance lookup
+            tables. IVF-only — the residual is taken against the member's
+            coarse centroid, so there is nothing to encode against in the
+            flat layout (``encode_rows`` rejects it).
+
+The mode menu is the single source of truth: every CLI ``--storage`` flag,
+error message and benchmark sweep derives its list from
+:data:`STORAGE_DTYPES` / :data:`SCALAR_STORAGE_DTYPES` (asserted by a test
+that greps the CLI help), so adding a mode cannot leave a stale three-entry
+list behind.
 
 Dequantisation is fused into the probe kernels (``scoring.estimate_tile`` /
 ``estimate_rows`` multiply the tile by its scale in-register right after the
@@ -42,8 +54,13 @@ try:  # the bf16 numpy dtype ships with jax via ml_dtypes
 except ImportError:  # pragma: no cover - ml_dtypes is a jax dependency
     BFLOAT16 = None
 
-#: accepted values of the ``storage=`` knob, in decreasing width
-STORAGE_DTYPES = ("float32", "bfloat16", "int8")
+#: the element-wise (scalar) storage modes: every index layout — flat or
+#: IVF — supports these, and the quantised-retrieval benchmark sweeps them
+SCALAR_STORAGE_DTYPES = ("float32", "bfloat16", "int8")
+
+#: accepted values of the ``storage=`` knob, in decreasing width; "pq"
+#: (product-quantised codes, ``kernels.pq``) is IVF-only
+STORAGE_DTYPES = SCALAR_STORAGE_DTYPES + ("pq",)
 
 #: symmetric int8 quantisation range (-128 is never produced)
 INT8_MAX = 127.0
@@ -62,11 +79,24 @@ def check_storage(storage: str) -> str:
     return storage
 
 
+def storage_help() -> str:
+    """The one-line ``--storage`` CLI help text, derived from the menu.
+
+    Centralised so every entry point (``launch.serve``, benchmark CLIs)
+    prints the same, complete mode list — a new storage mode shows up in
+    every ``--help`` without touching the call sites.
+    """
+    return (f"resident dtype of the searchable index tiles, one of "
+            f"{'/'.join(STORAGE_DTYPES)} (bf16 halves, int8 quarters, pq "
+            f"packs M uint8 codes per row — IVF only; estimator "
+            f"accumulation stays f32)")
+
+
 def np_dtype(storage: str):
     """The numpy dtype index values are resident in under ``storage``."""
     check_storage(storage)
     return {"float32": np.dtype(np.float32), "bfloat16": BFLOAT16,
-            "int8": np.dtype(np.int8)}[storage]
+            "int8": np.dtype(np.int8), "pq": np.dtype(np.uint8)}[storage]
 
 
 def symmetric_scales(absmax: np.ndarray) -> np.ndarray:
@@ -118,8 +148,17 @@ def cluster_scales(
 def encode_rows(
     x: np.ndarray, storage: str
 ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
-    """Encode a flat (N, k) f32 array: ``(values, row scales or None)``."""
+    """Encode a flat (N, k) f32 array: ``(values, row scales or None)``.
+
+    Scalar modes only — "pq" codes are defined relative to a coarse
+    centroid, which the flat layout does not have, so it is rejected here
+    (use ``index.ivf`` with ``storage="pq"``).
+    """
     check_storage(storage)
+    if storage == "pq":
+        raise ValueError(
+            "storage='pq' is IVF-only (codes are per-cluster residuals); "
+            "the flat layout supports " + "/".join(SCALAR_STORAGE_DTYPES))
     x = np.asarray(x, np.float32)
     if storage == "float32":
         return x, None

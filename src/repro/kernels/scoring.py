@@ -99,6 +99,51 @@ def estimate_rows(
     return jnp.sqrt(jnp.maximum(z2, 0.0))
 
 
+def lut_estimate_tile(lut: Array, codes: Array) -> Array:
+    """LUT-gather estimator over one PQ code tile, as seen in a kernel body.
+
+    Args:
+      lut:   (M, E) f32 per-(query, cluster) ADC table (``kernels.pq
+             .build_luts``); ``sum_m lut[m, code[m]]`` is the squared
+             estimator distance (mode folding already applied).
+      codes: (rows, M) integer codes of one tile.
+
+    Returns (1, rows) f32 distances. The gather is expressed as a one-hot
+    contraction — ``codes == iota`` mask dotted against the table over both
+    the subspace and entry axes — which lowers to an MXU matmul on TPU
+    (Pallas has no native vector gather from VMEM) and is exact: each row's
+    result is the f32 sum of exactly M table entries, the rest multiply
+    by 0.
+    """
+    rows, m = codes.shape
+    e = lut.shape[1]
+    hot = (codes.astype(jnp.int32)[:, :, None]
+           == jax.lax.broadcasted_iota(jnp.int32, (rows, m, e), 2)
+           ).astype(jnp.float32)
+    z2 = jax.lax.dot_general(
+        hot, lut.astype(jnp.float32),
+        dimension_numbers=(((1, 2), (0, 1)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (rows,)
+    return jnp.sqrt(jnp.maximum(z2, 0.0))[None, :]
+
+
+def lut_estimate_rows(luts: Array, codes: Array) -> Array:
+    """Batched LUT-gather for the PQ scan fallback: per-query code blocks.
+
+    Args:
+      luts:  (Q, M, E) f32 ADC tables of the probed cluster per query.
+      codes: (Q, R, M) integer codes of the gathered tiles.
+
+    Returns (Q, R) f32 distances — a plain ``take_along_axis`` gather, the
+    jnp mirror of :func:`lut_estimate_tile`'s one-hot contraction.
+    """
+    idx = codes.astype(jnp.int32).transpose(0, 2, 1)    # (Q, M, R)
+    g = jnp.take_along_axis(luts.astype(jnp.float32), idx, axis=2)
+    z2 = jnp.sum(g, axis=1)                             # (Q, R)
+    return jnp.sqrt(jnp.maximum(z2, 0.0))
+
+
 def mask_invalid(d: Array, ids: Array) -> Array:
     """+inf out candidate slots whose id is negative.
 

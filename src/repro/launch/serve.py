@@ -68,7 +68,8 @@ import jax.numpy as jnp
 from repro.checkpoint import index_io
 from repro.core import metrics as metrics_lib
 from repro.core import zen as zen_lib
-from repro.core.projection import NSimplexTransform, select_references
+from repro.core import pivots as pivots_lib
+from repro.core.projection import NSimplexTransform
 from repro.core.simplex import BaseSimplex
 from repro.distributed import retrieval as retrieval_lib
 from repro.kernels import quantize as quant
@@ -114,9 +115,10 @@ class ZenIndex:
                  drives ``needs_compact`` (growth slack is *not* counted:
                  compacting it away would defeat the grow-in-quanta
                  recompile amortisation).
-      storage:   resident dtype of the flat ``coords``: "float32",
-                 "bfloat16" or "int8" (``kernels.quantize``); the search
-                 kernels dequantise in register, accumulation stays f32.
+      storage:   resident dtype of the flat ``coords``, one of
+                 ``kernels.quantize.SCALAR_STORAGE_DTYPES`` (the IVF path
+                 additionally takes "pq"); the search kernels dequantise in
+                 register, accumulation stays f32.
       coord_scales: (cap, 1) f32 per-row symmetric int8 scales, or ``None``
                  for f32/bf16 storage. Per *row* — a scale rides with its
                  row through mutation, compaction and resharding, so
@@ -380,6 +382,8 @@ def build_index(
     tile_rows: int = 128,
     kmeans_iters: int = 15,
     storage: str = "float32",
+    pq_m: Optional[int] = None,
+    pivots: str = "random",
     offload: bool = False,
     hot_clusters: Optional[int] = None,
     offload_shards: int = 1,
@@ -394,11 +398,19 @@ def build_index(
     ``mesh``, both variants shard rows (flat coordinates or inverted lists)
     over all mesh axes.
 
-    ``storage`` picks the resident dtype of the searchable coordinates —
-    "float32", "bfloat16" (half the bytes, plain cast) or "int8" (quarter
-    the bytes, symmetric scales: per row for the flat layout, per cluster
-    for IVF tiles). The projection, quantizer fit and query math all stay
-    f32; only what the probe kernels stream gets narrower.
+    ``storage`` picks the resident dtype of the searchable coordinates, one
+    of ``kernels.quantize.STORAGE_DTYPES`` — "bfloat16" (half the bytes,
+    plain cast), "int8" (quarter, symmetric scales: per row for the flat
+    layout, per cluster for IVF tiles), or "pq" (IVF only: each member
+    stores ``pq_m`` uint8 product-quantiser code bytes, ``kernels.pq``).
+    The projection, quantizer fit and query math all stay f32; only what
+    the probe kernels stream gets narrower.
+
+    ``pivots`` picks the base-simplex selection strategy
+    (``core.pivots.PIVOT_STRATEGIES``): the paper's "random" redraw loop by
+    default, or a principled alternative ("kmeanspp", "farthest_first",
+    "maxvol") — one fit-time knob that lifts estimator quality for every
+    later query.
 
     ``offload=True`` (IVF only) drops the packed inverted-list tiles to a
     host-resident pool after the build (``index.ivf.TieredIVFZenIndex``):
@@ -421,8 +433,18 @@ def build_index(
             "degraded serving over its logical shards replaces mesh "
             "sharding (offload_shards=...)")
     quant.check_storage(storage)
+    if storage == "pq" and index != "ivf":
+        raise ValueError(
+            "storage='pq' is IVF-only (codes are per-cluster residuals); "
+            "the flat layout takes "
+            + "/".join(quant.SCALAR_STORAGE_DTYPES))
+    if storage == "pq" and mesh is not None:
+        raise NotImplementedError(
+            "storage='pq' is single-host for now; drop the mesh or pick "
+            "one of " + "/".join(quant.SCALAR_STORAGE_DTYPES))
     key = key if key is not None else jax.random.PRNGKey(0)
-    tr = select_references(corpus, k, key, metric=metric)
+    tr = pivots_lib.select_references(
+        corpus, k, key, metric=metric, strategy=pivots)
     coords = tr.transform(corpus)
     n = coords.shape[0]
     ivf = None
@@ -435,6 +457,8 @@ def build_index(
             functools.partial(ShardedIVFZenIndex.build, mesh=mesh)
             if mesh is not None else IVFZenIndex.build
         )
+        if mesh is None:
+            builder = functools.partial(builder, pq_m=pq_m)
         ivf = builder(
             coords, n_clusters, tile_rows=tile_rows, n_iters=kmeans_iters,
             key=jax.random.fold_in(key, 7), storage=storage,
@@ -1012,7 +1036,8 @@ class ZenServer:
                     coords_m, mids, massign,
                     jnp.asarray(arrays["ivf_centroids"]),
                     int(meta["n_clusters"]), int(meta["tile_rows"]),
-                    storage=storage, scales=scales)
+                    storage=storage, scales=scales,
+                    codebooks=arrays.get("ivf_pq_codebooks"))
             index = ZenIndex(transform=tr, coords=None, corpus=corpus,
                              mesh=mesh, ivf=ivf, storage=storage)
         else:
@@ -1055,9 +1080,13 @@ def main() -> None:
     p.add_argument("--nprobe", type=int, default=8)
     p.add_argument("--storage", default="float32",
                    choices=list(quant.STORAGE_DTYPES),
-                   help="resident dtype of the searchable index tiles "
-                        "(bf16 halves, int8 quarters the coordinate bytes; "
-                        "estimator accumulation stays f32)")
+                   help=quant.storage_help())
+    p.add_argument("--pq-m", type=int, default=0,
+                   help="PQ subspace count M (storage=pq; 0 = ~k/4)")
+    p.add_argument("--pivots", default="random",
+                   choices=list(pivots_lib.PIVOT_STRATEGIES),
+                   help="base-simplex (reference) selection strategy "
+                        "(core.pivots; random = the paper's redraw loop)")
     p.add_argument("--offload", action="store_true",
                    help="host-offload the IVF tile pool (tiered store): "
                         "only centroids + a hot cluster set stay device-"
@@ -1106,6 +1135,8 @@ def main() -> None:
                             index=args.index,
                             n_clusters=args.clusters or None,
                             storage=args.storage,
+                            pq_m=args.pq_m or None,
+                            pivots=args.pivots,
                             offload=args.offload,
                             hot_clusters=args.hot_clusters or None,
                             offload_shards=args.offload_shards)

@@ -4,7 +4,9 @@
 ``tools/make_golden.py``) holds a fixed-seed corpus plus the expected
 top-k ids *and* distances of every major retrieval configuration — flat
 f32, IVF at ``nprobe = n_clusters`` (exact) and at a partial probe, int8
-storage, exact re-rank, and the jsd/qform non-Euclidean paths. Any PR
+and product-quantised (pq) storage, exact re-rank, the jsd/qform
+non-Euclidean paths, and the pivot ids every ``core.pivots`` strategy
+selects over the fixed-seed corpus. Any PR
 that shifts these bits — a kernel rewrite, an estimator reorder, a
 quantisation change — fails here instead of drifting silently; an
 *intentional* numerical change regenerates the file in the same commit.
@@ -49,11 +51,16 @@ def test_golden_file_is_complete(golden, tool):
         assert golden[f"{name}_ids"].shape == (tool.Q, tool.NN)
         assert golden[f"{name}_d"].dtype == np.float32
         assert golden[f"{name}_ids"].dtype == np.int32
+    for strategy in ("random", "kmeanspp", "farthest_first", "maxvol"):
+        ids = golden[f"pivots_{strategy}_ids"]
+        assert ids.shape == (tool.K,) and ids.dtype == np.int32
+        assert len(set(ids.tolist())) == tool.K
 
 
 @pytest.mark.parametrize("name", [
     "flat_zen", "flat_lwb", "ivf_exact", "ivf_probe4", "flat_int8",
-    "ivf_int8", "flat_rerank", "flat_jsd", "ivf_qform",
+    "ivf_int8", "flat_rerank", "flat_jsd", "ivf_qform", "ivf_pq",
+    "ivf_pq_rerank",
 ])
 def test_case_matches_golden(golden, tool, name):
     """Re-running a pinned configuration reproduces the committed bits."""
@@ -66,6 +73,19 @@ def test_case_matches_golden(golden, tool, name):
         err_msg=f"{name}: distances drifted from the golden file "
                 "(bit-exact comparison; regenerate via tools/make_golden.py "
                 "only for an intentional numerical change)")
+
+
+@pytest.mark.parametrize("strategy", [
+    "random", "kmeanspp", "farthest_first", "maxvol",
+])
+def test_pivot_selection_matches_golden(golden, tool, strategy):
+    """Each pivot strategy re-chooses exactly the committed pivot ids on
+    the fixed-seed corpus — the selection pipeline (witness subsample,
+    metric matrix, greedy/stochastic rule) is pinned end to end."""
+    got = tool.pivot_golden(golden)[f"pivots_{strategy}_ids"]
+    np.testing.assert_array_equal(
+        got, golden[f"pivots_{strategy}_ids"],
+        err_msg=f"pivot strategy {strategy!r} chose different pivots")
 
 
 def test_ivf_full_probe_equals_flat(golden):

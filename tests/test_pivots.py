@@ -1,0 +1,210 @@
+"""Pivot (base-simplex) selection strategies: determinism, the menu
+contract, metric generality, documented degenerate fallbacks, and the
+bit-identity of ``strategy="random"`` with the paper's original redraw
+loop (``core.projection.select_references``)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pivots as pivots_lib
+from repro.core import projection as projection_lib
+from repro.core.projection import fit_transform
+from repro.data import synthetic as syn
+
+
+def _corpus(seed=0, n=300, m=32):
+    return syn.manifold_space(jax.random.PRNGKey(seed), n, m, m // 8)
+
+
+# -- the menu ------------------------------------------------------------------
+
+
+def test_unknown_strategy_rejected_everywhere():
+    X = _corpus()
+    D = np.zeros((4, 4))
+    with pytest.raises(ValueError, match="pivot strategy"):
+        pivots_lib.check_strategy("spectral")
+    with pytest.raises(ValueError, match="pivot strategy"):
+        pivots_lib.select_pivot_indices(D, 2, "spectral")
+    with pytest.raises(ValueError, match="pivot strategy"):
+        pivots_lib.select_references(X, 4, jax.random.PRNGKey(0),
+                                     strategy="spectral")
+    with pytest.raises(ValueError, match="pivot strategy"):
+        fit_transform(X, 4, jax.random.PRNGKey(0), pivots="spectral")
+
+
+def test_pivot_count_validated():
+    D = np.zeros((5, 5))
+    for bad_k in (0, 6):
+        with pytest.raises(ValueError, match="pivots"):
+            pivots_lib.select_pivot_indices(D, bad_k, "farthest_first")
+
+
+# -- determinism + basic shape of the selection --------------------------------
+
+
+@pytest.mark.parametrize("strategy", pivots_lib.PIVOT_STRATEGIES)
+def test_selection_deterministic_distinct_in_range(strategy):
+    X = _corpus(1)
+    key = jax.random.PRNGKey(3)
+    ids1 = pivots_lib.pivot_ids(X, 8, key, strategy=strategy)
+    ids2 = pivots_lib.pivot_ids(X, 8, key, strategy=strategy)
+    np.testing.assert_array_equal(ids1, ids2)
+    assert len(set(ids1.tolist())) == 8
+    assert ids1.min() >= 0 and ids1.max() < X.shape[0]
+
+
+@pytest.mark.parametrize("strategy", pivots_lib.PIVOT_STRATEGIES)
+def test_fitted_transform_usable(strategy):
+    """Every strategy yields a non-degenerate base on a healthy corpus and
+    the fitted transform produces finite apex coordinates."""
+    X = _corpus(2)
+    tr = pivots_lib.select_references(X, 6, jax.random.PRNGKey(1),
+                                      strategy=strategy)
+    assert not bool(tr.degenerate())
+    Xp = np.asarray(tr.transform(X[:50]))
+    assert Xp.shape == (50, 6) and np.isfinite(Xp).all()
+    assert (Xp[:, -1] >= 0).all()  # altitudes are non-negative
+
+
+def test_random_delegates_bit_identical():
+    """strategy="random" must consume the same key stream as the paper's
+    redraw loop — identical references, identical coordinates."""
+    X = _corpus(3)
+    key = jax.random.PRNGKey(7)
+    t_old = projection_lib.select_references(X, 8, key)
+    t_new = pivots_lib.select_references(X, 8, key, strategy="random")
+    np.testing.assert_array_equal(np.asarray(t_old.transform(X[:64])),
+                                  np.asarray(t_new.transform(X[:64])))
+
+
+def test_fit_transform_pivots_knob():
+    X = _corpus(4)
+    key = jax.random.PRNGKey(2)
+    tr_r, Xp_r = fit_transform(X, 8, key)
+    tr_f, Xp_f = fit_transform(X, 8, key, pivots="farthest_first")
+    assert Xp_r.shape == Xp_f.shape == (X.shape[0], 8)
+    # different strategies pick different bases (same key, same corpus)
+    assert not np.array_equal(np.asarray(Xp_r), np.asarray(Xp_f))
+    tr_r2, Xp_r2 = fit_transform(X, 8, key, pivots="random")
+    np.testing.assert_array_equal(np.asarray(Xp_r), np.asarray(Xp_r2))
+
+
+# -- the strategies' defining properties ---------------------------------------
+
+
+def test_farthest_first_is_maxmin_greedy():
+    """Each appended pivot is exactly argmax of the min-distance to the
+    chosen prefix (replayed step by step against the implementation)."""
+    rng = np.random.default_rng(5)
+    P = rng.normal(size=(60, 4))
+    D = np.sqrt(((P[:, None] - P[None]) ** 2).sum(-1))
+    got = pivots_lib.farthest_first_indices(D, 6)
+    chosen = [int(np.argmax(D.mean(axis=1)))]
+    while len(chosen) < 6:
+        mind = D[:, chosen].min(axis=1)
+        mind[chosen] = -np.inf
+        chosen.append(int(np.argmax(mind)))
+    np.testing.assert_array_equal(got, chosen)
+
+
+def test_farthest_first_spreads_more_than_random():
+    X = _corpus(6, n=400)
+    D = np.asarray(jnp.sqrt(jnp.maximum(
+        ((X[:, None] - X[None]) ** 2).sum(-1), 0.0)))
+    ff = pivots_lib.farthest_first_indices(D, 8)
+    rnd = pivots_lib.select_pivot_indices(D, 8, "random",
+                                          key=jax.random.PRNGKey(0))
+
+    def min_sep(ids):
+        sub = D[np.ix_(ids, ids)]
+        return sub[np.triu_indices(8, 1)].min()
+
+    assert min_sep(ff) >= min_sep(rnd)
+
+
+def test_maxvol_grows_altitude():
+    """maxvol's k-th pivot has the largest altitude over the simplex of the
+    first k-1 — replay the last greedy step."""
+    rng = np.random.default_rng(7)
+    P = rng.normal(size=(80, 6))
+    D = np.sqrt(((P[:, None] - P[None]) ** 2).sum(-1))
+    k = 5
+    ids = pivots_lib.maxvol_indices(D, k)
+    prefix = list(ids[:-1])
+    from repro.core import simplex as simplex_lib
+    base = simplex_lib.build_base_simplex(
+        jnp.asarray(D[np.ix_(prefix, prefix)], jnp.float32))
+    coords = simplex_lib.apex_project(
+        base, jnp.asarray(D[:, prefix], jnp.float32))
+    alt = np.asarray(coords[:, -1], np.float64)
+    alt[~np.isfinite(alt)] = -np.inf
+    alt[prefix] = -np.inf
+    assert int(np.argmax(alt)) == ids[-1]
+
+
+# -- metric generality (coordinate-free spaces) --------------------------------
+
+
+@pytest.mark.parametrize("strategy", pivots_lib.PIVOT_STRATEGIES)
+def test_strategies_under_jsd_metric(strategy):
+    X = syn.probability_space(jax.random.PRNGKey(11), 200, 32, 4)
+    tr = pivots_lib.select_references(X, 5, jax.random.PRNGKey(1),
+                                      metric="jsd", strategy=strategy)
+    Xp = np.asarray(tr.transform(X[:20]))
+    assert Xp.shape == (20, 5) and np.isfinite(Xp).all()
+
+
+# -- degenerate corners (documented fallbacks) ---------------------------------
+
+
+def test_kmeanspp_all_duplicates_deterministic_fill():
+    D = np.zeros((6, 6))  # every witness identical
+    ids = pivots_lib.kmeanspp_indices(D, 4, jax.random.PRNGKey(0))
+    assert len(set(ids.tolist())) == 4
+
+
+def test_maxvol_all_duplicates_and_k1():
+    D = np.zeros((5, 5))
+    ids = pivots_lib.maxvol_indices(D, 3)
+    assert len(set(ids.tolist())) == 3
+    rng = np.random.default_rng(8)
+    P = rng.normal(size=(30, 3))
+    D = np.sqrt(((P[:, None] - P[None]) ** 2).sum(-1))
+    (only,) = pivots_lib.maxvol_indices(D, 1)
+    assert only == int(np.argmax(D.mean(axis=1)))
+
+
+def test_witness_subsample_bounds_matrix():
+    """n > max_witness: selection runs on the deterministic subsample and
+    the returned ids map back into the full corpus."""
+    X = _corpus(9, n=500)
+    ids = pivots_lib.pivot_ids(X, 6, jax.random.PRNGKey(4),
+                               strategy="farthest_first", max_witness=64)
+    assert len(set(ids.tolist())) == 6
+    assert ids.max() < 500
+    ids2 = pivots_lib.pivot_ids(X, 6, jax.random.PRNGKey(4),
+                                strategy="farthest_first", max_witness=64)
+    np.testing.assert_array_equal(ids, ids2)
+
+
+def test_degenerate_principled_fit_falls_back_to_random():
+    """A corpus whose principled pivots give a degenerate simplex (mass
+    duplication) still returns a usable transform via the random redraw
+    fallback instead of serving a broken base."""
+    rng = np.random.default_rng(10)
+    row = rng.normal(size=(1, 16)).astype(np.float32)
+    X = jnp.asarray(np.concatenate([np.repeat(row, 40, 0),
+                                    rng.normal(size=(4, 16)).astype(
+                                        np.float32)]))
+    key = jax.random.PRNGKey(0)
+    # 4 distinct points + mass duplication: any 6 pivots repeat a vertex,
+    # so farthest_first's fit is degenerate and must hand over to the
+    # random redraw loop — byte-identical to calling it directly
+    tr_fb = pivots_lib.select_references(X, 6, key,
+                                         strategy="farthest_first")
+    tr_rand = projection_lib.select_references(X, 6, key)
+    np.testing.assert_array_equal(np.asarray(tr_fb.transform(X[:8])),
+                                  np.asarray(tr_rand.transform(X[:8])))

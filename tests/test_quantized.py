@@ -22,8 +22,14 @@ import jax.numpy as jnp
 from repro.core.quality import recall_at_k
 from repro.index import IVFZenIndex
 from repro.kernels import ops
+from repro.kernels import pq as pq_lib
 from repro.kernels import quantize as quant
 from repro.kernels.zen_topk import zen_topk, zen_topk_scan
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fixed-seed replay fallback (tests/_hypothesis_fallback)
+    from _hypothesis_fallback import given, settings, st
 
 RECALL_BAR = 0.02  # quantised recall@10 within this of fp32, same settings
 
@@ -287,6 +293,220 @@ def test_flat_compact_preserves_quantized_bytes():
     q = syn.manifold_space(jax.random.fold_in(key, 2), 4, 32, 4)
     d, ids = server.query(q, 5)
     assert (np.asarray(ids) >= 300).all()
+
+
+# -- PQ codec properties (hypothesis; fixed-seed replay without it) -----------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10**6), m=st.integers(1, 4))
+def test_pq_encode_nearest_entry_and_error_decomposition(seed, m):
+    """encode() snaps every subspace to its *nearest* codebook entry, and
+    the reconstruction error is bounded by (equals, when M | k) the sum of
+    the chosen per-subspace distortions — the ADC invariant that makes
+    LUT scores exact on the decoded coordinates."""
+    rng = np.random.default_rng(seed)
+    k = 8
+    resid = rng.normal(size=(40, k)).astype(np.float32)
+    ds = pq_lib.subspace_dims(k, m)
+    books = rng.normal(size=(m, pq_lib.PQ_ENTRIES, ds)).astype(np.float32)
+    codes = pq_lib.encode(resid, books)
+    assert codes.dtype == np.uint8 and codes.shape == (40, m)
+    sub = pq_lib.split_subspaces(resid, m)  # (n, M, ds)
+    d2 = ((sub[:, :, None, :] - books[None]) ** 2).sum(-1)  # (n, M, E)
+    chosen = np.take_along_axis(
+        d2, codes[..., None].astype(np.int64), 2)[..., 0]
+    np.testing.assert_allclose(chosen, d2.min(axis=2), rtol=1e-4, atol=1e-5)
+    recon = pq_lib.decode(codes, books, k)
+    err = ((recon - resid) ** 2).sum(1)
+    distortion = chosen.sum(1)
+    assert (err <= distortion + 1e-4).all()
+    if k % m == 0:  # no padded columns: the decomposition is exact
+        np.testing.assert_allclose(err, distortion, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_pq_codebook_training_deterministic(seed):
+    """Same key, same residuals -> byte-identical codebooks and codes."""
+    rng = np.random.default_rng(seed)
+    resid = rng.normal(size=(150, 8)).astype(np.float32)
+    key = jax.random.PRNGKey(seed)
+    b1 = pq_lib.train_codebooks(resid, 2, key=key, n_iters=3)
+    b2 = pq_lib.train_codebooks(resid, 2, key=key, n_iters=3)
+    np.testing.assert_array_equal(b1, b2)
+    np.testing.assert_array_equal(
+        pq_lib.encode(resid, b1), pq_lib.encode(resid, b2))
+
+
+def test_pq_small_corpus_duplicate_entries_never_win():
+    """Fewer rows than 256 entries: the trailing codebook entries repeat
+    entry 0, and an exact duplicate can never beat the first occurrence."""
+    rng = np.random.default_rng(5)
+    resid = rng.normal(size=(20, 8)).astype(np.float32)
+    books = pq_lib.train_codebooks(resid, 2, key=jax.random.PRNGKey(0),
+                                   n_iters=3)
+    np.testing.assert_array_equal(
+        books[:, 20:], np.broadcast_to(books[:, :1], books[:, 20:].shape))
+    assert pq_lib.encode(resid, books).max() < 20
+
+
+def test_pq_padded_width_contributes_zero():
+    """M not dividing k: residual padding columns are zero, codebooks train
+    to exactly zero there, and decode truncates them away losslessly."""
+    rng = np.random.default_rng(6)
+    resid = rng.normal(size=(300, 7)).astype(np.float32)  # M=3 -> ds=3, pad 2
+    books = pq_lib.train_codebooks(resid, 3, key=jax.random.PRNGKey(1),
+                                   n_iters=4)
+    assert books.shape == (3, 256, 3)
+    assert (books[2, :, -1] == 0.0).all() and (books[2, :, -2] == 0.0).all()
+    codes = pq_lib.encode(resid, books)
+    assert pq_lib.decode(codes, books, 7).shape == (300, 7)
+
+
+def _member_codes(idx):
+    """id -> uint8 code row for every live member of a PQ index."""
+    codes = np.asarray(idx.tile_coords).reshape(-1, idx.tile_coords.shape[-1])
+    ids = np.asarray(idx.tile_ids).ravel()
+    return {int(i): codes[s].tobytes()
+            for s, i in enumerate(ids) if i >= 0}
+
+
+def test_pq_tombstone_codes_roundtrip(tmp_path):
+    """delete() under storage="pq" rewrites only the id slots (the -1
+    sentinel the probe masks), never the stored code bytes; a pristine
+    snapshot round-trips codes/ids/codebooks byte-for-byte, and a
+    post-delete snapshot (an implicit repack) still carries every live
+    member's exact code bytes — deleted rows never surface again."""
+    X = _coords(30, 900, 12)
+    idx = IVFZenIndex.build(X, 10, key=jax.random.PRNGKey(7), storage="pq")
+    assert idx.tile_coords.dtype == jnp.uint8
+    back0 = IVFZenIndex.load(idx.save(str(tmp_path / "snap0")))
+    assert back0.storage == "pq" and back0.tile_coords.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(back0.tile_coords),
+                                  np.asarray(idx.tile_coords))
+    np.testing.assert_array_equal(np.asarray(back0.tile_ids),
+                                  np.asarray(idx.tile_ids))
+    np.testing.assert_array_equal(np.asarray(back0.codebooks),
+                                  np.asarray(idx.codebooks))
+
+    codes_before = np.asarray(idx.tile_coords)
+    idx2 = idx.delete(np.arange(50))
+    np.testing.assert_array_equal(np.asarray(idx2.tile_coords), codes_before)
+    assert (~np.isin(np.asarray(idx2.tile_ids), np.arange(50))).all()
+    Q = _queries(31, X, 8)
+    d0, i0 = idx2.search(Q, 10, nprobe=10)
+    assert not np.isin(np.asarray(i0), np.arange(50)).any()
+
+    back = IVFZenIndex.load(idx2.save(str(tmp_path / "snap")))
+    assert back.n_valid == 850
+    assert _member_codes(back) == _member_codes(idx2)
+    np.testing.assert_array_equal(np.asarray(back.codebooks),
+                                  np.asarray(idx2.codebooks))
+    d1, i1 = back.search(Q, 10, nprobe=10)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_pq_from_members_requires_codebooks():
+    codes = np.zeros((10, 4), np.uint8)
+    cents = np.zeros((2, 16), np.float32)
+    with pytest.raises(ValueError, match="codebooks"):
+        IVFZenIndex.from_members(
+            codes, np.arange(10), np.zeros(10, np.int64), cents, 2, 128,
+            storage="pq")
+
+
+_PQ_DEVICE_COUNT_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import hashlib
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.index import IVFZenIndex
+
+    rng = np.random.default_rng(33)
+    X = rng.normal(size=(800, 8)).astype(np.float32)
+    X[:, -1] = np.abs(X[:, -1])
+    idx = IVFZenIndex.build(jnp.asarray(X), 8, key=jax.random.PRNGKey(9),
+                            storage="pq", pq_m=2)
+    for name, arr in (("codes", idx.tile_coords), ("ids", idx.tile_ids),
+                      ("books", idx.codebooks)):
+        print(name, hashlib.sha256(np.asarray(arr).tobytes()).hexdigest())
+""")
+
+
+def test_pq_snapshot_bytes_identical_across_device_counts():
+    """Codes depend only on the global k-means assignment (residuals are
+    taken against the *assigned* centroid), so the same corpus + key builds
+    byte-identical PQ tiles whether 1 or 4 devices are visible — the same
+    invariant the int8 cluster scales already carry."""
+    rng = np.random.default_rng(33)
+    X = rng.normal(size=(800, 8)).astype(np.float32)
+    X[:, -1] = np.abs(X[:, -1])
+    # pin x32: the subprocess runs at the default precision, and an earlier
+    # test module may have flipped the global x64 switch in this process
+    prev_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    try:
+        idx = IVFZenIndex.build(jnp.asarray(X), 8, key=jax.random.PRNGKey(9),
+                                storage="pq", pq_m=2)
+    finally:
+        jax.config.update("jax_enable_x64", prev_x64)
+    import hashlib
+    want = {
+        "codes": hashlib.sha256(
+            np.asarray(idx.tile_coords).tobytes()).hexdigest(),
+        "ids": hashlib.sha256(
+            np.asarray(idx.tile_ids).tobytes()).hexdigest(),
+        "books": hashlib.sha256(
+            np.asarray(idx.codebooks).tobytes()).hexdigest(),
+    }
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"),
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", _PQ_DEVICE_COUNT_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    got = dict(line.split() for line in r.stdout.strip().splitlines())
+    assert got == want
+
+
+# -- the storage menu is owned by one tuple ------------------------------------
+
+
+def test_storage_menu_registry():
+    assert quant.STORAGE_DTYPES == quant.SCALAR_STORAGE_DTYPES + ("pq",)
+    assert quant.np_dtype("pq") == np.uint8
+    with pytest.raises(ValueError, match="IVF-only"):
+        quant.encode_rows(np.zeros((2, 4), np.float32), "pq")
+    for name in quant.STORAGE_DTYPES:
+        assert name in quant.storage_help()
+
+
+def test_cli_help_lists_every_storage_and_pivot_choice():
+    """The serve CLI's --help is generated from STORAGE_DTYPES /
+    PIVOT_STRATEGIES — grep the actual help text so a menu addition that
+    skips the CLI (or vice versa) fails here."""
+    from repro.core.pivots import PIVOT_STRATEGIES
+
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"),
+    )
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--help"],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    for name in quant.STORAGE_DTYPES:
+        assert name in r.stdout, f"--storage menu missing {name!r}"
+    for name in PIVOT_STRATEGIES:
+        assert name in r.stdout, f"--pivots menu missing {name!r}"
+    assert "--pq-m" in r.stdout
 
 
 # -- sharded (4 host devices, subprocess) -------------------------------------

@@ -3,8 +3,10 @@
 The golden file pins the serving stack's *exact* numerical output across
 PRs: a fixed-seed corpus + query set and the expected top-k ids/distances
 of every major retrieval configuration — flat f32, IVF probed at
-``nprobe = n_clusters`` (exact), int8 storage, exact re-rank, and the
-non-Euclidean jsd/qform paths. ``tests/test_golden_parity.py`` replays
+``nprobe = n_clusters`` (exact), int8 and product-quantised (pq) storage,
+exact re-rank, the non-Euclidean jsd/qform paths, plus the chosen pivot
+ids of every ``core.pivots`` strategy. ``tests/test_golden_parity.py``
+replays
 each configuration against the stored corpus and requires bit-identical
 results; it also re-runs :func:`build_golden` and requires the regenerated
 arrays to match the committed file bit-for-bit, so the synthetic-data
@@ -72,7 +74,32 @@ CASES = {
                      rerank_factor=4),
     "ivf_qform": dict(space="euclid", metric="qform", index="ivf",
                       nprobe=N_CLUSTERS, rerank_factor=4),
+    # product-quantised storage: codes + codebooks + fused LUT probe.
+    # pq_m pinned (not left to the default) so the golden stays meaningful
+    # if the default subspace heuristic ever changes.
+    "ivf_pq": dict(space="euclid", metric="euclidean", index="ivf",
+                   storage="pq", pq_m=2, nprobe=N_CLUSTERS),
+    "ivf_pq_rerank": dict(space="euclid", metric="euclidean", index="ivf",
+                          storage="pq", pq_m=2, nprobe=4, rerank_factor=4),
 }
+
+#: pivot-selection golden: chosen pivot row ids per strategy over the
+#: euclid corpus — pins ``core.pivots`` end to end (witness subsample,
+#: distance matrix, greedy/stochastic selection)
+PIVOT_KEY_SEED = 7
+
+
+def pivot_golden(arrays: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    from repro.core.pivots import PIVOT_STRATEGIES, pivot_ids
+
+    with _force_x32():
+        corpus = jax.numpy.asarray(arrays["corpus_euclid"])
+        return {
+            f"pivots_{strategy}_ids": np.asarray(
+                pivot_ids(corpus, K, jax.random.PRNGKey(PIVOT_KEY_SEED),
+                          strategy=strategy), np.int32)
+            for strategy in PIVOT_STRATEGIES
+        }
 
 
 def _spaces() -> Dict[str, np.ndarray]:
@@ -113,6 +140,7 @@ def _run_case_x32(name: str, arrays: Dict[str, np.ndarray]):
     build_kw = dict(
         metric=cfg.pop("metric"), index=cfg.pop("index"),
         storage=cfg.pop("storage", "float32"),
+        pq_m=cfg.pop("pq_m", None),
         key=jax.random.PRNGKey(7),
     )
     if build_kw["index"] == "ivf":
@@ -130,6 +158,7 @@ def build_golden() -> Dict[str, np.ndarray]:
         d, ids = run_case(name, arrays)
         arrays[f"{name}_d"] = d
         arrays[f"{name}_ids"] = ids
+    arrays.update(pivot_golden(arrays))
     return arrays
 
 
