@@ -817,6 +817,167 @@ def bench_retrieval_offload(smoke: bool = False) -> None:
     )
 
 
+def bench_retrieval_replicated(smoke: bool = False) -> None:
+    """Replicated query-plane serving + the open-loop SLO harness. Three
+    phases over one published index (``repro.launch.replicate``):
+
+    **Hot-swap under churn** — the leader churns (batched upserts +
+    deletes) and republishes; an mmap'd replica polls, hot-swaps, and its
+    answers are compared bit-for-bit against a direct leader query every
+    round. Reports swap latency, publish latency, poll errors (must be 0)
+    and the parity verdict.
+
+    **Latency vs offered load** — one replica behind the micro-batched
+    frontend is driven *open-loop* (Poisson arrivals; latency measured
+    from scheduled arrival time, so coordinated omission cannot hide the
+    overload region) at multiples of its admission budget — ``max_batch``
+    rows per ``tick_interval``, the production SLO knob. Every power-of-two
+    query bucket is compiled *before* the sweep so XLA compile time never
+    pollutes a percentile. Reports p50/p95/p99, achieved QPS and the
+    reject-on-full shed rate per offered rate.
+
+    **Replica scaling** — the same offered overload against fleets of 1
+    and 3 replicas (round-robin, each ticked at its own cadence; this host
+    has one core, so scaling is of the *admission budget* — see
+    docs/benchmarks.md). The acceptance bar is >= 2x aggregate goodput at
+    R=3, with every replica still answering bit-identically to the leader.
+    """
+    import shutil
+    import tempfile
+
+    from repro.data import synthetic as syn
+    from repro.launch.replicate import IndexLeader, QueryReplica
+    from repro.launch.serve import ZenServer, build_index
+    from repro.serving.loadgen import run_open_loop
+
+    n = 20_000 if smoke else 100_000
+    dim, kdim, nn = 128, 16, 10
+    max_batch, tick = 32, 0.05
+    budget = max_batch / tick          # admission budget, queries/s/replica
+    dur = 1.0 if smoke else 4.0
+    key = jax.random.PRNGKey(0)
+    corpus = syn.manifold_space(key, n, dim, 8)
+    index = build_index(corpus, kdim, index="ivf",
+                        key=jax.random.fold_in(key, 2))
+    qs = np.asarray(syn.manifold_space(
+        jax.random.fold_in(key, 3), 64, dim, 8), np.float32)
+
+    root = tempfile.mkdtemp(prefix="zen-bench-replicated-")
+    try:
+        leader_srv = ZenServer(index, nprobe=8)
+        leader = IndexLeader(leader_srv, root, keep=2)
+        leader.publish()
+
+        # -- phase 1: churn -> publish -> hot-swap loop, bit parity ----------
+        rep = QueryReplica(root, mmap=True, nprobe=8)
+        rep.poll()
+        rounds = 3 if smoke else 6
+        rng = np.random.default_rng(0)
+        parity = True
+        t_pub = t_swap = 0.0
+        batch = 64
+        for r in range(rounds):
+            new_ids = np.arange(n + r * batch, n + (r + 1) * batch)
+            leader.upsert(new_ids, syn.manifold_space(
+                jax.random.fold_in(key, 100 + r), batch, dim, 8))
+            leader.delete(rng.choice(n, size=batch, replace=False))
+            t0 = time.perf_counter()
+            leader.publish()
+            t_pub += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            swapped = rep.poll()
+            t_swap += time.perf_counter() - t0
+            got = rep.query(qs, nn)
+            want = leader_srv.query(qs, nn, direct=True)
+            parity &= bool(swapped
+                           and np.array_equal(np.asarray(got[0]),
+                                              np.asarray(want[0]))
+                           and np.array_equal(np.asarray(got[1]),
+                                              np.asarray(want[1])))
+        _row(
+            f"retrieval_replicated_hotswap_n{n}", t_swap * 1e6 / rounds,
+            f"rounds={rounds};publish_s={t_pub / rounds:.2f};"
+            f"poll_errors={rep.poll_errors};swaps={rep.swaps};"
+            f"generation={rep.generation};"
+            f"parity={'bit' if parity else 'DIVERGED'}",
+        )
+
+        def make_fleet(n_replicas):
+            # queue_limit == max_batch makes the admission budget exactly
+            # max_batch rows per tick: a tick drains the whole backlog
+            # (split at max_batch), so a deeper queue would quietly raise
+            # the per-replica capacity above the budget being measured
+            reps = [QueryReplica(root, name=f"r{i}", mmap=True, nprobe=8,
+                                 frontend=True, cache_size=0,
+                                 max_batch=max_batch,
+                                 queue_limit=max_batch,
+                                 tick_interval=tick)
+                    for i in range(n_replicas)]
+            for r_ in reps:
+                r_.poll()
+                # compile every power-of-two Q bucket up front: a cold
+                # bucket's XLA compile (hundreds of ms) would otherwise
+                # land in the middle of the sweep and pollute the p99
+                b = 1
+                while b <= max_batch:
+                    hs = [r_.server.frontend.submit(qs[i % len(qs)], nn)
+                          for i in range(b)]
+                    r_.server.frontend.flush()
+                    for h in hs:
+                        h.result()
+                    b *= 2
+            return reps
+
+        # -- phase 2: open-loop latency vs offered load (one replica) -------
+        fleet1 = make_fleet(1)
+        for mult in (0.25, 0.5, 1.0, 2.0, 4.0):
+            rr = run_open_loop([r.server for r in fleet1], qs,
+                               offered_qps=mult * budget, duration_s=dur,
+                               n_neighbors=nn, seed=7)
+            _row(
+                f"retrieval_replicated_load_x{mult:g}_n{n}",
+                rr.p99_ms * 1e3,
+                f"offered_qps={rr.offered_qps:.0f};"
+                f"achieved_qps={rr.achieved_qps:.0f};"
+                f"p50_ms={rr.p50_ms:.1f};p95_ms={rr.p95_ms:.1f};"
+                f"p99_ms={rr.p99_ms:.1f};reject_rate={rr.reject_rate:.2f};"
+                f"timeouts={rr.timeouts};budget_qps={budget:.0f}",
+            )
+
+        # -- phase 3: aggregate goodput scaling with replica count ----------
+        offered = 3.2 * budget  # saturates one replica's admission budget
+        agg = {}
+        for n_replicas in (1, 3):
+            fleet = make_fleet(n_replicas)
+            rr = run_open_loop([r.server for r in fleet], qs,
+                               offered_qps=offered, duration_s=dur,
+                               n_neighbors=nn, seed=11)
+            agg[n_replicas] = rr
+            want = leader_srv.query(qs, nn, direct=True)
+            fleet_parity = all(
+                np.array_equal(np.asarray(g[0]), np.asarray(want[0]))
+                and np.array_equal(np.asarray(g[1]), np.asarray(want[1]))
+                for g in (r.query(qs, nn) for r in fleet))
+            _row(
+                f"retrieval_replicated_fleet_r{n_replicas}_n{n}",
+                rr.p99_ms * 1e3,
+                f"offered_qps={offered:.0f};"
+                f"aggregate_qps={rr.achieved_qps:.0f};"
+                f"reject_rate={rr.reject_rate:.2f};p99_ms={rr.p99_ms:.1f};"
+                f"failures={rr.failures};timeouts={rr.timeouts};"
+                f"parity={'bit' if fleet_parity else 'DIVERGED'}",
+            )
+        speedup = agg[3].achieved_qps / max(agg[1].achieved_qps, 1e-9)
+        _row(
+            "retrieval_replicated_scaling", 0.0,
+            f"aggregate_qps_r3_vs_r1={speedup:.2f}x;bar=2.0x;"
+            f"met={'yes' if speedup >= 2.0 else 'NO'};"
+            f"budget_per_replica_qps={budget:.0f}",
+        )
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def bench_serving() -> None:
     from repro.data import synthetic as syn
     from repro.launch.serve import ZenServer, build_index
@@ -847,6 +1008,8 @@ _WORKLOADS = {
     "retrieval_pq": lambda a: bench_retrieval_pq(smoke=a.smoke),
     "retrieval_frontend": lambda a: bench_retrieval_frontend(smoke=a.smoke),
     "retrieval_offload": lambda a: bench_retrieval_offload(smoke=a.smoke),
+    "retrieval_replicated":
+        lambda a: bench_retrieval_replicated(smoke=a.smoke),
 }
 
 

@@ -1,0 +1,154 @@
+"""Replicated query-plane serving: one leader, N hot-swapping replicas.
+
+The nSimplex-Zen index is fitted once and then applied out-of-sample, so
+the fitted index is a read-mostly artifact — the production shape is a
+single **leader** that owns churn and publishes atomic generation-tagged
+snapshots, plus N **query-plane replicas** that watch the publish
+directory, hot-swap (optionally mmap'd) without dropping in-flight
+queries, and serve bit-identically to the leader (``repro.launch
+.replicate``; see docs/architecture.md "Replicated serving").
+
+The script walks the whole lifecycle:
+
+1. build the index, wrap it in an ``IndexLeader``, publish generation 0;
+2. start replicas (mmap'd, micro-batched frontend), poll -> first swap;
+3. churn on the leader (deletes + upserts through the fitted transform),
+   republish, replica hot-swap — and verify every replica's answers stay
+   bit-identical to a direct leader query at each generation;
+4. drive the fleet with the open-loop SLO harness (Poisson arrivals at a
+   configured *offered* QPS, ``repro.serving.loadgen``) and print the
+   latency/shed-rate report;
+5. simulate a leader preemption: one final handoff publish, churn
+   refused, a successor leader resumes from the published generation.
+
+Run:  PYTHONPATH=src python examples/serve_replicated.py [--n 50000]
+      PYTHONPATH=src python examples/serve_replicated.py \
+          --replicas 3 --offered-qps 800 --duration 2.0
+"""
+import argparse
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from repro.data import synthetic as syn
+from repro.launch.replicate import IndexLeader, LeaderHandedOff, QueryReplica
+from repro.launch.serve import ZenServer, build_index
+from repro.serving.loadgen import run_open_loop
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--n", type=int, default=50_000)
+    p.add_argument("--dim", type=int, default=128)
+    p.add_argument("--k", type=int, default=16)
+    p.add_argument("--replicas", type=int, default=2)
+    p.add_argument("--rounds", type=int, default=3,
+                   help="churn -> publish -> hot-swap rounds")
+    p.add_argument("--neighbors", type=int, default=10)
+    p.add_argument("--offered-qps", type=float, default=400.0,
+                   help="open-loop Poisson arrival rate for phase 4")
+    p.add_argument("--duration", type=float, default=2.0,
+                   help="open-loop arrival window, seconds")
+    p.add_argument("--publish-root", default=None, metavar="DIR",
+                   help="publish directory (default: a temp dir)")
+    args = p.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    print(f"corpus: {args.n} x {args.dim}")
+    corpus = syn.manifold_space(key, args.n, args.dim, args.dim // 16)
+    index = build_index(corpus, args.k, index="ivf",
+                        key=jax.random.fold_in(key, 2))
+    queries = np.asarray(syn.manifold_space(
+        jax.random.fold_in(key, 3), 64, args.dim, args.dim // 16),
+        np.float32)
+
+    root = args.publish_root or tempfile.mkdtemp(prefix="zen-replicated-")
+    try:
+        # 1. leader + first publish
+        leader = IndexLeader(ZenServer(index, nprobe=8), root, keep=2)
+        pub = leader.publish()
+        print(f"leader: published generation {pub.generation} -> "
+              f"{pub.snapshot}")
+
+        # 2. replicas: mmap'd hot-swap + micro-batched frontend
+        reps = [QueryReplica(root, name=f"replica-{i}", mmap=True, nprobe=8,
+                             frontend=True, cache_size=256)
+                for i in range(args.replicas)]
+        tracker = leader.track_replicas(deadline_s=60.0)
+        for r in reps:
+            r.poll()
+            leader.replica_report(r.name, r.generation)
+        print(f"replicas: {args.replicas} swapped to generation "
+              f"{reps[0].generation}; fleet coherent: "
+              f"{tracker.coherent(leader.generation)}")
+
+        # 3. churn -> publish -> hot-swap, bit parity every round
+        rng = np.random.default_rng(0)
+        batch = 256
+        for round_ in range(args.rounds):
+            new_ids = np.arange(args.n + round_ * batch,
+                                args.n + (round_ + 1) * batch)
+            leader.upsert(new_ids, syn.manifold_space(
+                jax.random.fold_in(key, 100 + round_), batch, args.dim,
+                args.dim // 16))
+            leader.delete(rng.choice(args.n, size=batch, replace=False))
+            leader.publish()
+            t0 = time.time()
+            for r in reps:
+                r.poll()
+                leader.replica_report(r.name, r.generation)
+            t_swap = (time.time() - t0) / len(reps)
+            want = leader.server.query(queries, args.neighbors, direct=True)
+            same = all(
+                np.array_equal(np.asarray(g[0]), np.asarray(want[0]))
+                and np.array_equal(np.asarray(g[1]), np.asarray(want[1]))
+                for g in (r.query(queries, args.neighbors) for r in reps))
+            print(f"round {round_}: generation {leader.generation}, "
+                  f"swap {t_swap * 1e3:.0f} ms/replica, "
+                  f"bit-identical to leader: {same}")
+
+        # 4. open-loop offered load over the fleet (round-robin)
+        report = run_open_loop([r.server for r in reps], queries,
+                               offered_qps=args.offered_qps,
+                               duration_s=args.duration,
+                               n_neighbors=args.neighbors, seed=7)
+        print(f"open-loop @ {report.offered_qps:.0f} qps offered over "
+              f"{args.replicas} replica(s): achieved "
+              f"{report.achieved_qps:.0f} qps, p50 {report.p50_ms:.1f} ms, "
+              f"p99 {report.p99_ms:.1f} ms, reject rate "
+              f"{report.reject_rate:.2f}, failures {report.failures}")
+        print("fleet status:", leader.fleet_status())
+
+        # 5. preemption handoff: final publish, churn refused, successor
+        leader.enable_preemption()
+        leader.preemption.request()  # the platform's SIGTERM, simulated
+        if leader.maybe_handoff():
+            print(f"leader: preempted -> handoff snapshot published at "
+                  f"generation {leader.published_generation}")
+        try:
+            leader.delete([0])
+        except LeaderHandedOff as e:
+            print(f"leader: churn refused after handoff ({e})")
+        from repro.launch.replicate import read_pointer
+        successor = IndexLeader(
+            ZenServer.load(read_pointer(root).snapshot), root, keep=2)
+        successor.upsert([args.n + 10 ** 6], syn.manifold_space(
+            jax.random.fold_in(key, 999), 1, args.dim, args.dim // 16))
+        successor.publish()
+        for r in reps:
+            r.poll()
+        print(f"successor: resumed churn at generation "
+              f"{successor.generation}; replicas now at generation "
+              f"{reps[0].generation}; poll errors: "
+              f"{sum(r.poll_errors for r in reps)}")
+    finally:
+        if args.publish_root is None:
+            shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -61,6 +61,43 @@ class CheckpointFormatError(ValueError):
     """Raised when a snapshot's format/version/kind does not match."""
 
 
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so the rename that published into it is durable.
+
+    File-content fsyncs alone leave the *directory entry* unjournalled: a
+    power cut after ``os.rename`` could resurrect the old name. Best-effort
+    on platforms whose directories cannot be opened (e.g. Windows).
+    """
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform without dir fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def write_json_atomic(path: str, payload: Mapping[str, Any]) -> str:
+    """Durably replace a small JSON file (tmp + fsync + rename + dir fsync).
+
+    The publish-pointer primitive of the replicated serving tier
+    (``launch.replicate``): readers see either the previous pointer or the
+    new one, never a torn write — the same discipline as
+    :func:`save_state`, applied to a single file.
+    """
+    path = os.path.abspath(path)
+    tmp = os.path.join(os.path.dirname(path),
+                       f"tmp.{os.path.basename(path)}")
+    with open(tmp, "w") as f:
+        json.dump(dict(payload), f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)  # atomic on POSIX
+    _fsync_dir(os.path.dirname(path))
+    return path
+
+
 def save_state(
     directory: str,
     arrays: Mapping[str, np.ndarray],
@@ -124,6 +161,7 @@ def save_state(
             shutil.rmtree(old)
         os.rename(directory, old)
     os.rename(tmp, directory)  # atomic publish
+    _fsync_dir(parent)  # make the rename itself durable, not just the files
     shutil.rmtree(old, ignore_errors=True)
     return directory
 

@@ -115,6 +115,56 @@ class HeartbeatRegistry:
                       if t - self._deadline_ref(h) <= self.deadline_s)
 
 
+class ReplicaTracker:
+    """Leader-side bookkeeping of a query-plane replica fleet.
+
+    The replicated serving tier (``launch.replicate``) is pull-based —
+    replicas poll the publish directory and swap on their own schedule — so
+    the leader cannot *assume* coherence; it can only observe it. Each
+    replica's supervisor calls :meth:`report` with the generation it is
+    currently serving; the tracker folds that into a
+    :class:`HeartbeatRegistry` (silence past the deadline = dead replica)
+    and answers the two operator questions: who is alive, and who is still
+    serving an older generation than the latest publish (*lagging* — legal,
+    the replica keeps serving its old snapshot, but worth surfacing when a
+    publish is not being picked up).
+    """
+
+    def __init__(self, deadline_s: float = 60.0,
+                 now: Callable[[], float] = time.monotonic):
+        self.heartbeats = HeartbeatRegistry(deadline_s=deadline_s, now=now)
+        self._generation: Dict[str, int] = {}
+
+    def report(self, replica: str, generation: int) -> None:
+        """One replica status beat: the generation it currently serves."""
+        self.heartbeats.beat(replica)
+        self._generation[str(replica)] = int(generation)
+
+    def generation_of(self, replica: str) -> Optional[int]:
+        return self._generation.get(str(replica))
+
+    def lagging(self, published_generation: int) -> list[str]:
+        """Alive replicas serving a generation older than the published one
+        (a replica that never reported counts as lagging from generation
+        -1 — silence must not read as coherence)."""
+        return [r for r in self.heartbeats.alive()
+                if self._generation.get(r, -1) < published_generation]
+
+    def coherent(self, published_generation: int) -> bool:
+        """True when every *alive* replica serves the published generation."""
+        return not self.lagging(published_generation)
+
+    def status(self, published_generation: int) -> dict:
+        """Operator snapshot: liveness + lag against the given publish."""
+        return {
+            "published_generation": int(published_generation),
+            "replicas": dict(sorted(self._generation.items())),
+            "alive": self.heartbeats.alive(),
+            "dead": self.heartbeats.dead_hosts(),
+            "lagging": self.lagging(published_generation),
+        }
+
+
 class PreemptionGuard:
     """SIGTERM-aware save trigger: ``if guard.should_save(): ckpt.save(...)``."""
 

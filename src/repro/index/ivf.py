@@ -131,7 +131,14 @@ def snapshot_payload(index) -> Tuple[dict, dict]:
     if getattr(index, "codebooks", None) is not None:
         arrays["pq_codebooks"] = np.asarray(index.codebooks, np.float32)
     meta = {"n_clusters": index.n_clusters, "tile_rows": index.tile_rows,
-            "storage": index.storage}
+            "storage": index.storage,
+            # churn counter: a restored index must key cache entries on the
+            # *published* generation, not restart from 0 (replication keys
+            # replica caches on this — repro.launch.replicate). Sharded
+            # mesh indexes are immutable and carry no counter; the wrapper
+            # ZenIndex generation (ZenServer.save overwrites this key) is
+            # authoritative for them.
+            "generation": int(getattr(index, "generation", 0))}
     return arrays, meta
 
 
@@ -731,6 +738,7 @@ class IVFZenIndex:
         scales: Optional[np.ndarray] = None,
         codebooks: Optional[np.ndarray] = None,
         pq_m: Optional[int] = None,
+        generation: int = 0,
     ) -> "IVFZenIndex":
         """Pack canonical host member arrays into a fresh index.
 
@@ -786,6 +794,7 @@ class IVFZenIndex:
             storage=storage,
             tile_scales=None if scales is None else jnp.asarray(scales),
             codebooks=None if codebooks is None else jnp.asarray(codebooks),
+            generation=generation,
         )
 
     # -- persistence ---------------------------------------------------------
@@ -827,6 +836,7 @@ class IVFZenIndex:
             storage=meta.get("storage", "float32"),
             scales=arrays.get("cluster_scales"),
             codebooks=arrays.get("pq_codebooks"),
+            generation=int(meta.get("generation", 0)),
         )
 
     # -- search --------------------------------------------------------------
@@ -1609,6 +1619,7 @@ class TieredIVFZenIndex:
             "n_valid": self.n_valid,
             "storage": self.storage,
             "n_shards": self.n_shards,
+            "generation": int(self.generation),
         }
         return index_io.save_state(
             directory, arrays, meta, kind=TILE_POOL_SNAPSHOT_KIND)
@@ -1650,4 +1661,5 @@ class TieredIVFZenIndex:
             n_shards=int(meta.get("n_shards", 1)) if n_shards is None
             else n_shards,
             force_stage_kernel=force_stage_kernel,
+            generation=int(meta.get("generation", 0)),
         )

@@ -488,6 +488,126 @@ def build_index(
                     coord_scales=coord_scales)
 
 
+def load_index_snapshot(
+    directory: str,
+    *,
+    mesh=None,
+    mmap: bool = False,
+    pool: Optional[str] = None,
+    pool_kw: Optional[dict] = None,
+) -> Tuple[ZenIndex, dict]:
+    """Load a :meth:`ZenServer.save` snapshot into a ``ZenIndex``.
+
+    The index-owner / query-plane split of the replicated serving tier
+    (``repro.launch.replicate``) hinges on this function being independent
+    of any server object: a replica loads the published snapshot into a
+    fresh ``ZenIndex`` and swaps it under its long-lived ``ZenServer``
+    without touching the leader's state.
+
+    Args:
+      directory: snapshot directory (``SERVER_SNAPSHOT_KIND``).
+      mesh:      optional device mesh to reshard onto (flat coordinates are
+                 re-padded/re-sharded, IVF inverted lists re-packed).
+      mmap:      memory-map the snapshot arrays read-only instead of
+                 materialising host copies. Device-resident layouts still
+                 copy onto the device, but the host never holds a second
+                 materialised copy — and for the tiered ``pool`` path the
+                 cold tiles are *served* straight off the mapped files.
+      pool:      optional ``TILE_POOL_SNAPSHOT_KIND`` snapshot directory
+                 (published next to the server snapshot by
+                 ``replicate.IndexLeader``): the IVF tier is opened as a
+                 serve-only ``TieredIVFZenIndex`` over that pool
+                 (``load(mmap=...)``) instead of re-packing resident tiles
+                 — the billion-row replica shape. IVF snapshots only.
+      pool_kw:   extra ``TieredIVFZenIndex.load`` options (``hot_clusters``,
+                 ``hot_fraction``, ``prefetch_cols``, ``n_shards``, ...).
+
+    Returns ``(index, server_kw)``: the restored index (its ``generation``
+    is the *published* one, not a fresh counter — frontend cache keys
+    depend on it) and the saved server construction kwargs.
+
+    Raises ``checkpoint.CheckpointFormatError`` for snapshots written by an
+    incompatible format version or of a different kind.
+    """
+    arrays, meta = index_io.load_state(
+        directory, expect_kind=SERVER_SNAPSHOT_KIND, mmap=mmap)
+    base = BaseSimplex(
+        chol=jnp.asarray(arrays["base_chol"]),
+        diag_g=jnp.asarray(arrays["base_diag_g"]),
+        d0=jnp.asarray(arrays["base_d0"]),
+    )
+    tr = NSimplexTransform(
+        k=int(meta["k"]), metric=meta["metric"],
+        jitter=float(meta["jitter"]), refs=jnp.asarray(arrays["refs"]),
+        base=base,
+    )
+    corpus = (jnp.asarray(arrays["corpus"])
+              if "corpus" in arrays else None)
+    generation = int(meta.get("generation", 0))
+    if pool is not None and meta["index"] != "ivf":
+        raise ValueError(
+            "pool=... serves the IVF tier from a tile-pool snapshot; this "
+            "snapshot holds a flat index")
+    if pool is not None and mesh is not None:
+        raise ValueError("pool=... and mesh are mutually exclusive (the "
+                         "tiered store is single-host)")
+    if meta["index"] == "ivf":
+        from repro.index import IVFZenIndex, ShardedIVFZenIndex
+
+        storage = meta.get("storage", "float32")
+        if pool is not None:
+            from repro.index.ivf import TieredIVFZenIndex
+
+            ivf = TieredIVFZenIndex.load(pool, mmap=mmap,
+                                         **dict(pool_kw or {}))
+            # the server snapshot's wrapper generation is authoritative —
+            # a pool republished out of band must not fork the key space
+            ivf.generation = generation
+        else:
+            members = (arrays["ivf_member_coords"],
+                       arrays["ivf_member_ids"].astype(np.int64),
+                       arrays["ivf_member_assign"].astype(np.int64))
+            scales = arrays.get("ivf_cluster_scales")
+            if mesh is not None:
+                ivf = ShardedIVFZenIndex._from_members(
+                    *members, jnp.asarray(arrays["ivf_centroids"]),
+                    int(meta["n_clusters"]), int(meta["tile_rows"]),
+                    mesh=mesh, storage=storage, scales=scales)
+            else:
+                coords_m, mids, massign = members
+                ivf = IVFZenIndex.from_members(
+                    coords_m, mids, massign,
+                    jnp.asarray(arrays["ivf_centroids"]),
+                    int(meta["n_clusters"]), int(meta["tile_rows"]),
+                    storage=storage, scales=scales,
+                    codebooks=arrays.get("ivf_pq_codebooks"),
+                    generation=generation)
+        index = ZenIndex(transform=tr, coords=None, corpus=corpus,
+                         mesh=mesh, ivf=ivf, storage=storage,
+                         generation=generation)
+    else:
+        coords = jnp.asarray(arrays["coords"])
+        row_ids = jnp.asarray(arrays["row_ids"].astype(np.int32))
+        storage = meta.get("storage", "float32")
+        coord_scales = (jnp.asarray(arrays["coord_scales"])
+                        if "coord_scales" in arrays else None)
+        n_valid = None
+        if mesh is not None:
+            coords, n_valid = retrieval_lib.shard_rows(coords, mesh=mesh)
+            pad = coords.shape[0] - row_ids.shape[0]
+            if pad:  # shard-padding positions map to the dead id
+                row_ids = jnp.concatenate(
+                    [row_ids, jnp.full((pad,), -1, jnp.int32)])
+            if coord_scales is not None:
+                coord_scales, _ = retrieval_lib.shard_rows(
+                    coord_scales, mesh=mesh)
+        index = ZenIndex(transform=tr, coords=coords, corpus=corpus,
+                         mesh=mesh, n_valid=n_valid, row_ids=row_ids,
+                         storage=storage, coord_scales=coord_scales,
+                         generation=generation)
+    return index, dict(meta.get("server", {}))
+
+
 class ZenServer:
     """Batched k-NN serving over a reduced index.
 
@@ -981,13 +1101,20 @@ class ZenServer:
                     else np.asarray(index.coord_scales)
                 arrays["coord_scales"] = scales[live].astype(np.float32)
             meta["storage"] = index.storage
+        # the *wrapper* churn counter is the published generation (set after
+        # the ivf meta merge on purpose: the inner IVF keeps its own counter,
+        # but cache keys — and therefore replica coherence — ride on this
+        # one). Restored servers must not restart it from 0: a replica that
+        # did would collide pre- and post-swap cache keys (launch.replicate).
+        meta["generation"] = int(index.generation)
         if index.corpus is not None:
             arrays["corpus"] = np.asarray(index.corpus)
         return index_io.save_state(
             directory, arrays, meta, kind=SERVER_SNAPSHOT_KIND)
 
     @classmethod
-    def load(cls, directory: str, *, mesh=None, **server_kw) -> "ZenServer":
+    def load(cls, directory: str, *, mesh=None, mmap: bool = False,
+             pool: Optional[str] = None, **server_kw) -> "ZenServer":
         """Restore a server from :meth:`save` — bit-identical search results.
 
         Args:
@@ -996,6 +1123,12 @@ class ZenServer:
                      different device count than the saving process (flat
                      coordinates are re-padded and re-sharded, IVF inverted
                      lists re-packed per shard).
+          mmap:      memory-map the snapshot arrays read-only instead of
+                     materialising host copies (see
+                     :func:`load_index_snapshot`).
+          pool:      optional tile-pool snapshot directory to serve the IVF
+                     tier from (mmap'd tiered store; see
+                     :func:`load_index_snapshot`).
           server_kw: overrides for the saved server config (``mode``,
                      ``rerank_factor``, ``chunk``, ``nprobe``,
                      ``force_kernel``).
@@ -1003,63 +1136,9 @@ class ZenServer:
         Raises ``checkpoint.CheckpointFormatError`` for snapshots written by
         an incompatible format version or of a different kind.
         """
-        arrays, meta = index_io.load_state(
-            directory, expect_kind=SERVER_SNAPSHOT_KIND)
-        base = BaseSimplex(
-            chol=jnp.asarray(arrays["base_chol"]),
-            diag_g=jnp.asarray(arrays["base_diag_g"]),
-            d0=jnp.asarray(arrays["base_d0"]),
-        )
-        tr = NSimplexTransform(
-            k=int(meta["k"]), metric=meta["metric"],
-            jitter=float(meta["jitter"]), refs=jnp.asarray(arrays["refs"]),
-            base=base,
-        )
-        corpus = (jnp.asarray(arrays["corpus"])
-                  if "corpus" in arrays else None)
-        if meta["index"] == "ivf":
-            from repro.index import IVFZenIndex, ShardedIVFZenIndex
-
-            members = (arrays["ivf_member_coords"],
-                       arrays["ivf_member_ids"].astype(np.int64),
-                       arrays["ivf_member_assign"].astype(np.int64))
-            storage = meta.get("storage", "float32")
-            scales = arrays.get("ivf_cluster_scales")
-            if mesh is not None:
-                ivf = ShardedIVFZenIndex._from_members(
-                    *members, jnp.asarray(arrays["ivf_centroids"]),
-                    int(meta["n_clusters"]), int(meta["tile_rows"]),
-                    mesh=mesh, storage=storage, scales=scales)
-            else:
-                coords_m, mids, massign = members
-                ivf = IVFZenIndex.from_members(
-                    coords_m, mids, massign,
-                    jnp.asarray(arrays["ivf_centroids"]),
-                    int(meta["n_clusters"]), int(meta["tile_rows"]),
-                    storage=storage, scales=scales,
-                    codebooks=arrays.get("ivf_pq_codebooks"))
-            index = ZenIndex(transform=tr, coords=None, corpus=corpus,
-                             mesh=mesh, ivf=ivf, storage=storage)
-        else:
-            coords = jnp.asarray(arrays["coords"])
-            row_ids = jnp.asarray(arrays["row_ids"].astype(np.int32))
-            storage = meta.get("storage", "float32")
-            coord_scales = (jnp.asarray(arrays["coord_scales"])
-                            if "coord_scales" in arrays else None)
-            n_valid = None
-            if mesh is not None:
-                coords, n_valid = retrieval_lib.shard_rows(coords, mesh=mesh)
-                pad = coords.shape[0] - row_ids.shape[0]
-                if pad:  # shard-padding positions map to the dead id
-                    row_ids = jnp.concatenate(
-                        [row_ids, jnp.full((pad,), -1, jnp.int32)])
-                if coord_scales is not None:
-                    coord_scales, _ = retrieval_lib.shard_rows(
-                        coord_scales, mesh=mesh)
-            index = ZenIndex(transform=tr, coords=coords, corpus=corpus,
-                             mesh=mesh, n_valid=n_valid, row_ids=row_ids,
-                             storage=storage, coord_scales=coord_scales)
-        kw = dict(meta.get("server", {}))
+        index, saved_kw = load_index_snapshot(
+            directory, mesh=mesh, mmap=mmap, pool=pool)
+        kw = dict(saved_kw)
         kw.update(server_kw)
         return cls(index, **kw)
 

@@ -16,13 +16,20 @@ IVF-probe kernels. This package sits between callers and the index:
     invalidates every stale entry.
   * ``stats.FrontendStats`` carries the SLO instrumentation: p50/p95/p99
     latency, batch occupancy, cache hit rate, dispatch-shape (compile)
-    count, and reject-on-full backpressure counters.
+    count, reject-on-full backpressure counters, and replica hot-swap
+    accounting.
+  * ``loadgen.run_open_loop`` measures all of it under *offered* load:
+    Poisson arrivals at a configured QPS (open-loop — no coordinated
+    omission), latency-vs-offered-load curves, p99 under overload with
+    the backpressure shedding, single servers or replica fleets
+    (``launch.replicate``) round-robin.
 
 ``launch.serve.ZenServer(frontend=True)`` wires the three together; the
 scheduler takes an injectable clock/ticker so tests drive it step by step
 with no real threads sleeping (``tests/test_frontend.py``).
 """
 from .cache import LRUCache, query_fingerprint
+from .loadgen import OpenLoopReport, poisson_arrivals, run_open_loop
 from .scheduler import (
     DEFAULT_NEIGHBOR_MENU,
     FrontendOverloadError,
@@ -39,8 +46,11 @@ __all__ = [
     "FrontendStats",
     "LRUCache",
     "MicroBatchScheduler",
+    "OpenLoopReport",
     "QueryHandle",
     "bucket_neighbors",
     "bucket_q",
+    "poisson_arrivals",
     "query_fingerprint",
+    "run_open_loop",
 ]

@@ -64,6 +64,7 @@ class LRUCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.stale_evictions = 0  # dropped by evict_stale (generation swap)
 
     def __len__(self) -> int:
         return len(self._data)
@@ -93,12 +94,31 @@ class LRUCache:
             self.evictions += 1
         self._data[key] = value
 
+    def evict_stale(self, generation: int) -> int:
+        """Drop entries keyed on any generation other than ``generation``.
+
+        Correctness never needs this — a key embeds its generation, so a
+        stale entry can no longer be *looked up* after churn or a replica
+        hot-swap. But the dead entries still occupy LRU capacity and would
+        evict live ones; a replica calls this right after swapping to a
+        freshly published generation (``MicroBatchScheduler.on_index_swap``)
+        so the cache restarts the new generation at full capacity. Returns
+        the number of entries dropped (also counted in ``stale_evictions``).
+        """
+        stale = [k for k in self._data
+                 if isinstance(k, tuple) and k and k[-1] != generation]
+        for k in stale:
+            del self._data[k]
+        self.stale_evictions += len(stale)
+        return len(stale)
+
     def clear(self) -> None:
         """Drop every entry and restart the hit/miss accounting."""
         self._data.clear()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.stale_evictions = 0
 
     @property
     def hit_rate(self) -> float:
@@ -112,5 +132,6 @@ class LRUCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "stale_evictions": self.stale_evictions,
             "hit_rate": round(self.hit_rate, 4),
         }

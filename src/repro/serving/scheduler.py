@@ -277,6 +277,22 @@ class MicroBatchScheduler:
         with self._lock:
             return len(self._pending)
 
+    def on_index_swap(self, generation: int) -> None:
+        """Absorb a replica hot-swap to published ``generation``.
+
+        Correctness needs nothing here — every cache key embeds its
+        generation, so entries written against the pre-swap index can no
+        longer be looked up the moment ``server.index`` points at the new
+        snapshot. This hook is the bookkeeping that rides along: count the
+        swap in :class:`FrontendStats` and drop the now-unreachable stale
+        entries so they stop occupying LRU capacity
+        (``LRUCache.evict_stale``). Called by ``launch.replicate``'s
+        ``QueryReplica`` after each swap.
+        """
+        with self._lock:
+            self.stats.record_swap(generation)
+            self.cache.evict_stale(generation)
+
     # -- dispatch ------------------------------------------------------------
     def tick(self) -> int:
         """Drain the queue: coalesce, pad, dispatch. Returns dispatch count.

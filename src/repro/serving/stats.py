@@ -42,6 +42,8 @@ class FrontendStats:
         self.dispatched_rows = 0  # real rows across all dispatches
         self.padded_rows = 0      # padded (bucketed) rows across dispatches
         self.ticks = 0
+        self.swaps = 0            # replica hot-swaps absorbed (replication)
+        self.serving_generation = None  # generation after the last swap
         self.dispatch_shapes: set = set()  # distinct (Qp, w, n_bucket)
         self._latency_s: Deque[float] = deque(maxlen=window)
 
@@ -62,6 +64,11 @@ class FrontendStats:
 
     def record_tick(self) -> None:
         self.ticks += 1
+
+    def record_swap(self, generation: int) -> None:
+        """One replica hot-swap to a newly published index generation."""
+        self.swaps += 1
+        self.serving_generation = int(generation)
 
     def record_dispatch(
         self, shape: Tuple[int, int, int], real_rows: int, padded_rows: int
@@ -126,6 +133,9 @@ class FrontendStats:
             "cache_hit_rate": round(self.cache_hit_rate, 4),
             "compile_count": self.compile_count,
         }
+        if self.swaps:
+            out["swaps"] = self.swaps
+            out["serving_generation"] = self.serving_generation
         if self._latency_s:
             out.update(self.latency_percentiles())
         return out

@@ -5,7 +5,9 @@
 top-k ids *and* distances of every major retrieval configuration — flat
 f32, IVF at ``nprobe = n_clusters`` (exact) and at a partial probe, int8
 and product-quantised (pq) storage, exact re-rank, the jsd/qform
-non-Euclidean paths, and the pivot ids every ``core.pivots`` strategy
+non-Euclidean paths, a replica served through a publish -> churn ->
+hot-swap cycle (mmap'd, ``launch.replicate``), and the pivot ids every
+``core.pivots`` strategy
 selects over the fixed-seed corpus. Any PR
 that shifts these bits — a kernel rewrite, an estimator reorder, a
 quantisation change — fails here instead of drifting silently; an
@@ -60,7 +62,7 @@ def test_golden_file_is_complete(golden, tool):
 @pytest.mark.parametrize("name", [
     "flat_zen", "flat_lwb", "ivf_exact", "ivf_probe4", "flat_int8",
     "ivf_int8", "flat_rerank", "flat_jsd", "ivf_qform", "ivf_pq",
-    "ivf_pq_rerank",
+    "ivf_pq_rerank", "ivf_replica_served",
 ])
 def test_case_matches_golden(golden, tool, name):
     """Re-running a pinned configuration reproduces the committed bits."""

@@ -1,0 +1,586 @@
+"""Deterministic simulation suite for the replicated serving tier.
+
+Contract under test (``repro.launch.replicate``): a leader churns and
+publishes atomic generation-tagged snapshots; replicas hot-swap to them
+without dropping in-flight queries and serve **bit-identical** results to
+a direct leader query at the replica's currently-loaded generation — never
+a generation they have not fully swapped to. Everything here is driven
+step by step (fake clocks, explicit poll/publish interleavings, a
+hypothesis property over random schedules with a fixed-seed fallback); no
+real threads sleep and no timing is load-bearing except in the one
+explicit in-flight pinning test, which blocks on events, not time.
+"""
+import json
+import os
+import shutil
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: fixed-seed replay keeps the suite green
+    from _hypothesis_fallback import given, settings, st
+
+from repro.checkpoint.index_io import CheckpointFormatError
+from repro.data import synthetic as syn
+from repro.distributed.fault import ReplicaTracker
+from repro.launch.replicate import (
+    PUBLISH_POINTER,
+    IndexLeader,
+    LeaderHandedOff,
+    QueryReplica,
+    ReplicaNotReady,
+    read_pointer,
+)
+from repro.launch.serve import ZenServer, build_index
+from repro.serving import LRUCache, run_open_loop
+from repro.serving.cache import result_key
+from repro.serving.loadgen import poisson_arrivals
+
+N, DIM, K = 400, 24, 8
+N_CLUSTERS = 12
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _x32():
+    """Replication serves the stack's default f32 numerics; pin x64 off
+    (sibling modules flip it at import time)."""
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    yield
+    jax.config.update("jax_enable_x64", prev)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return syn.manifold_space(jax.random.PRNGKey(0), N, DIM, 6)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return np.asarray(
+        syn.manifold_space(jax.random.PRNGKey(1), 12, DIM, 6), np.float32)
+
+
+@pytest.fixture(scope="module")
+def base_index(corpus):
+    return {
+        "flat": build_index(corpus, K, index="flat"),
+        "ivf": build_index(corpus, K, index="ivf", n_clusters=N_CLUSTERS),
+    }
+
+
+def _fresh_vectors(seed, count):
+    return np.asarray(
+        syn.manifold_space(jax.random.PRNGKey(seed), count, DIM, 6),
+        np.float32)
+
+
+def _rows_equal(a, b):
+    return (np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+            and np.array_equal(np.asarray(a[1]), np.asarray(b[1])))
+
+
+# -- publish pointer protocol --------------------------------------------------
+
+
+def test_pointer_absent_before_first_publish(tmp_path, base_index):
+    root = str(tmp_path / "pub")
+    assert read_pointer(root) is None
+    rep = QueryReplica(root)
+    assert rep.poll() is False
+    with pytest.raises(ReplicaNotReady):
+        rep.query(np.zeros((1, DIM), np.float32))
+
+
+def test_publish_writes_generation_tagged_snapshot(tmp_path, base_index):
+    leader = IndexLeader(ZenServer(base_index["flat"]), str(tmp_path))
+    pub = leader.publish()
+    assert pub.generation == 0
+    assert os.path.basename(pub.snapshot) == "gen-000000000000"
+    got = read_pointer(str(tmp_path))
+    assert got == pub
+    # republish of the same generation is idempotent
+    assert leader.publish() == pub
+
+
+def test_unknown_pointer_format_is_rejected_loudly(tmp_path):
+    os.makedirs(tmp_path, exist_ok=True)
+    with open(tmp_path / PUBLISH_POINTER, "w") as f:
+        json.dump({"format": "someone-elses", "version": 9,
+                   "generation": 3, "snapshot": "x"}, f)
+    with pytest.raises(CheckpointFormatError):
+        read_pointer(str(tmp_path))
+    # a replica survives it: counted, not raised
+    rep = QueryReplica(str(tmp_path))
+    assert rep.poll() is False
+    assert rep.poll_errors == 1
+
+
+def test_publish_prunes_old_generations_but_never_current(
+        tmp_path, base_index):
+    leader = IndexLeader(ZenServer(base_index["flat"]), str(tmp_path),
+                         keep=2)
+    leader.publish()
+    for seed in (10, 11, 12):
+        leader.upsert([N + seed], _fresh_vectors(seed, 1))
+        leader.publish()
+    gens = sorted(d for d in os.listdir(tmp_path) if d.startswith("gen-")
+                  and not d.endswith(".pool"))
+    assert len(gens) == 2
+    ptr = read_pointer(str(tmp_path))
+    assert os.path.basename(ptr.snapshot) == gens[-1]
+
+
+# -- hot-swap bit parity -------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf"])
+@pytest.mark.parametrize("mmap", [False, True])
+def test_replica_serves_bit_identical_to_leader(tmp_path, base_index,
+                                                queries, kind, mmap):
+    leader_srv = ZenServer(base_index[kind], nprobe=6, rerank_factor=2)
+    leader = IndexLeader(leader_srv, str(tmp_path))
+    leader.publish()
+    rep = QueryReplica(str(tmp_path), mmap=mmap)
+    assert rep.poll() is True
+    assert rep.generation == 0
+    assert _rows_equal(rep.query(queries, 5),
+                       leader_srv.query(queries, 5, direct=True))
+
+
+def test_churn_publish_swap_loop_zero_errors_bit_parity(
+        tmp_path, base_index, queries):
+    """The acceptance loop: churn -> publish -> swap -> query, many rounds,
+    zero replica errors, every response bit-equal to the leader."""
+    leader_srv = ZenServer(base_index["ivf"], nprobe=N_CLUSTERS)
+    leader = IndexLeader(leader_srv, str(tmp_path), keep=3)
+    leader.publish()
+    rep = QueryReplica(str(tmp_path), mmap=True, frontend=True,
+                       cache_size=64)
+    assert rep.poll()
+    for round_ in range(5):
+        ids = [N + 10 * round_ + j for j in range(3)]
+        leader.upsert(ids, _fresh_vectors(100 + round_, 3))
+        leader.delete([round_, round_ + 20])
+        leader.publish()
+        assert rep.poll() is True
+        assert rep.generation == leader.generation
+        assert _rows_equal(rep.query(queries, 7),
+                           leader_srv.query(queries, 7, direct=True))
+    assert rep.poll_errors == 0
+    assert rep.swaps == 6
+    st_ = rep.stats()["server"]["frontend"]
+    assert st_["failures"] == 0 and st_["swaps"] == 6
+
+
+def test_replica_never_serves_an_unswapped_generation(
+        tmp_path, base_index, queries):
+    """Between a publish and the replica's poll, the replica must keep
+    answering from its *currently loaded* generation — the new one becomes
+    observable only through the swap."""
+    leader_srv = ZenServer(base_index["flat"])
+    leader = IndexLeader(leader_srv, str(tmp_path), keep=4)
+    leader.publish()
+    rep = QueryReplica(str(tmp_path))
+    rep.poll()
+    oracle_g0 = ZenServer.load(read_pointer(str(tmp_path)).snapshot)
+    # leader moves two generations ahead; replica has not polled
+    leader.delete([0, 1, 2, 3])
+    leader.publish()
+    leader.upsert([N + 1], _fresh_vectors(3, 1))
+    leader.publish()
+    assert rep.generation == 0
+    assert _rows_equal(rep.query(queries, 6),
+                       oracle_g0.query(queries, 6, direct=True))
+    # after the swap — and only then — the replica serves the new state
+    assert rep.poll() is True
+    assert rep.generation == leader.generation
+    assert _rows_equal(rep.query(queries, 6),
+                       leader_srv.query(queries, 6, direct=True))
+
+
+def test_swap_does_not_drop_in_flight_queries(tmp_path, base_index, queries):
+    """A query in flight across a hot-swap resolves normally and keeps its
+    generation pinned until it resolves (event-gated, no timing)."""
+    leader_srv = ZenServer(base_index["flat"])
+    leader = IndexLeader(leader_srv, str(tmp_path), keep=4)
+    leader.publish()
+    rep = QueryReplica(str(tmp_path), mmap=True)
+    rep.poll()
+    entered, release = threading.Event(), threading.Event()
+    orig = rep.server._query_block
+
+    def gated(*args, **kw):
+        entered.set()
+        assert release.wait(10), "test deadlock"
+        return orig(*args, **kw)
+
+    rep.server._query_block = gated
+    out = []
+    t = threading.Thread(
+        target=lambda: out.append(rep.query(queries, 5, direct=True)))
+    t.start()
+    assert entered.wait(10)
+    # swap under the in-flight query
+    leader.upsert([N + 7], _fresh_vectors(9, 1))
+    leader.publish()
+    assert rep.poll() is True
+    assert rep.pinned_generations() == (0, leader.generation)
+    assert rep.released_generations() == ()
+    release.set()
+    t.join(10)
+    assert out, "in-flight query was dropped by the swap"
+    # the pin dropped with the last in-flight query; gen 0 is released
+    assert rep.pinned_generations() == (leader.generation,)
+    assert rep.released_generations() == (0,)
+    rep.server._query_block = orig
+    # the resolved result is a real served answer (some fully-swapped
+    # generation — here the post-swap one, since the block re-reads index)
+    assert _rows_equal(out[0], leader_srv.query(queries, 5, direct=True))
+
+
+# -- generation as the coherence key (satellite: cache-key fix) ---------------
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf"])
+def test_loaded_snapshot_preserves_published_generation(
+        tmp_path, base_index, kind):
+    """Regression: ``ZenServer.load`` used to rebuild the index with a
+    fresh ``generation=0`` regardless of the published counter, so a
+    replica's cache keys collided with pre-publish entries. The restored
+    index must serve under the *published* generation."""
+    srv = ZenServer(base_index[kind])
+    srv.upsert([N + 1, N + 2], _fresh_vectors(21, 2))
+    srv.delete([N + 1])
+    assert srv.index.generation == 2
+    path = str(tmp_path / "snap")
+    srv.save(path)
+    restored = ZenServer.load(path)
+    assert restored.index.generation == 2
+    if kind == "ivf":
+        assert restored.index.ivf.generation == 2
+
+
+def test_pre_swap_cache_entry_is_unreachable_after_hot_swap(
+        tmp_path, base_index, queries):
+    """The replica's cache keys on the published generation: an entry
+    cached at generation g must never answer a query once the replica has
+    swapped to g' > g — even for the exact same query bytes."""
+    leader_srv = ZenServer(base_index["flat"])
+    leader = IndexLeader(leader_srv, str(tmp_path), keep=4)
+    leader.publish()
+    rep = QueryReplica(str(tmp_path), frontend=True, cache_size=128)
+    rep.poll()
+    d_old, ids_old = rep.query(queries, 5)
+    cache = rep.server.frontend.cache
+    assert cache.misses > 0 and len(cache) > 0
+    # delete the current top-1 of the first query: its answer must change
+    victim = int(np.asarray(ids_old)[0, 0])
+    leader.delete([victim])
+    leader.publish()
+    assert rep.poll()
+    # stale entries were evicted outright (capacity hygiene)...
+    assert cache.stale_evictions > 0 and len(cache) == 0
+    d_new, ids_new = rep.query(queries, 5)
+    # ...and the answer is the new generation's, not the cached one
+    assert victim not in np.asarray(ids_new)[0]
+    assert _rows_equal((d_new, ids_new),
+                       leader_srv.query(queries, 5, direct=True))
+
+
+def test_lru_evict_stale_drops_only_other_generations():
+    cache = LRUCache(8)
+    k0 = result_key(b"q", "zen", 16, 8, 4, 0, 0)
+    k1 = result_key(b"q", "zen", 16, 8, 4, 0, 1)
+    cache.put(k0, "old")
+    cache.put(k1, "new")
+    assert cache.evict_stale(1) == 1
+    assert cache.get(k1) == "new" and cache.get(k0) is None
+    assert cache.stale_evictions == 1
+
+
+# -- fault injection -----------------------------------------------------------
+
+
+def test_leader_killed_mid_publish_leaves_only_loadable_snapshots(
+        tmp_path, base_index, queries):
+    """Crash windows of the publish sequence: whatever survives on disk,
+    the pointer aims at a complete snapshot and the replica never loads a
+    torn one."""
+    leader_srv = ZenServer(base_index["flat"])
+    leader = IndexLeader(leader_srv, str(tmp_path), keep=4)
+    leader.publish()
+    rep = QueryReplica(str(tmp_path))
+    rep.poll()
+    oracle_g0 = ZenServer.load(read_pointer(str(tmp_path)).snapshot)
+
+    # window 1: killed while writing the snapshot — a tmp.* sibling
+    # exists, the pointer still aims at gen 0
+    torn = tmp_path / "tmp.gen-000000000099"
+    os.makedirs(torn)
+    (torn / "refs.npy").write_bytes(b"partial garbage")
+    assert rep.poll() is False
+    assert rep.generation == 0 and rep.poll_errors == 0
+
+    # window 2: snapshot dir complete but killed before the pointer moved
+    leader.upsert([N + 5], _fresh_vectors(5, 1))
+    snap = str(tmp_path / "gen-000000000001")
+    leader_srv.save(snap)  # the dir publish, without the pointer
+    assert rep.poll() is False
+    assert rep.generation == 0
+    assert _rows_equal(rep.query(queries, 5),
+                       oracle_g0.query(queries, 5, direct=True))
+
+    # recovery: the restarted leader republishes — pointer moves, swap runs
+    leader.publish()
+    assert rep.poll() is True
+    assert rep.generation == leader.generation
+    assert _rows_equal(rep.query(queries, 5),
+                       leader_srv.query(queries, 5, direct=True))
+
+
+def test_pointer_to_vanished_snapshot_keeps_replica_serving(
+        tmp_path, base_index, queries):
+    leader_srv = ZenServer(base_index["flat"])
+    leader = IndexLeader(leader_srv, str(tmp_path), keep=4)
+    leader.publish()
+    rep = QueryReplica(str(tmp_path))
+    rep.poll()
+    leader.upsert([N + 9], _fresh_vectors(8, 1))
+    pub = leader.publish()
+    shutil.rmtree(pub.snapshot)  # pruned/vanished under the pointer
+    assert rep.poll() is False
+    assert rep.poll_errors == 1 and rep.generation == 0
+    d, ids = rep.query(queries, 5)  # still serving, just lagged
+    assert np.asarray(ids).shape == (len(queries), 5)
+
+
+def test_lagging_replica_and_tracker_verdicts(tmp_path, base_index):
+    clock = FakeClock()
+    leader = IndexLeader(ZenServer(base_index["flat"]), str(tmp_path),
+                         keep=4)
+    tracker = leader.track_replicas(deadline_s=10.0, clock=clock)
+    assert isinstance(tracker, ReplicaTracker)
+    leader.publish()
+    rep_a = QueryReplica(str(tmp_path), name="a")
+    rep_b = QueryReplica(str(tmp_path), name="b")
+    rep_a.poll(), rep_b.poll()
+    for r in (rep_a, rep_b):
+        leader.replica_report(r.name, r.generation)
+    assert leader.fleet_status()["lagging"] == []
+    # publish a new generation; only a polls
+    leader.delete([0])
+    leader.publish()
+    rep_a.poll()
+    leader.replica_report("a", rep_a.generation)
+    leader.replica_report("b", rep_b.generation)
+    status = leader.fleet_status()
+    assert status["lagging"] == ["b"]
+    assert not tracker.coherent(leader.generation)
+    # b goes silent past the deadline: dead, no longer counted as lagging
+    clock.advance(11.0)
+    leader.replica_report("a", rep_a.generation)
+    status = leader.fleet_status()
+    assert status["dead"] == ["b"] and status["lagging"] == []
+    assert tracker.coherent(leader.generation)
+
+
+def test_preemption_guard_hands_off_cleanly(tmp_path, base_index, queries):
+    leader_srv = ZenServer(base_index["flat"])
+    leader = IndexLeader(leader_srv, str(tmp_path), keep=4)
+    leader.enable_preemption()
+    leader.publish()
+    rep = QueryReplica(str(tmp_path))
+    rep.poll()
+    leader.upsert([N + 3], _fresh_vectors(4, 1))
+    assert leader.maybe_handoff() is False  # no preemption notice yet
+    leader.preemption.request()             # platform announces preemption
+    assert leader.maybe_handoff() is True
+    assert leader.handed_off
+    with pytest.raises(LeaderHandedOff):
+        leader.upsert([N + 4], _fresh_vectors(5, 1))
+    # the fleet swaps to the handoff snapshot...
+    assert rep.poll() is True
+    assert rep.generation == leader.generation
+    assert _rows_equal(rep.query(queries, 5),
+                       leader_srv.query(queries, 5, direct=True))
+    # ...and a successor resumes churn from the published counter
+    successor = IndexLeader(
+        ZenServer.load(read_pointer(str(tmp_path)).snapshot),
+        str(tmp_path), keep=4)
+    assert successor.generation == leader.generation
+    successor.upsert([N + 4], _fresh_vectors(5, 1))
+    successor.publish()
+    assert rep.poll() is True
+    assert rep.generation == successor.generation
+
+
+# -- property: random interleavings match a per-generation oracle -------------
+
+_PROP_STATE = {}
+
+
+def _prop_index(kind):
+    if kind not in _PROP_STATE:
+        corpus = syn.manifold_space(jax.random.PRNGKey(5), 300, 16, 4)
+        _PROP_STATE[kind] = build_index(
+            corpus, 6, index=kind, n_clusters=10 if kind == "ivf" else None)
+    return _PROP_STATE[kind]
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_random_replication_schedule_matches_oracle(seed):
+    """Any interleaving of churn, publish, per-replica poll and query:
+    every replica response bit-equals a direct query against an oracle
+    server loaded from the snapshot of the replica's *current* generation.
+
+    (No pytest fixtures here: the hypothesis fallback shim replays a
+    zero-argument wrapper, so the temp dir is managed by hand.)
+    """
+    rng = np.random.default_rng(seed)
+    kind = "ivf" if seed % 2 else "flat"
+    root = tempfile.mkdtemp(prefix="zen-repl-prop-")
+    try:
+        leader_srv = ZenServer(_prop_index(kind), nprobe=10)
+        leader = IndexLeader(leader_srv, root, keep=50)  # no pruning mid-run
+        leader.publish()
+        oracles = {0: ZenServer.load(read_pointer(root).snapshot, nprobe=10)}
+        reps = [QueryReplica(root, name=f"r{i}", mmap=bool(rng.integers(2)),
+                             frontend=True,
+                             cache_size=int(rng.integers(0, 33)))
+                for i in range(2)]
+        for r in reps:
+            r.poll()
+        qpool = rng.normal(size=(8, 16)).astype(np.float32)
+        next_id = 10_000
+        for _ in range(int(rng.integers(10, 24))):
+            op = rng.choice(["churn", "publish", "poll", "query", "query"])
+            if op == "churn":
+                if rng.integers(2):
+                    leader.upsert(
+                        [next_id],
+                        rng.normal(size=(1, 16)).astype(np.float32))
+                    next_id += 1
+                else:
+                    leader.delete([int(rng.integers(0, 300))])
+            elif op == "publish":
+                pub = leader.publish()
+                if pub.generation not in oracles:
+                    oracles[pub.generation] = ZenServer.load(pub.snapshot,
+                                                             nprobe=10)
+            elif op == "poll":
+                reps[int(rng.integers(2))].poll()
+            else:
+                rep = reps[int(rng.integers(2))]
+                q = qpool[rng.integers(0, len(qpool))][None]
+                nn = int(rng.integers(1, 8))
+                got = rep.query(q, nn)
+                want = oracles[rep.generation].query(q, nn, direct=True)
+                assert _rows_equal(got, want), (
+                    f"replica {rep.name} diverged from its generation "
+                    f"{rep.generation} oracle (seed {seed})")
+        for rep in reps:
+            assert rep.poll_errors == 0
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# -- open-loop load generator (deterministic, fake clock) ---------------------
+
+
+def test_poisson_arrivals_fixed_seed_and_rate():
+    a = poisson_arrivals(200.0, 5.0, seed=3)
+    b = poisson_arrivals(200.0, 5.0, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert (a >= 0).all() and (a < 5.0).all()
+    assert np.all(np.diff(a) >= 0)
+    assert a.size == pytest.approx(1000, rel=0.25)
+    other = poisson_arrivals(200.0, 5.0, seed=4)
+    assert other.size != a.size or not np.array_equal(other, a)
+
+
+def test_open_loop_under_capacity_completes_everything(base_index, queries):
+    clock = FakeClock()
+    server = ZenServer(base_index["flat"], frontend=True, max_batch=16,
+                       queue_limit=256, tick_interval=0.01, clock=clock)
+    report = run_open_loop(server, queries, offered_qps=100.0,
+                           duration_s=0.5, n_neighbors=5, seed=1,
+                           clock=clock, sleep=clock.advance)
+    assert report.rejected == 0 and report.failures == 0
+    assert report.timeouts == 0
+    assert report.completed == report.submitted > 0
+    assert report.p99_ms == report.p99_ms  # not NaN
+    # identical schedule + fake clock => bit-identical report
+    clock2 = FakeClock()
+    server2 = ZenServer(base_index["flat"], frontend=True, max_batch=16,
+                        queue_limit=256, tick_interval=0.01, clock=clock2)
+    report2 = run_open_loop(server2, queries, offered_qps=100.0,
+                            duration_s=0.5, n_neighbors=5, seed=1,
+                            clock=clock2, sleep=clock2.advance)
+    assert report2 == report
+
+
+def test_open_loop_overload_sheds_load_and_keeps_latency_bounded(
+        base_index, queries):
+    """Past the admission budget (max_batch per tick), reject-on-full
+    sheds the excess; accepted requests still resolve promptly."""
+    clock = FakeClock()
+    server = ZenServer(base_index["flat"], frontend=True, max_batch=8,
+                       queue_limit=8, tick_interval=0.01, clock=clock)
+    # budget = 8 rows / 10ms = 800 qps; offer 4x that
+    report = run_open_loop(server, queries, offered_qps=3200.0,
+                           duration_s=0.25, n_neighbors=5, seed=2,
+                           clock=clock, sleep=clock.advance)
+    assert report.rejected > 0, "overload never tripped backpressure"
+    assert report.completed > 0 and report.timeouts == 0
+    assert report.achieved_qps < report.offered_qps
+    # accepted work waits at most ~queue_limit/budget: well under a second
+    assert report.p99_ms < 100.0
+
+
+def test_open_loop_replica_fleet_scales_admission_budget(
+        tmp_path, base_index, queries):
+    """R replicas have R× the per-replica admission budget: at an offered
+    rate that saturates one replica, the fleet's completed goodput scales
+    with R (driven round-robin on one fake clock)."""
+    leader = IndexLeader(ZenServer(base_index["ivf"], nprobe=6),
+                         str(tmp_path))
+    leader.publish()
+
+    def fleet(n, clock):
+        reps = [QueryReplica(str(tmp_path), name=f"r{i}", frontend=True,
+                             max_batch=8, queue_limit=8, tick_interval=0.01,
+                             cache_size=0, clock=clock, nprobe=6)
+                for i in range(n)]
+        for r in reps:
+            assert r.poll()
+        return [r.server for r in reps]
+
+    results = {}
+    for n in (1, 3):
+        clock = FakeClock()
+        servers = fleet(n, clock)
+        report = run_open_loop(servers, queries, offered_qps=2400.0,
+                               duration_s=0.25, n_neighbors=5, seed=4,
+                               clock=clock, sleep=clock.advance)
+        assert report.timeouts == 0 and report.failures == 0
+        results[n] = report.completed
+    assert results[3] >= 2 * results[1], results

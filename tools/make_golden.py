@@ -81,6 +81,14 @@ CASES = {
                    storage="pq", pq_m=2, nprobe=N_CLUSTERS),
     "ivf_pq_rerank": dict(space="euclid", metric="euclidean", index="ivf",
                           storage="pq", pq_m=2, nprobe=4, rerank_factor=4),
+    # replica-served (repro.launch.replicate): the leader publishes,
+    # churns (3 deletes + 3 upserts), republishes; the pinned bits are
+    # what a hot-swapped **mmap'd replica** serves at the published
+    # generation — with leader parity asserted in-case, this pins the
+    # whole publish -> hot-swap -> serve path, not just the maths.
+    "ivf_replica_served": dict(space="euclid", metric="euclidean",
+                               index="ivf", nprobe=N_CLUSTERS,
+                               replica=True),
 }
 
 #: pivot-selection golden: chosen pivot row ids per strategy over the
@@ -135,6 +143,7 @@ def run_case(name: str, arrays: Dict[str, np.ndarray]):
 def _run_case_x32(name: str, arrays: Dict[str, np.ndarray]):
     cfg = dict(CASES[name])
     space = cfg.pop("space")
+    replica = cfg.pop("replica", False)
     corpus = np.asarray(arrays[f"corpus_{space}"])
     queries = np.asarray(arrays[f"queries_{space}"])
     build_kw = dict(
@@ -147,8 +156,42 @@ def _run_case_x32(name: str, arrays: Dict[str, np.ndarray]):
         build_kw["n_clusters"] = N_CLUSTERS
     index = build_index(jax.numpy.asarray(corpus), K, **build_kw)
     server = ZenServer(index, **cfg)
+    if replica:
+        return _replica_serve_x32(server, queries)
     d, ids = server.query(jax.numpy.asarray(queries), NN)
     return np.asarray(d, np.float32), np.asarray(ids, np.int32)
+
+
+def _replica_serve_x32(server: ZenServer, queries: np.ndarray):
+    """Leader publish -> churn -> republish -> replica mmap hot-swap -> query.
+
+    The returned bits come from the *replica*; leader parity is asserted
+    here so a regenerated golden can never silently pin a divergence
+    between the two serving paths.
+    """
+    import tempfile
+
+    from repro.launch.replicate import IndexLeader, QueryReplica
+
+    with tempfile.TemporaryDirectory(prefix="zen-golden-replica-") as root:
+        leader = IndexLeader(server, root, keep=4)
+        leader.publish()
+        rep = QueryReplica(root, mmap=True)
+        assert rep.poll() and rep.generation == 0
+        leader.delete([3, 4, 5])                       # generation 1
+        fresh = np.asarray(
+            syn.manifold_space(jax.random.PRNGKey(4242), 3, DIM, DIM // 4),
+            np.float32)
+        leader.upsert([N + 1, N + 2, N + 3], fresh)    # generation 2
+        leader.publish()
+        assert rep.poll() and rep.generation == leader.generation == 2
+        d, ids = rep.query(queries, NN)
+        d_leader, ids_leader = server.query(queries, NN, direct=True)
+        if not (np.array_equal(np.asarray(d), np.asarray(d_leader))
+                and np.array_equal(np.asarray(ids), np.asarray(ids_leader))):
+            raise AssertionError(
+                "replica-served golden diverged from the leader")
+        return np.asarray(d, np.float32), np.asarray(ids, np.int32)
 
 
 def build_golden() -> Dict[str, np.ndarray]:
