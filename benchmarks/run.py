@@ -20,12 +20,20 @@ EXPERIMENTS.md documents the mapping to the paper's full-size runs.
 from __future__ import annotations
 
 import os
+import sys
 import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+# ``python benchmarks/run.py`` puts benchmarks/ (not the repo root) on
+# sys.path, which silently breaks every ``from benchmarks.X import ...``
+# inside the workload bodies; anchor the repo root explicitly
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO_ROOT not in sys.path:
+    sys.path.insert(0, _REPO_ROOT)
 
 
 def _timeit(fn, *args, repeat: int = 3, number: int = 1) -> float:
@@ -51,9 +59,11 @@ def _row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
-def bench_euclidean_spaces() -> None:
+def bench_euclidean_spaces(smoke: bool = False) -> None:
     from benchmarks.paper_quality import euclidean_comparison
 
+    # the 500d case reduces to k=400: the witness must stay >= max k
+    n_witness, n_eval = (500, 80) if smoke else (1000, 220)
     for name, space, m, ks in [
         ("euclid_uniform_100", "uniform", 100, (80, 10)),
         ("euclid_uniform_500", "uniform", 500, (400, 20)),
@@ -62,8 +72,8 @@ def bench_euclidean_spaces() -> None:
     ]:
         for k in ks:
             t0 = time.perf_counter()
-            res = euclidean_comparison(space, n_witness=1000, n_eval=220,
-                                       m=m, k=k)
+            res = euclidean_comparison(space, n_witness=n_witness,
+                                       n_eval=n_eval, m=m, k=k)
             dt = (time.perf_counter() - t0) * 1e6
             derived = ";".join(
                 f"{tr}_kruskal={res[tr]['kruskal']:.4f}" for tr in
@@ -72,15 +82,16 @@ def bench_euclidean_spaces() -> None:
             _row(f"{name}_k{k}", dt, derived)
 
 
-def bench_jsd_spaces() -> None:
+def bench_jsd_spaces(smoke: bool = False) -> None:
     from benchmarks.paper_quality import jsd_comparison
 
+    n_eval = 80 if smoke else 200
     for name, m, k, manifold in [
         ("jsd_generated_100", 100, 20, False),
         ("jsd_gistlike_480", 480, 24, True),
     ]:
         t0 = time.perf_counter()
-        res = jsd_comparison(n_eval=200, m=m, k=k, real_manifold=manifold)
+        res = jsd_comparison(n_eval=n_eval, m=m, k=k, real_manifold=manifold)
         dt = (time.perf_counter() - t0) * 1e6
         _row(name, dt,
              f"zen_kruskal={res['zen']['kruskal']:.4f};"
@@ -89,22 +100,24 @@ def bench_jsd_spaces() -> None:
              f"lmds_rho={res['lmds']['spearman']:.4f}")
 
 
-def bench_recall() -> None:
+def bench_recall(smoke: bool = False) -> None:
     from benchmarks.paper_quality import recall_comparison
 
+    n_corpus, n_queries = (2000, 10) if smoke else (20000, 20)
     t0 = time.perf_counter()
-    res = recall_comparison(n_corpus=20000, n_queries=20, m=256, k=16,
-                            n_nn=100)
+    res = recall_comparison(n_corpus=n_corpus, n_queries=n_queries,
+                            m=256, k=16, n_nn=100)
     dt = (time.perf_counter() - t0) * 1e6
     _row("recall_manifold_256_k16", dt,
          ";".join(f"{k}_dcg={v:.4f}" for k, v in res.items()))
 
 
-def bench_bounds() -> None:
+def bench_bounds(smoke: bool = False) -> None:
     from benchmarks.paper_quality import bounds_validation
 
+    n = 150 if smoke else 400
     t0 = time.perf_counter()
-    res = bounds_validation(n=400, m=128, k=12)
+    res = bounds_validation(n=n, m=128, k=12)
     dt = (time.perf_counter() - t0) * 1e6
     _row("bounds_lemma_c2", dt,
          ";".join(f"{k}={v}" for k, v in res.items()))
@@ -992,11 +1005,20 @@ def bench_serving() -> None:
          "per-query; zen topk + exact rerank")
 
 
+def bench_retrieval_e2e(smoke: bool = False) -> None:
+    """Learned-embeddings-to-Zen-retrieval pipeline (two-tower + LM legs);
+    see ``benchmarks/retrieval_e2e.py`` for the full protocol."""
+    from benchmarks.retrieval_e2e import run_e2e
+
+    run_e2e(smoke=smoke, emit=_row)
+
+
 _WORKLOADS = {
-    "bounds": lambda a: bench_bounds(),
-    "euclidean": lambda a: bench_euclidean_spaces(),
-    "jsd": lambda a: bench_jsd_spaces(),
-    "recall": lambda a: bench_recall(),
+    "bounds": lambda a: bench_bounds(smoke=a.smoke),
+    "euclidean": lambda a: bench_euclidean_spaces(smoke=a.smoke),
+    "jsd": lambda a: bench_jsd_spaces(smoke=a.smoke),
+    "recall": lambda a: bench_recall(smoke=a.smoke),
+    "retrieval_e2e": lambda a: bench_retrieval_e2e(smoke=a.smoke),
     "runtime": lambda a: bench_runtime_fig21(),
     "ablations": lambda a: bench_ablations(smoke=a.smoke),
     "kernels": lambda a: bench_kernels(),
@@ -1022,7 +1044,8 @@ def main() -> None:
     p.add_argument("--workload", default="all",
                    choices=["all"] + sorted(_WORKLOADS))
     p.add_argument("--smoke", action="store_true",
-                   help="CI-sized shapes (retrieval_* workloads)")
+                   help="CI-sized shapes (retrieval_* and paper-quality "
+                        "workloads)")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="also write the rows as a JSON snapshot (the "
                         "BENCH_*.json trajectory format, see "

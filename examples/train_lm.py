@@ -3,6 +3,12 @@ checkpoint/restart (kill it mid-run and re-invoke with --resume), straggler
 monitoring, deterministic data pipeline — then reduce its token embeddings
 with nSimplex Zen (the DESIGN.md §4 integration point).
 
+Importable pieces (used by ``benchmarks/run.py --workload retrieval_e2e``):
+``train_lm`` runs the loop and returns (cfg, params, losses);
+``next_token_distributions`` turns trained params + token contexts into
+softmax rows on the probability simplex — the coordinate-free JSD corpus
+the paper's §5.6 experiments index.
+
 Run:  PYTHONPATH=src python examples/train_lm.py
       PYTHONPATH=src python examples/train_lm.py --resume   # restart path
 """
@@ -27,6 +33,87 @@ from repro.models import transformer as tfm
 from repro.optim import AdamW
 
 
+def train_lm(
+    steps: int = 40,
+    *,
+    resume: bool = False,
+    ckpt_dir=None,
+    batch: int = 8,
+    seq: int = 64,
+    data_seed: int = 0,
+    data: str = "uniform",
+    log=None,
+):
+    """Train the reduced qwen config; returns (cfg, params, losses).
+
+    ``ckpt_dir=None`` disables checkpointing (benchmark callers); the CLI
+    passes a directory so kill/--resume restarts reproduce the batch
+    sequence through the deterministic pipeline. ``data="markov"`` trains
+    on structured Markov token streams (``syn.lm_markov_batch``) so the
+    learned next-token distributions depend on context — the corpus the
+    retrieval_e2e JSD leg indexes.
+    """
+    cfg = C.get_arch("qwen1.5-0.5b").make_reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamW(learning_rate=1e-3)
+    opt_state = opt.init(params)
+    ckpt = CheckpointManager(ckpt_dir, keep=2) if ckpt_dir else None
+
+    start = 0
+    if resume and ckpt is not None and ckpt.latest_step() is not None:
+        start, (params, opt_state) = ckpt.restore(like=(params, opt_state))
+        if log:
+            log(f"resumed at step {start}")
+
+    @jax.jit
+    def step_fn(params, opt_state, batch_):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: tfm.loss_fn(cfg, p, batch_), has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return jax.tree.map(lambda a, b: a + b, params, updates), opt_state, loss
+
+    monitor = StepMonitor()
+    batch_fn = syn.lm_markov_batch if data == "markov" else syn.lm_batch
+    pipe = PrefetchPipeline(
+        lambda s: batch_fn(data_seed, s, batch, seq, cfg.vocab_size),
+        start_step=start)
+    losses = []
+    try:
+        for _ in range(steps - start):
+            step, batch_ = next(pipe)
+            t0 = time.time()
+            params, opt_state, loss = step_fn(params, opt_state, batch_)
+            monitor.record(step, time.time() - t0)
+            losses.append(float(loss))
+            if log and step % 10 == 0:
+                log(f"step {step}: loss={losses[-1]:.3f}")
+            if ckpt is not None and (step + 1) % 20 == 0:
+                ckpt.save_async(step + 1, (params, opt_state))
+    finally:
+        pipe.close()
+        if ckpt is not None:
+            ckpt.wait()
+    return cfg, params, losses
+
+
+def next_token_distributions(cfg, params, tokens, *,
+                             temperature: float = 1.0) -> jax.Array:
+    """Softmax next-token rows: (N, S) int32 contexts -> (N, vocab) rows.
+
+    Each row is the model's next-token distribution after its context — a
+    point on the probability simplex (rows sum to 1), i.e. an object of the
+    coordinate-free Jensen-Shannon space the paper's §5.6 experiments
+    reduce with nSimplex Zen and LMDS (PCA/RP have no coordinates to use).
+    ``temperature > 1`` smooths the rows: a sharply trained model emits
+    near-one-hot rows whose pairwise JSD saturates at the metric's maximum
+    (disjoint supports), which erases the neighbourhood structure the
+    retrieval experiments measure.
+    """
+    logits = tfm.forward(cfg, params, jnp.asarray(tokens, jnp.int32))
+    last = logits[:, -1, :].astype(jnp.float32) / float(temperature)
+    return jax.nn.softmax(last, axis=-1)
+
+
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--steps", type=int, default=40)
@@ -35,42 +122,8 @@ def main():
                                                       "repro_train_lm"))
     args = p.parse_args()
 
-    cfg = C.get_arch("qwen1.5-0.5b").make_reduced()
-    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
-    opt = AdamW(learning_rate=1e-3)
-    opt_state = opt.init(params)
-    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
-
-    start = 0
-    if args.resume and ckpt.latest_step() is not None:
-        start, (params, opt_state) = ckpt.restore(like=(params, opt_state))
-        print(f"resumed at step {start}")
-
-    @jax.jit
-    def step_fn(params, opt_state, batch):
-        (loss, _), grads = jax.value_and_grad(
-            lambda p: tfm.loss_fn(cfg, p, batch), has_aux=True)(params)
-        updates, opt_state = opt.update(grads, opt_state, params)
-        return jax.tree.map(lambda a, b: a + b, params, updates), opt_state, loss
-
-    monitor = StepMonitor()
-    pipe = PrefetchPipeline(
-        lambda s: syn.lm_batch(0, s, 8, 64, cfg.vocab_size), start_step=start)
-    losses = []
-    try:
-        for _ in range(args.steps - start):
-            step, batch = next(pipe)
-            t0 = time.time()
-            params, opt_state, loss = step_fn(params, opt_state, batch)
-            monitor.record(step, time.time() - t0)
-            losses.append(float(loss))
-            if step % 10 == 0:
-                print(f"step {step}: loss={losses[-1]:.3f}")
-            if (step + 1) % 20 == 0:
-                ckpt.save_async(step + 1, (params, opt_state))
-    finally:
-        pipe.close()
-        ckpt.wait()
+    cfg, params, losses = train_lm(
+        args.steps, resume=args.resume, ckpt_dir=args.ckpt_dir, log=print)
     assert losses[-1] < losses[0], "loss must decrease"
     print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
 

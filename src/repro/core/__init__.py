@@ -22,6 +22,7 @@ from .simplex import (
 )
 from .zen import estimate_pdist, estimate_triple, knn_search, lwb_pdist, upb_pdist, zen_pdist
 from .baselines import LMDSTransform, MDSTransform, PCATransform, RandomProjection
+from .reducers import DISTANCE_ONLY, REDUCER_NAMES, make_reducer
 from . import pivots
 from . import quality
 
@@ -44,6 +45,9 @@ __all__ = [
     "RandomProjection",
     "MDSTransform",
     "LMDSTransform",
+    "make_reducer",
+    "REDUCER_NAMES",
+    "DISTANCE_ONLY",
     "pivots",
     "quality",
     "get_metric",

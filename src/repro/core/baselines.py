@@ -53,10 +53,15 @@ class PCATransform:
         return (jnp.asarray(X, jnp.float32) - self.mean) @ self.components
 
     def dims_for_variance(self, frac: float = 0.8) -> int:
-        """Paper Eq. (3): #components explaining ``frac`` of total variance."""
+        """Paper Eq. (3): #components explaining ``frac`` of total variance.
+
+        Clamped to [1, n_eigenvalues]: with ``frac=1.0`` the f32 cumsum can
+        land a hair below 1.0, which would otherwise index one past the
+        spectrum.
+        """
         ev = self.explained_variance
         c = jnp.cumsum(ev) / jnp.sum(ev)
-        return int(jnp.searchsorted(c, frac) + 1)
+        return int(jnp.clip(jnp.searchsorted(c, frac) + 1, 1, ev.shape[0]))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -162,8 +167,16 @@ class LMDSTransform:
     def fit_from_distances(self, D: Array) -> "LMDSTransform":
         D = jnp.asarray(D, jnp.float32)
         coords, evals, mean_sq = classical_mds_embed(D, self.k)
-        safe = jnp.maximum(evals, 1e-12)
-        pinv = (coords / safe[None, :]).T  # (k, l): evec_j / sqrt(eval_j)
+        # Directions whose eigenvalue is numerically zero relative to the
+        # spectrum head carry no metric information; de Silva & Tenenbaum
+        # drop them. Dividing by the raw (near-zero) eigenvalue instead
+        # produces ~1/eps triangulation rows that blow out-of-sample
+        # coordinates up by orders of magnitude whenever l ~ k.
+        tiny = 1e-6 * jnp.maximum(jnp.max(evals), 1e-12)
+        safe = jnp.maximum(evals, tiny)
+        pinv = jnp.where(
+            evals[None, :] > tiny, coords / safe[None, :], 0.0
+        ).T  # (k, l): evec_j / sqrt(eval_j), zeroed on dead directions
         return dataclasses.replace(self, pinv_coords=pinv, mean_sq=mean_sq)
 
     def transform_from_distances(self, dists: Array) -> Array:

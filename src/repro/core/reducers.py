@@ -1,0 +1,202 @@
+"""Uniform fit/transform protocol over every DR method the paper compares.
+
+The four baseline transforms (``core.baselines``) and ``NSimplexTransform``
+grew slightly different surfaces — RP wants a PRNG key at fit time, LMDS is
+distance-only with differently named methods, Zen scores reduced points with
+its own estimator instead of the Euclidean metric. Harness code (the
+``retrieval_e2e`` workload, ``benchmarks/paper_quality.py``-style quality
+curves, ``build_index``-shaped serving glue) should not special-case each
+method, so this module wraps them behind one protocol:
+
+    r = make_reducer("pca", k=8)            # or zen / rp / mds / lmds
+    r = r.fit(witness, key=key)             # same signature for every method
+    Xr = r.transform(X)                     # (N, k) reduced coordinates
+    D  = r.pdist(Xr, Yr)                    # reduced-space distance matrix
+
+``pdist`` is the method's *own* reduced-space comparator: the Zen estimator
+for nSimplex (paper §4), plain Euclidean for the coordinate baselines — so
+recall/stress curves compare each method the way its paper runs it.
+
+Metric support differs by construction, not by accident: ``zen`` and
+``lmds`` fit from distances alone and accept any registry metric (the
+coordinate-free Hilbert case, e.g. ``metric="jsd"``); ``pca``/``rp``/``mds``
+are Euclidean-coordinate methods and raise on anything else — which is
+exactly the paper's §5.6 differentiating claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import metrics as metrics_lib
+from .baselines import LMDSTransform, MDSTransform, PCATransform, RandomProjection
+from .projection import NSimplexTransform
+from .pivots import select_references
+from .zen import zen_pdist
+
+Array = jax.Array
+
+#: every reducer name ``make_reducer`` accepts, in paper order
+REDUCER_NAMES: Tuple[str, ...] = ("zen", "pca", "rp", "mds", "lmds")
+
+#: reducers that fit from pairwise distances alone (coordinate-free spaces)
+DISTANCE_ONLY: Tuple[str, ...] = ("zen", "lmds")
+
+
+def _require_euclidean(name: str, metric: str) -> None:
+    if metric != "euclidean":
+        raise ValueError(
+            f"{name} is a Euclidean-coordinate method and cannot fit a "
+            f"{metric!r} space; distance-only methods ({'/'.join(DISTANCE_ONLY)}) "
+            "handle coordinate-free metrics"
+        )
+
+
+@dataclasses.dataclass
+class ZenReducer:
+    """nSimplex Zen behind the uniform protocol (references from witness)."""
+
+    k: int
+    metric: str = "euclidean"
+    transform_: Optional[NSimplexTransform] = None
+    name: str = "zen"
+
+    def fit(self, witness: Array, *, key: Optional[jax.Array] = None
+            ) -> "ZenReducer":
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tr = select_references(witness, self.k, key, metric=self.metric)
+        return dataclasses.replace(self, transform_=tr)
+
+    def transform(self, X: Array) -> Array:
+        return self.transform_.transform(X)
+
+    def pdist(self, Xr: Array, Yr: Array) -> Array:
+        return zen_pdist(Xr, Yr)
+
+
+@dataclasses.dataclass
+class PCAReducer:
+    k: int
+    metric: str = "euclidean"
+    transform_: Optional[PCATransform] = None
+    name: str = "pca"
+
+    def fit(self, witness: Array, *, key: Optional[jax.Array] = None
+            ) -> "PCAReducer":
+        _require_euclidean(self.name, self.metric)
+        return dataclasses.replace(
+            self, transform_=PCATransform(k=self.k).fit(witness))
+
+    def transform(self, X: Array) -> Array:
+        return self.transform_.transform(X)
+
+    def pdist(self, Xr: Array, Yr: Array) -> Array:
+        return metrics_lib.euclidean_pdist(Xr, Yr)
+
+
+@dataclasses.dataclass
+class RPReducer:
+    k: int
+    metric: str = "euclidean"
+    transform_: Optional[RandomProjection] = None
+    name: str = "rp"
+
+    def fit(self, witness: Array, *, key: Optional[jax.Array] = None
+            ) -> "RPReducer":
+        _require_euclidean(self.name, self.metric)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return dataclasses.replace(
+            self, transform_=RandomProjection(k=self.k).fit(witness, key=key))
+
+    def transform(self, X: Array) -> Array:
+        return self.transform_.transform(X)
+
+    def pdist(self, Xr: Array, Yr: Array) -> Array:
+        return metrics_lib.euclidean_pdist(Xr, Yr)
+
+
+@dataclasses.dataclass
+class MDSReducer:
+    k: int
+    metric: str = "euclidean"
+    transform_: Optional[MDSTransform] = None
+    name: str = "mds"
+
+    def fit(self, witness: Array, *, key: Optional[jax.Array] = None
+            ) -> "MDSReducer":
+        _require_euclidean(self.name, self.metric)
+        return dataclasses.replace(
+            self, transform_=MDSTransform(k=self.k).fit(witness))
+
+    def transform(self, X: Array) -> Array:
+        return self.transform_.transform(X)
+
+    def pdist(self, Xr: Array, Yr: Array) -> Array:
+        return metrics_lib.euclidean_pdist(Xr, Yr)
+
+
+@dataclasses.dataclass
+class LMDSReducer:
+    """Landmark MDS behind the protocol: coordinates in, coordinates out.
+
+    ``fit`` draws ``n_landmarks`` witness rows (default ``max(2k, k+2)``,
+    de Silva & Tenenbaum's over-determination guidance), computes their
+    pairwise distances under ``metric`` and triangulates out-of-sample
+    points from their distances to the landmarks — so the same object also
+    serves coordinate-free metrics (``metric="jsd"``) where PCA/RP/MDS
+    structurally cannot fit.
+    """
+
+    k: int
+    metric: str = "euclidean"
+    n_landmarks: Optional[int] = None
+    transform_: Optional[LMDSTransform] = None
+    landmarks_: Optional[Array] = None
+    name: str = "lmds"
+
+    def fit(self, witness: Array, *, key: Optional[jax.Array] = None
+            ) -> "LMDSReducer":
+        witness = jnp.asarray(witness)
+        l = self.n_landmarks or max(2 * self.k, self.k + 2)
+        l = min(l, witness.shape[0])
+        if key is not None:
+            pick = jax.random.choice(
+                key, witness.shape[0], (l,), replace=False)
+            landmarks = witness[pick]
+        else:
+            landmarks = witness[:l]
+        D = metrics_lib.pairwise(self.metric, landmarks, landmarks)
+        D = jnp.where(jnp.eye(l, dtype=bool), 0.0, D)
+        tr = LMDSTransform(k=self.k).fit_from_distances(D)
+        return dataclasses.replace(self, transform_=tr, landmarks_=landmarks)
+
+    def transform(self, X: Array) -> Array:
+        dists = metrics_lib.pairwise(self.metric, jnp.asarray(X),
+                                     self.landmarks_)
+        return self.transform_.transform_from_distances(dists)
+
+    def pdist(self, Xr: Array, Yr: Array) -> Array:
+        return metrics_lib.euclidean_pdist(Xr, Yr)
+
+
+_REDUCERS = {
+    "zen": ZenReducer,
+    "pca": PCAReducer,
+    "rp": RPReducer,
+    "mds": MDSReducer,
+    "lmds": LMDSReducer,
+}
+
+
+def make_reducer(name: str, k: int, *, metric: str = "euclidean", **kw):
+    """One protocol object for ``name`` in ``REDUCER_NAMES`` (unfitted)."""
+    try:
+        cls = _REDUCERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown reducer {name!r}; choose from {REDUCER_NAMES}"
+        ) from None
+    return cls(k=k, metric=metric, **kw)

@@ -71,6 +71,42 @@ def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int) -> dict:
     return {"tokens": jax.random.randint(key, (batch, seq), 0, vocab, jnp.int32)}
 
 
+def lm_markov_batch(
+    seed: int, step: int, batch: int, seq: int, vocab: int,
+    concentration: float = 1.0,
+) -> dict:
+    """First-order Markov token streams (structured LM data).
+
+    ``lm_batch`` draws i.i.d. uniform tokens — no learnable structure, so a
+    trained LM collapses every next-token distribution toward the same
+    unigram and the induced Jensen-Shannon space degenerates to a point
+    cloud of near-duplicates. Here tokens follow a fixed (per ``seed``)
+    peaked transition matrix: the model can learn genuine bigram structure,
+    and its next-token distributions then *depend on context* — a
+    probability-simplex corpus with real neighbourhood geometry for the
+    paper's §5.6 JSD experiments. Deterministic in (seed, step).
+    """
+    kA, kB = jax.random.split(jax.random.PRNGKey(seed))
+    # low-rank transition logits: conditional distributions live on a smooth
+    # low-dimensional family inside the simplex (neither uniform noise nor
+    # one-hot corners), so the learned JSD space has manifold structure
+    rank = max(4, min(16, vocab // 32))
+    A = jax.random.normal(kA, (vocab, rank))
+    B = jax.random.normal(kB, (rank, vocab))
+    logits = (A @ B) / (np.sqrt(rank) * concentration)
+    kstep = jax.random.fold_in(jax.random.PRNGKey(seed + 7919), step)
+    k0, kscan = jax.random.split(kstep)
+    t0 = jax.random.randint(k0, (batch,), 0, vocab)
+
+    def body(tok, k):
+        nxt = jax.random.categorical(k, logits[tok], axis=-1)
+        return nxt, nxt
+
+    _, rest = jax.lax.scan(body, t0, jax.random.split(kscan, seq - 1))
+    toks = jnp.concatenate([t0[:, None], rest.T], axis=1)
+    return {"tokens": toks.astype(jnp.int32)}
+
+
 def recsys_batch(
     seed: int, step: int, batch: int, vocab_sizes, n_dense: int = 0
 ) -> dict:
@@ -89,6 +125,29 @@ def recsys_batch(
     if n_dense:
         out["dense"] = jax.random.normal(ks[2], (batch, n_dense), jnp.float32)
     return out
+
+
+def two_tower_batch(
+    seed: int, step: int, batch: int, vocab_sizes, n_items: int
+) -> dict:
+    """Criteo-shaped sparse user features + a co-clicked positive item id.
+
+    The positive item is a deterministic hash of the user's full sparse
+    pattern, so the (user pattern -> item) mapping is consistent
+    across steps — learnable structure for the in-batch-softmax two-tower
+    loss — while the zipf skew of ``recsys_batch`` keeps table traffic
+    realistic. Deterministic in (seed, step) like every batch maker here.
+    """
+    base = recsys_batch(seed, step, batch, vocab_sizes)
+    sparse = base["sparse"]
+    # hash the three leading fields (distinct odd multipliers): repeated
+    # patterns stay frequent enough under the zipf skew to be learnable,
+    # while the learned item structure still spans a multi-field cross
+    # rather than a rank-2 slice
+    n_hash = min(3, sparse.shape[1])
+    mult = (131 + 62 * jnp.arange(n_hash, dtype=jnp.int32))[None, :]
+    items = jnp.sum(sparse[:, :n_hash] * mult, axis=1) % n_items
+    return {"sparse": sparse, "items": items.astype(jnp.int32)}
 
 
 def geometric_graph_batch(

@@ -315,3 +315,66 @@ def retrieval_topk(
 ) -> Tuple[Array, Array]:
     scores = retrieval_scores(query_repr, candidates)
     return jax.lax.top_k(scores, k)
+
+
+# -- two-tower retrieval training (the e2e serving workload's model) -----------
+
+
+def init_two_tower_params(cfg: RecsysConfig, key: jax.Array, n_items: int) -> dict:
+    """User tower = the embedding-bag table read by ``user_repr``; item tower
+    = a dedicated (n_items, embed_dim) embedding table whose rows are the
+    retrieval corpus handed to ``build_index``."""
+    ku, ki = jax.random.split(key)
+    d = cfg.embed_dim
+    return {
+        "table": jax.random.normal(ku, (cfg.padded_rows, d), jnp.float32)
+        * (d**-0.5),
+        "items": jax.random.normal(ki, (n_items, d), jnp.float32) * (d**-0.5),
+    }
+
+
+def item_repr(params: dict, item_ids: Optional[Array] = None) -> Array:
+    """Item-tower embeddings: all rows, or a gathered (B, d) batch."""
+    items = params["items"]
+    if item_ids is None:
+        return items
+    return jnp.take(items, item_ids, axis=0)
+
+
+def _l2(x: Array) -> Array:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def two_tower_loss(
+    cfg: RecsysConfig, params: dict, batch: dict, *, temperature: float = 0.1
+) -> Tuple[Array, dict]:
+    """In-batch sampled-softmax over L2-normalised towers.
+
+    batch: sparse (B, F) user features + items (B,) positive item ids. Row
+    i's positive is logit (i, i); every other item in the batch is a
+    negative. Normalised towers make the trained dot-product ranking
+    coincide with the Euclidean ranking of the same representations — the
+    property the Zen-reduced retrieval head relies on.
+    """
+    u = _l2(user_repr(cfg, params, batch))          # (B, d)
+    v = _l2(item_repr(params, batch["items"]))      # (B, d)
+    logits = (u @ v.T) / temperature
+    labels = jnp.arange(u.shape[0])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "in_batch_acc": acc}
+
+
+def two_tower_towers(cfg: RecsysConfig, params: dict, batch: dict
+                     ) -> Tuple[Array, Array]:
+    """(users (B, d), all items (n_items, d)) — the query set and retrieval
+    corpus of the trained model, as raw embeddings.
+
+    The loss normalises internally; the towers are returned *unnormalised*
+    because projecting learned embeddings onto the unit sphere collapses
+    the reference-distance variance the nSimplex estimators feed on (every
+    point is equidistant from the origin and near-equidistant from any
+    reference), while coordinate methods are unaffected — Euclidean
+    retrieval experiments on learned embeddings use the raw vectors."""
+    return user_repr(cfg, params, batch), item_repr(params)

@@ -1,0 +1,254 @@
+"""Dedicated tier-1 suite for ``core.baselines`` — the paper's comparison
+transforms (PCA / Achlioptas random projection / MDS / landmark MDS).
+
+Each transform gets its own contract tests: PCA spectral properties and the
+``dims_for_variance`` edge cases, the RP Johnson-Lindenstrauss distortion
+bound and seed determinism, MDS out-of-sample consistency, and LMDS
+distance-only parity with the coordinate path (plus the degenerate-spectrum
+regression: near-zero eigenvalues must be dropped, not inverted).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as M
+from repro.core.baselines import (
+    LMDSTransform,
+    MDSTransform,
+    PCATransform,
+    RandomProjection,
+    classical_mds_embed,
+)
+
+
+def _gaussian(seed, n, m, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=(n, m)) * scale, jnp.float32)
+
+
+# -- PCA -------------------------------------------------------------------
+
+
+def test_pca_components_orthonormal():
+    X = _gaussian(0, 200, 32)
+    pca = PCATransform(k=8).fit(X)
+    C = np.asarray(pca.components)  # (m, k)
+    assert C.shape == (32, 8)
+    np.testing.assert_allclose(C.T @ C, np.eye(8), atol=1e-4)
+
+
+def test_pca_reconstruction_error_monotone_in_k():
+    X = _gaussian(1, 300, 24)
+    Xc = np.asarray(X) - np.asarray(X).mean(0)
+    errs = []
+    for k in (1, 2, 4, 8, 16, 24):
+        pca = PCATransform(k=k).fit(X)
+        C = np.asarray(pca.components)
+        recon = (Xc @ C) @ C.T
+        errs.append(float(np.linalg.norm(Xc - recon)))
+    # adding components can only explain more variance
+    for lo, hi in zip(errs[1:], errs[:-1]):
+        assert lo <= hi + 1e-5
+    # full-rank PCA reconstructs exactly
+    assert errs[-1] < 1e-2
+
+
+def test_pca_dims_for_variance_k1():
+    # k=1 fit still sees the full witness spectrum: the answer to "how many
+    # dims explain frac of variance" is independent of the fitted k and
+    # stays within [1, len(spectrum)]
+    X = _gaussian(2, 100, 16)
+    pca = PCATransform(k=1).fit(X)
+    assert pca.dims_for_variance(0.0) == 1
+    assert 1 <= pca.dims_for_variance(0.5) <= 16
+    assert 1 <= pca.dims_for_variance(1.0) <= 16
+    assert pca.transform(X).shape == (100, 1)
+
+
+def test_pca_dims_for_variance_frac_one_clamped():
+    # f32 cumsum can land just below 1.0: searchsorted then points one past
+    # the spectrum and the old code returned k+1 dims
+    X = _gaussian(3, 200, 12)
+    pca = PCATransform(k=12).fit(X)
+    d = pca.dims_for_variance(1.0)
+    assert 1 <= d <= 12
+    assert pca.dims_for_variance(0.0) >= 1
+
+
+def test_pca_dims_for_variance_monotone_in_frac():
+    X = _gaussian(4, 200, 16)
+    pca = PCATransform(k=16).fit(X)
+    dims = [pca.dims_for_variance(f) for f in (0.1, 0.5, 0.8, 0.95, 1.0)]
+    assert dims == sorted(dims)
+
+
+def test_pca_transform_centers_witness_mean():
+    X = _gaussian(5, 150, 10) + 7.0
+    pca = PCATransform(k=10).fit(X)
+    Z = np.asarray(pca.transform(X))
+    np.testing.assert_allclose(Z.mean(0), np.zeros(10), atol=1e-3)
+
+
+# -- Achlioptas random projection -----------------------------------------
+
+
+def test_rp_jl_distortion_bound():
+    # JL: k = 256 rows preserve pairwise distances of n = 40 points within
+    # eps ~ sqrt(8 ln n / k) ~ 0.34; assert a generous 0.5 on the *squared*
+    # distance ratio (Achlioptas 2003, Thm 1.1)
+    n, m, k = 40, 512, 256
+    X = _gaussian(10, n, m)
+    rp = RandomProjection(k=k).fit(m, key=jax.random.PRNGKey(0))
+    Y = rp.transform(X)
+    d_true = np.asarray(M.sqeuclidean_pdist(X, X))
+    d_red = np.asarray(M.sqeuclidean_pdist(Y, Y))
+    iu = np.triu_indices(n, 1)
+    ratio = d_red[iu] / d_true[iu]
+    assert float(np.max(np.abs(ratio - 1.0))) < 0.5
+
+
+def test_rp_distortion_shrinks_with_k():
+    X = _gaussian(11, 40, 512)
+    d_true = np.asarray(M.sqeuclidean_pdist(X, X))
+    iu = np.triu_indices(40, 1)
+    worst = []
+    for k in (16, 64, 256):
+        rp = RandomProjection(k=k).fit(512, key=jax.random.PRNGKey(1))
+        d_red = np.asarray(M.sqeuclidean_pdist(rp.transform(X),
+                                               rp.transform(X)))
+        worst.append(float(np.max(np.abs(d_red[iu] / d_true[iu] - 1.0))))
+    assert worst[2] < worst[0]
+
+
+def test_rp_seed_determinism():
+    rp1 = RandomProjection(k=32).fit(128, key=jax.random.PRNGKey(7))
+    rp2 = RandomProjection(k=32).fit(128, key=jax.random.PRNGKey(7))
+    rp3 = RandomProjection(k=32).fit(128, key=jax.random.PRNGKey(8))
+    assert np.array_equal(np.asarray(rp1.matrix), np.asarray(rp2.matrix))
+    assert not np.array_equal(np.asarray(rp1.matrix), np.asarray(rp3.matrix))
+
+
+def test_rp_achlioptas_entry_distribution():
+    # entries are +-sqrt(3)/sqrt(k) w.p. 1/6 each and 0 w.p. 2/3
+    m, k = 600, 200
+    rp = RandomProjection(k=k).fit(m, key=jax.random.PRNGKey(2))
+    A = np.asarray(rp.matrix) * np.sqrt(k)
+    vals = np.unique(np.round(A, 5))
+    s = round(float(np.sqrt(3.0)), 5)
+    assert set(vals.tolist()) <= {-s, 0.0, s}
+    frac_zero = float(np.mean(np.abs(A) < 1e-9))
+    assert abs(frac_zero - 2.0 / 3.0) < 0.02
+
+
+def test_rp_fit_from_witness_uses_its_width():
+    X = _gaussian(12, 50, 96)
+    rp = RandomProjection(k=16).fit(X, key=jax.random.PRNGKey(3))
+    assert np.asarray(rp.matrix).shape == (96, 16)
+    assert rp.transform(X).shape == (50, 16)
+
+
+# -- classical MDS ---------------------------------------------------------
+
+
+def test_mds_out_of_sample_map_consistent_on_witness():
+    # the linear out-of-sample map must reproduce the witness's own
+    # classical-MDS embedding (it was least-squares fitted to it)
+    W = _gaussian(20, 120, 16)
+    mds = MDSTransform(k=16).fit(W)
+    Z = np.asarray(mds.transform(W))
+    D_fit = np.asarray(M.euclidean_pdist(W, W))
+    coords, _, _ = classical_mds_embed(jnp.asarray(D_fit), 16)
+    np.testing.assert_allclose(
+        np.asarray(M.euclidean_pdist(jnp.asarray(Z), jnp.asarray(Z))),
+        np.asarray(M.euclidean_pdist(coords, coords)),
+        atol=1e-2)
+
+
+def test_mds_full_rank_preserves_distances():
+    W = _gaussian(21, 80, 12)
+    mds = MDSTransform(k=12).fit(W)
+    Z = mds.transform(W)
+    np.testing.assert_allclose(
+        np.asarray(M.euclidean_pdist(Z, Z)),
+        np.asarray(M.euclidean_pdist(W, W)), atol=1e-2)
+
+
+def test_mds_translation_invariant_embedding():
+    W = _gaussian(22, 60, 8)
+    Z1 = MDSTransform(k=8).fit(W).transform(W)
+    Z2 = MDSTransform(k=8).fit(W + 11.0).transform(W + 11.0)
+    np.testing.assert_allclose(
+        np.asarray(M.euclidean_pdist(Z1, Z1)),
+        np.asarray(M.euclidean_pdist(Z2, Z2)), atol=2e-2)
+
+
+def test_mds_accepts_precomputed_distance_matrix():
+    W = _gaussian(23, 70, 10)
+    D = M.euclidean_pdist(W, W)
+    mds_d = MDSTransform(k=6).fit(W, D=D)
+    mds_c = MDSTransform(k=6).fit(W)
+    np.testing.assert_allclose(
+        np.asarray(mds_d.transform(W)), np.asarray(mds_c.transform(W)),
+        atol=1e-3)
+
+
+# -- landmark MDS ----------------------------------------------------------
+
+
+def test_lmds_distance_parity_with_coordinate_mds():
+    # on Euclidean input, LMDS fitted purely from the landmark distance
+    # matrix must reproduce the coordinate path's geometry
+    L = _gaussian(30, 40, 12)
+    D = M.euclidean_pdist(L, L)
+    lmds = LMDSTransform(k=12).fit_from_distances(D)
+    Z = lmds.transform_from_distances(D)
+    np.testing.assert_allclose(
+        np.asarray(M.euclidean_pdist(Z, Z)), np.asarray(D), atol=5e-2)
+
+
+def test_lmds_out_of_sample_matches_witness_geometry():
+    rng = np.random.default_rng(31)
+    L = jnp.asarray(rng.normal(size=(30, 8)), jnp.float32)  # landmarks
+    X = jnp.asarray(rng.normal(size=(50, 8)), jnp.float32)  # out-of-sample
+    lmds = LMDSTransform(k=8).fit_from_distances(M.euclidean_pdist(L, L))
+    Z = lmds.transform_from_distances(M.euclidean_pdist(X, L))
+    np.testing.assert_allclose(
+        np.asarray(M.euclidean_pdist(Z, Z)),
+        np.asarray(M.euclidean_pdist(X, X)), atol=0.1)
+
+
+def test_lmds_degenerate_spectrum_stays_bounded():
+    # l == k forces near-zero trailing eigenvalues; the pseudo-inverse must
+    # drop those directions instead of dividing by ~eps (regression: this
+    # produced ~1e6-scale coordinates in the jsd quality workload)
+    rng = np.random.default_rng(32)
+    L = jnp.asarray(rng.normal(size=(12, 50)), jnp.float32)
+    D = M.euclidean_pdist(L, L)
+    lmds = LMDSTransform(k=12).fit_from_distances(D)
+    X = jnp.asarray(rng.normal(size=(40, 50)), jnp.float32)
+    Z = np.asarray(lmds.transform_from_distances(M.euclidean_pdist(X, L)))
+    assert np.all(np.isfinite(Z))
+    scale = float(np.abs(np.asarray(D)).max())
+    assert float(np.abs(Z).max()) < 10 * scale
+
+
+def test_lmds_jsd_distance_only_fit():
+    # the differentiating capability: fitting a coordinate-free metric
+    rng = np.random.default_rng(33)
+    P = rng.uniform(size=(25, 64)).astype(np.float32)
+    P /= P.sum(1, keepdims=True)
+    P = jnp.asarray(P)
+    D = M.jsd_pdist(P, P, assume_normalized=True)
+    D = jnp.where(jnp.eye(25, dtype=bool), 0.0, D)
+    lmds = LMDSTransform(k=6).fit_from_distances(D)
+    Z = np.asarray(lmds.transform_from_distances(D))
+    assert Z.shape == (25, 6)
+    assert np.all(np.isfinite(Z))
+    # embedded geometry correlates with the true JSD geometry
+    iu = np.triu_indices(25, 1)
+    d_emb = np.asarray(M.euclidean_pdist(jnp.asarray(Z), jnp.asarray(Z)))[iu]
+    d_true = np.asarray(D)[iu]
+    r = np.corrcoef(d_emb, d_true)[0, 1]
+    assert r > 0.7

@@ -6,9 +6,12 @@ top-k ids *and* distances of every major retrieval configuration — flat
 f32, IVF at ``nprobe = n_clusters`` (exact) and at a partial probe, int8
 and product-quantised (pq) storage, exact re-rank, the jsd/qform
 non-Euclidean paths, a replica served through a publish -> churn ->
-hot-swap cycle (mmap'd, ``launch.replicate``), and the pivot ids every
+hot-swap cycle (mmap'd, ``launch.replicate``), the pivot ids every
 ``core.pivots`` strategy
-selects over the fixed-seed corpus. Any PR
+selects over the fixed-seed corpus, and the baseline-reducer block:
+pca/rp/lmds reduced query coordinates at ``BASELINE_K`` plus the
+per-query recall@10 of zen and pca on an isotropic gaussian corpus
+(the paper's low-k ordering regime, pinned so it cannot silently flip). Any PR
 that shifts these bits — a kernel rewrite, an estimator reorder, a
 quantisation change — fails here instead of drifting silently; an
 *intentional* numerical change regenerates the file in the same commit.
@@ -57,6 +60,16 @@ def test_golden_file_is_complete(golden, tool):
         ids = golden[f"pivots_{strategy}_ids"]
         assert ids.shape == (tool.K,) and ids.dtype == np.int32
         assert len(set(ids.tolist())) == tool.K
+    assert golden["corpus_gauss"].shape == (tool.N, tool.DIM)
+    assert golden["queries_gauss"].shape == (tool.Q, tool.DIM)
+    for name in ("pca", "rp", "lmds"):
+        assert golden[f"baseline_{name}_coords"].shape == (
+            tool.Q, tool.BASELINE_K)
+        assert golden[f"baseline_{name}_coords"].dtype == np.float32
+    for name in ("zen", "pca", "rp", "lmds"):
+        rec = golden[f"baseline_recall_{name}"]
+        assert rec.shape == (tool.Q,) and rec.dtype == np.float32
+        assert np.all((rec >= 0.0) & (rec <= 1.0))
 
 
 @pytest.mark.parametrize("name", [
@@ -88,6 +101,27 @@ def test_pivot_selection_matches_golden(golden, tool, strategy):
     np.testing.assert_array_equal(
         got, golden[f"pivots_{strategy}_ids"],
         err_msg=f"pivot strategy {strategy!r} chose different pivots")
+
+
+def test_baseline_reducers_match_golden(golden, tool):
+    """pca/rp/lmds reduced coordinates and the zen/pca recall arrays are
+    re-derived bit-identically from the committed gaussian corpus — pins
+    ``core.baselines`` + the ``core.reducers`` protocol end to end."""
+    regen = tool.baseline_golden(golden)
+    for key in sorted(regen):
+        np.testing.assert_array_equal(
+            regen[key], golden[key],
+            err_msg=f"baseline golden array {key!r} drifted")
+
+
+def test_baseline_recall_ordering_zen_above_pca(golden):
+    """The committed bits themselves witness the paper's low-k claim: on
+    an isotropic corpus at k=4, zen's mean recall@10 strictly dominates
+    the coordinate baselines' best (PCA has no low-rank structure to
+    exploit there). Checked from the file, no recomputation."""
+    zen = float(golden["baseline_recall_zen"].mean())
+    pca = float(golden["baseline_recall_pca"].mean())
+    assert zen >= pca
 
 
 def test_ivf_full_probe_equals_flat(golden):

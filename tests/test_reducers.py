@@ -1,0 +1,111 @@
+"""Tier-1 suite for the ``core.reducers`` uniform fit/transform protocol —
+the shim the retrieval_e2e workload and quality curves plug every DR method
+through."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DISTANCE_ONLY,
+    REDUCER_NAMES,
+    make_reducer,
+    select_references,
+    zen_pdist,
+)
+from repro.core import metrics as M
+
+
+def _witness(seed=0, n=120, m=24):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=(n, m)), jnp.float32)
+
+
+@pytest.mark.parametrize("name", REDUCER_NAMES)
+def test_protocol_shapes_and_finiteness(name):
+    X = _witness()
+    Q = _witness(1, 20, 24)
+    r = make_reducer(name, 6).fit(X, key=jax.random.PRNGKey(0))
+    Xr, Qr = r.transform(X), r.transform(Q)
+    assert Xr.shape == (120, 6) and Qr.shape == (20, 6)
+    D = np.asarray(r.pdist(Qr, Xr))
+    assert D.shape == (20, 120)
+    assert np.all(np.isfinite(D))
+    assert np.all(D >= -1e-5)
+
+
+@pytest.mark.parametrize("name", REDUCER_NAMES)
+def test_fit_returns_new_object(name):
+    r0 = make_reducer(name, 4)
+    r1 = r0.fit(_witness(), key=jax.random.PRNGKey(0))
+    assert r0.transform_ is None  # unfitted original untouched
+    assert r1.transform_ is not None
+
+
+@pytest.mark.parametrize("name", sorted(set(REDUCER_NAMES) - set(DISTANCE_ONLY)))
+def test_coordinate_methods_refuse_non_euclidean(name):
+    P = _witness()
+    with pytest.raises(ValueError, match="Euclidean-coordinate"):
+        make_reducer(name, 4, metric="jsd").fit(P)
+
+
+@pytest.mark.parametrize("name", DISTANCE_ONLY)
+def test_distance_only_methods_fit_jsd(name):
+    rng = np.random.default_rng(2)
+    P = rng.uniform(size=(80, 48)).astype(np.float32)
+    P = jnp.asarray(P / P.sum(1, keepdims=True))
+    r = make_reducer(name, 5, metric="jsd").fit(P, key=jax.random.PRNGKey(1))
+    Pr = r.transform(P)
+    assert Pr.shape == (80, 5)
+    assert np.all(np.isfinite(np.asarray(Pr)))
+
+
+def test_zen_reducer_matches_direct_path_bitwise():
+    # the shim must be a zero-cost veneer over select_references + zen_pdist
+    X = _witness(3)
+    key = jax.random.PRNGKey(42)
+    r = make_reducer("zen", 8).fit(X, key=key)
+    tr = select_references(X, 8, key)
+    assert np.array_equal(np.asarray(r.transform(X)),
+                          np.asarray(tr.transform(X)))
+    Xr = tr.transform(X)
+    assert np.array_equal(np.asarray(r.pdist(Xr, Xr)),
+                          np.asarray(zen_pdist(Xr, Xr)))
+
+
+def test_lmds_reducer_landmarks_clamped_to_witness():
+    X = _witness(4, n=9, m=12)  # fewer rows than the default 2k landmarks
+    r = make_reducer("lmds", 6).fit(X, key=jax.random.PRNGKey(0))
+    assert r.landmarks_.shape[0] == 9
+
+
+def test_lmds_reducer_deterministic_under_key():
+    X = _witness(5)
+    a = make_reducer("lmds", 6).fit(X, key=jax.random.PRNGKey(9))
+    b = make_reducer("lmds", 6).fit(X, key=jax.random.PRNGKey(9))
+    assert np.array_equal(np.asarray(a.transform(X)),
+                          np.asarray(b.transform(X)))
+
+
+def test_reducers_beat_chance_on_recall():
+    # sanity: every reducer's reduced-space top-10 does far better than
+    # random guessing on an easy clustered corpus
+    rng = np.random.default_rng(6)
+    centers = rng.normal(size=(10, 32)) * 4
+    X = jnp.asarray((centers[np.arange(200) % 10]
+                     + rng.normal(size=(200, 32))).astype(np.float32))
+    d_true = np.asarray(M.euclidean_pdist(X, X))
+    truth = np.argsort(d_true, 1)[:, 1:11]
+    for name in REDUCER_NAMES:
+        r = make_reducer(name, 8).fit(X, key=jax.random.PRNGKey(0))
+        Xr = r.transform(X)
+        pred = np.argsort(np.asarray(r.pdist(Xr, Xr)), 1)[:, 1:11]
+        rec = np.mean([len(set(truth[i]) & set(pred[i])) / 10
+                       for i in range(200)])
+        assert rec > 0.3, name  # chance is ~10/200 = 0.05
+
+
+def test_make_reducer_unknown_name():
+    with pytest.raises(ValueError, match="unknown reducer"):
+        make_reducer("umap", 4)

@@ -1,0 +1,210 @@
+"""Deterministic, smoke-shaped tests for the learned-embeddings-to-Zen
+retrieval pipeline (``benchmarks/retrieval_e2e.py``): churn-during-training
+ends with every live item retrievable through the frontend with
+scheduled-vs-direct bit parity, the JSD/LM leg's simplex-domain invariants
+hold through project -> index -> query, and the four paper-quality workloads
+are importable and callable at tiny sizes (they had no smoke coverage and
+hid a broken import path plus an LMDS eigen blowup)."""
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as M
+from repro.data import synthetic as syn
+from repro.launch.serve import ZenServer, build_index
+from repro.models import recsys
+from repro.optim import AdamW
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load(path, name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(REPO, path))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def paper_quality():
+    return _load("benchmarks/paper_quality.py", "pq_under_test")
+
+
+# -- churn during training ------------------------------------------------
+
+
+def test_churn_loop_all_live_items_retrievable():
+    cfg = recsys.RecsysConfig(
+        name="tt_e2e_test", model="dlrm", n_sparse=4, embed_dim=16,
+        vocab_sizes=(32,) * 4)
+    n_items = 192
+    params = recsys.init_two_tower_params(cfg, jax.random.PRNGKey(0), n_items)
+    opt = AdamW(learning_rate=3e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, b):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: recsys.two_tower_loss(cfg, p, b), has_aux=True)(params)
+        upd, state = opt.update(g, state, params)
+        return jax.tree.map(lambda a, u: a + u, params, upd), state, loss
+
+    def train(params, state, start, steps):
+        for s in range(start, start + steps):
+            b = syn.two_tower_batch(0, s, 64, cfg.vocab_sizes, n_items)
+            params, state, _ = step(params, state, b)
+        return params, state
+
+    params, state = train(params, state, 0, 8)
+    items = recsys.item_repr(params)
+    index = build_index(items, 12, index="ivf", key=jax.random.PRNGKey(1))
+    server = ZenServer(index, nprobe=index.ivf.n_clusters, rerank_factor=8,
+                       frontend=True, max_batch=32, cache_size=64)
+
+    # churn: two rounds of continued training, each refreshing half the
+    # corpus through the serving upsert path
+    gen0 = server.index.generation
+    for r in range(2):
+        params, state = train(params, state, 1000 * (r + 1), 6)
+        items = recsys.item_repr(params)
+        ids = np.arange(r * (n_items // 2), (r + 1) * (n_items // 2))
+        server.upsert(ids, np.asarray(items)[ids])
+    assert server.index.generation == gen0 + 2
+
+    # every live item id must come back as its own nearest neighbour, via
+    # the scheduled frontend path, bit-identical to the direct path.  The
+    # zen estimate between two identical apex projections is sqrt(2) x the
+    # shared altitude — not zero — so the exact-rerank guarantee needs a
+    # candidate pool (rerank_factor x nn) wider than the worst-case
+    # approximate self-rank; nn=10 gives a pool of 80 on 192 items.
+    live = np.asarray(server.index.corpus, np.float32)
+    d_s, i_s = server.query(jnp.asarray(live), 10)
+    d_d, i_d = server.query(jnp.asarray(live), 10, direct=True)
+    assert np.array_equal(np.asarray(i_s), np.asarray(i_d))
+    assert np.array_equal(np.asarray(d_s), np.asarray(d_d))
+    assert np.array_equal(np.asarray(i_s)[:, 0], np.arange(n_items))
+
+
+def test_frontend_cache_invalidated_by_churn():
+    X = jnp.asarray(
+        np.random.default_rng(0).normal(size=(128, 12)), jnp.float32)
+    index = build_index(X, 8, key=jax.random.PRNGKey(0))
+    server = ZenServer(index, rerank_factor=4, frontend=True, cache_size=32)
+    q = X[:4]
+    server.query(q, 5)
+    server.query(q, 5)  # identical -> served from the generation-keyed cache
+    hits_before = server.frontend.cache.info()["hits"]
+    assert hits_before > 0
+    server.upsert([0], np.asarray(X[:1]) + 0.5)
+    d, i = server.query(q, 5)  # generation bumped -> recomputed, not stale
+    info = server.frontend.cache.info()
+    assert info["hits"] == hits_before
+    d2, i2 = server.query(q, 5, direct=True)
+    assert np.array_equal(np.asarray(d), np.asarray(d2))
+    assert np.array_equal(np.asarray(i), np.asarray(i2))
+
+
+# -- JSD / probability-simplex invariants ---------------------------------
+
+
+def test_jsd_leg_simplex_invariants_through_serving():
+    P = syn.probability_space(jax.random.PRNGKey(2), 160, 64, intrinsic=6)
+    rows = np.asarray(P)
+    np.testing.assert_allclose(rows.sum(1), np.ones(160), atol=1e-5)
+    assert np.all(rows >= 0)
+    # self-distance vanishes (up to f32 roundoff in the divergence)
+    D = np.asarray(M.jsd_pdist(P[:24], P[:24], assume_normalized=True))
+    assert float(np.abs(np.diagonal(D)).max()) < 2e-3
+
+    index = build_index(P, 8, metric="jsd", index="flat",
+                        key=jax.random.PRNGKey(3))
+    server = ZenServer(index, rerank_factor=8)
+    d, i = server.query(P[:24], 1)
+    # a corpus row queried against the index comes back as itself at
+    # (numerically) zero JSD after exact re-rank
+    assert np.array_equal(np.asarray(i)[:, 0], np.arange(24))
+    assert float(np.abs(np.asarray(d)).max()) < 2e-3
+
+
+def test_lm_markov_batch_contract():
+    b1 = syn.lm_markov_batch(5, 3, 16, 32, 64)
+    b2 = syn.lm_markov_batch(5, 3, 16, 32, 64)
+    assert np.array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    t = np.asarray(b1["tokens"])
+    assert t.shape == (16, 32) and t.dtype == np.int32
+    assert t.min() >= 0 and t.max() < 64
+    # Markov structure: the stream must not be i.i.d. uniform — consecutive
+    # pairs repeat far more often than chance under a peaked transition
+    pairs = {}
+    for row in t:
+        for a, b in zip(row[:-1], row[1:]):
+            pairs[(int(a), int(b))] = pairs.get((int(a), int(b)), 0) + 1
+    n_pairs = 16 * 31
+    assert max(pairs.values()) >= 3 or len(pairs) < 0.8 * n_pairs
+
+
+def test_next_token_distributions_simplex_rows():
+    mod = _load("examples/train_lm.py", "train_lm_under_test")
+    cfg, params, losses = mod.train_lm(2, batch=4, seq=16, data="markov")
+    assert all(np.isfinite(losses))
+    toks = syn.lm_markov_batch(1, 0, 6, 16, cfg.vocab_size)["tokens"]
+    for temp in (1.0, 6.0):
+        P = np.asarray(mod.next_token_distributions(
+            cfg, params, toks, temperature=temp))
+        assert P.shape == (6, cfg.vocab_size)
+        np.testing.assert_allclose(P.sum(1), np.ones(6), atol=1e-4)
+        assert np.all(P >= 0)
+    # higher temperature must smooth (raise the entropy of) every row
+    p1 = np.asarray(mod.next_token_distributions(cfg, params, toks,
+                                                 temperature=1.0))
+    p6 = np.asarray(mod.next_token_distributions(cfg, params, toks,
+                                                 temperature=6.0))
+    ent = lambda p: -(p * np.log(np.maximum(p, 1e-12))).sum(1)
+    assert np.all(ent(p6) >= ent(p1) - 1e-5)
+
+
+# -- paper_quality workloads: import path + smoke-size calls ---------------
+
+
+def test_paper_quality_euclidean_smoke(paper_quality):
+    res = paper_quality.euclidean_comparison(
+        "uniform", n_witness=80, n_eval=40, m=24, k=8)
+    for tr in ("zen", "pca", "rp", "mds"):
+        assert 0.0 <= res[tr]["kruskal"] < 1.0
+        assert np.isfinite(res[tr]["spearman"])
+
+
+def test_paper_quality_jsd_smoke(paper_quality):
+    res = paper_quality.jsd_comparison(n_eval=40, m=32, k=8)
+    assert 0.0 <= res["zen"]["kruskal"] < 1.0
+    # regression: the LMDS eigen blowup made sammon stress explode to ~1e7
+    assert res["lmds"]["sammon"] < 100.0
+
+
+def test_paper_quality_recall_smoke(paper_quality):
+    res = paper_quality.recall_comparison(
+        n_corpus=300, n_queries=5, m=32, k=8, n_nn=20)
+    for name in ("zen", "pca", "rp"):
+        assert 0.0 <= res[name] <= 1.0
+
+
+def test_paper_quality_bounds_smoke(paper_quality):
+    res = paper_quality.bounds_validation(n=60, m=32, k=8)
+    assert res["lwb_violations"] == 0
+    assert res["upb_violations"] == 0
+
+
+def test_run_py_registers_quality_and_e2e_workloads():
+    run = _load("benchmarks/run.py", "bench_run_under_test")
+    for name in ("bounds", "euclidean", "jsd", "recall", "retrieval_e2e"):
+        assert name in run._WORKLOADS
+    e2e = _load("benchmarks/retrieval_e2e.py", "retrieval_e2e_under_test")
+    assert callable(e2e.run_e2e)
+    assert e2e.CURVE_KS_SMOKE == tuple(sorted(e2e.CURVE_KS_SMOKE))
+    assert set(e2e.CURVE_KS_SMOKE) <= set(e2e.CURVE_KS)

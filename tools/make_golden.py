@@ -4,8 +4,9 @@ The golden file pins the serving stack's *exact* numerical output across
 PRs: a fixed-seed corpus + query set and the expected top-k ids/distances
 of every major retrieval configuration — flat f32, IVF probed at
 ``nprobe = n_clusters`` (exact), int8 and product-quantised (pq) storage,
-exact re-rank, the non-Euclidean jsd/qform paths, plus the chosen pivot
-ids of every ``core.pivots`` strategy. ``tests/test_golden_parity.py``
+exact re-rank, the non-Euclidean jsd/qform paths, the chosen pivot
+ids of every ``core.pivots`` strategy, plus a baseline-reducer block
+(pca/rp/lmds coordinates and the zen-vs-pca recall ordering at low k). ``tests/test_golden_parity.py``
 replays
 each configuration against the stored corpus and requires bit-identical
 results; it also re-runs :func:`build_golden` and requires the regenerated
@@ -96,6 +97,16 @@ CASES = {
 #: distance matrix, greedy/stochastic selection)
 PIVOT_KEY_SEED = 7
 
+#: baseline-reducer golden: reduced query coordinates of the coordinate
+#: baselines (pca / rp / lmds) at a paper-regime k, plus the per-query
+#: recall@10 of zen and pca on an isotropic gaussian corpus — the regime
+#: where the paper's ordering claim (zen above pca at low k) holds, pinned
+#: so a baseline refactor can neither shift the coordinates nor silently
+#: flip the ordering.
+BASELINE_K = 4
+BASELINE_NN = 10
+BASELINE_KEY_SEED = 19
+
 
 def pivot_golden(arrays: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
     from repro.core.pivots import PIVOT_STRATEGIES, pivot_ids
@@ -108,6 +119,35 @@ def pivot_golden(arrays: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
                           strategy=strategy), np.int32)
             for strategy in PIVOT_STRATEGIES
         }
+
+
+def baseline_golden(arrays: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    from repro.core import make_reducer
+    from repro.core import metrics as metrics_lib
+
+    with _force_x32():
+        corpus = jax.numpy.asarray(arrays["corpus_gauss"])
+        queries = jax.numpy.asarray(arrays["queries_gauss"])
+        truth = np.argsort(np.asarray(
+            metrics_lib.euclidean_pdist(queries, corpus)), 1)[:, :BASELINE_NN]
+        key = jax.random.PRNGKey(BASELINE_KEY_SEED)
+        out: Dict[str, np.ndarray] = {}
+        for i, name in enumerate(("zen", "pca", "rp", "lmds")):
+            r = make_reducer(name, BASELINE_K).fit(
+                corpus, key=jax.random.fold_in(key, i))
+            Xr, Qr = r.transform(corpus), r.transform(queries)
+            if name != "zen":  # zen coords are covered by the serving cases
+                out[f"baseline_{name}_coords"] = np.asarray(Qr, np.float32)
+            pred = np.argsort(np.asarray(r.pdist(Qr, Xr)), 1)[:, :BASELINE_NN]
+            out[f"baseline_recall_{name}"] = np.asarray(
+                [len(set(truth[q]) & set(pred[q])) / BASELINE_NN
+                 for q in range(truth.shape[0])], np.float32)
+        if (out["baseline_recall_zen"].mean()
+                < out["baseline_recall_pca"].mean()):
+            raise AssertionError(
+                "baseline golden would pin zen below pca on the isotropic "
+                "corpus — the paper's low-k ordering claim is violated")
+        return out
 
 
 def _spaces() -> Dict[str, np.ndarray]:
@@ -131,6 +171,15 @@ def _spaces_x32() -> Dict[str, np.ndarray]:
         "queries_jsd": np.asarray(
             syn.probability_space(jax.random.fold_in(key, 3), Q, DIM,
                                   DIM // 4), np.float32),
+        # isotropic full-rank gaussians: the baseline-reducer golden's
+        # domain (zen's favourable regime — no low-rank structure for
+        # PCA to exploit)
+        "corpus_gauss": np.asarray(
+            syn.gaussian_space(jax.random.fold_in(key, 4), N, DIM),
+            np.float32),
+        "queries_gauss": np.asarray(
+            syn.gaussian_space(jax.random.fold_in(key, 5), Q, DIM),
+            np.float32),
     }
 
 
@@ -202,6 +251,7 @@ def build_golden() -> Dict[str, np.ndarray]:
         arrays[f"{name}_d"] = d
         arrays[f"{name}_ids"] = ids
     arrays.update(pivot_golden(arrays))
+    arrays.update(baseline_golden(arrays))
     return arrays
 
 
